@@ -1,0 +1,48 @@
+"""Benchmark utilities: timing, key generation, CSV emission.
+
+CPU-container caveat (recorded in EXPERIMENTS.md): wall-clock numbers here
+are XLA-CPU timings — they reproduce the paper's *relative* claims (orderings
+and scaling behaviour between filters/policies), while absolute TPU
+throughput is projected in the §Roofline analysis from the dry-run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import keys_from_numpy
+
+ROWS: List[str] = []
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def rand_keys(n: int, seed: int = 0, lo: int = 0, hi: int = 2**63):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(keys_from_numpy(
+        rng.integers(lo, hi, size=n, dtype=np.uint64)))
+
+
+def throughput_m_per_s(n: int, us: float) -> str:
+    return f"{n / us:.2f}M_elem_per_s"

@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json and emits, per (arch x shape x mesh):
+compute/memory/collective terms, the dominant bottleneck, MODEL_FLOPS ratio,
+and the projected roofline fraction (dominant-term bound vs compute bound).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run(fast: bool = False):
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        d = json.load(open(f))
+        name = os.path.basename(f)[:-5]
+        if d.get("status") != "ok":
+            emit(f"roofline_{name}", 0.0, f"ERROR={d.get('error', '?')[:60]}")
+            continue
+        r = d["roofline"]
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / step if step else 0.0
+        emit(f"roofline_{name}", step * 1e6,
+             f"dom={d['dominant'][:-2]}_comp={r['compute_s']:.2e}"
+             f"_mem={r['memory_s']:.2e}_coll={r['collective_s']:.2e}"
+             f"_roofline_frac={frac:.3f}"
+             f"_useful={d['useful_flop_ratio']:.2f}"
+             f"_fits16g={d['memory']['fits_16gb']}")

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bucket_policy,
+    eviction,
+    fpr,
+    kmer_case_study,
+    roofline,
+    sorted_insertion,
+    throughput,
+)
+from .common import ROWS
+
+SUITES = {
+    "fig3": lambda fast: (throughput.run(fast),
+                          throughput.run_cpu_reference(fast)),
+    "fig4": fpr.run,
+    "fig5_6": eviction.run,
+    "fig7": bucket_policy.run,
+    "fig8": kmer_case_study.run,
+    "s463": sorted_insertion.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name](args.fast)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name}_SUITE_ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            print(f"{name}_suite_error,0.0,{type(e).__name__}")
+        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

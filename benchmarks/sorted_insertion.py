@@ -1,0 +1,48 @@
+"""Paper §4.6.3 ablation: pre-sorting the batch by primary bucket index.
+
+On GPU the paper found radix-sorting the batch gives coalesced access but
+"fails to amortise" on HBM parts. On our TPU-functional substrate the
+conflict-resolution machinery *already* sorts by claim address every round
+(DESIGN.md §2 — the paper's rejected idea is our correctness backbone), so
+this ablation measures the residual locality effect of a bucket-ordered
+input batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CuckooConfig
+from repro.core import cuckoo_filter as CF
+from repro.core.cuckoo_filter import prepare_keys
+
+from .common import bench, emit, rand_keys, throughput_m_per_s
+
+SLOTS = 1 << 16
+LOAD = 0.9
+BATCH = 1 << 13
+
+
+def run(fast: bool = False):
+    cfg = CuckooConfig(num_buckets=SLOTS // 16, fp_bits=16, bucket_size=16,
+                       policy="xor", eviction="bfs", hash_kind="fmix32")
+    jins = jax.jit(functools.partial(CF.insert, cfg))
+    n = int(SLOTS * LOAD)
+    keys = rand_keys(n, seed=21)
+    state = cfg.init()
+    state = jax.block_until_ready(jins(state, keys[: n - BATCH])[0])
+    hot = keys[n - BATCH:]
+
+    us = bench(lambda s=state: jins(s, hot))
+    emit("s463_insert_unsorted", us, throughput_m_per_s(BATCH, us))
+
+    # pre-sort the hot batch by primary bucket (the paper's CUB radix sort)
+    _, i1, _ = prepare_keys(cfg, hot)
+    order = jnp.argsort(i1)
+    hot_sorted = hot[order]
+    us = bench(lambda s=state: jins(s, hot_sorted))
+    emit("s463_insert_presorted", us, throughput_m_per_s(BATCH, us))

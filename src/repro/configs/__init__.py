@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from .base import ARCHS, ModelConfig, all_configs, get_config, register  # noqa: F401

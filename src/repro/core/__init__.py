@@ -1,0 +1,23 @@
+"""Core library: the Cuckoo-GPU paper's contribution, adapted to TPU/JAX.
+
+Public surface:
+
+* :class:`CuckooConfig` / :class:`CuckooState` — static config + state pytree.
+* :func:`insert` / :func:`query` / :func:`delete` — batch functional ops.
+* :class:`CuckooFilter` — convenience OO wrapper.
+* ``sharded_filter`` — mesh-partitioned filter (PCF partitioning scheme).
+"""
+
+from .cuckoo_filter import (  # noqa: F401
+    CuckooConfig,
+    CuckooFilter,
+    CuckooState,
+    InsertStats,
+    delete,
+    insert,
+    prepare_keys,
+    query,
+)
+from .hashing import hash_key, keys_from_numpy  # noqa: F401
+from .layout import BucketLayout  # noqa: F401
+from .policies import OffsetPolicy, XorPolicy, make_policy  # noqa: F401

@@ -1,0 +1,121 @@
+"""64-bit unsigned integer arithmetic emulated on uint32 pairs.
+
+TPUs have no native 64-bit integer datapath: int64/uint64 are emulated by XLA
+and slow, and Pallas TPU kernels reject them outright. The Cuckoo-GPU paper
+hashes keys with xxHash64, so to stay bit-exact we implement the required u64
+operations (add, xor, shift, rotate, multiply) on ``(hi, lo)`` uint32 pairs.
+Multiplication uses 16-bit limbs so every partial product fits in a uint32
+lane — the natural formulation for the TPU VPU.
+
+A ``U64`` value is simply a tuple ``(hi, lo)`` of equal-shaped uint32 arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U64 = Tuple[jnp.ndarray, jnp.ndarray]  # (hi, lo), both uint32
+
+_U32 = np.uint32
+MASK16 = _U32(0xFFFF)
+
+
+def u64(hi, lo) -> U64:
+    """Build a U64 from hi/lo parts (cast to uint32)."""
+    return (jnp.asarray(hi, jnp.uint32), jnp.asarray(lo, jnp.uint32))
+
+
+def from_py(value: int, shape=()) -> U64:
+    """Broadcast a Python int constant to a U64 of the given shape."""
+    value &= (1 << 64) - 1
+    hi = jnp.full(shape, _U32((value >> 32) & 0xFFFFFFFF), jnp.uint32)
+    lo = jnp.full(shape, _U32(value & 0xFFFFFFFF), jnp.uint32)
+    return (hi, lo)
+
+
+def to_py(x: U64) -> int:
+    """Scalar U64 -> Python int (host only, for tests)."""
+    hi, lo = x
+    return (int(np.asarray(hi)) << 32) | int(np.asarray(lo))
+
+
+def xor(a: U64, b: U64) -> U64:
+    return (a[0] ^ b[0], a[1] ^ b[1])
+
+
+def add(a: U64, b: U64) -> U64:
+    lo = a[1] + b[1]
+    carry = (lo < a[1]).astype(jnp.uint32)
+    hi = a[0] + b[0] + carry
+    return (hi, lo)
+
+
+def mul32x32(a: jnp.ndarray, b: jnp.ndarray) -> U64:
+    """Full 64-bit product of two uint32 arrays via 16-bit limbs."""
+    a0 = a & MASK16
+    a1 = a >> 16
+    b0 = b & MASK16
+    b1 = b >> 16
+    p00 = a0 * b0            # <= (2^16-1)^2 < 2^32, exact in uint32
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = p01 + p10
+    mid_carry = (mid < p01).astype(jnp.uint32)   # overflow of the mid add
+    lo = p00 + (mid << 16)
+    lo_carry = (lo < p00).astype(jnp.uint32)
+    hi = p11 + (mid >> 16) + (mid_carry << 16) + lo_carry
+    return (hi, lo)
+
+
+def mul(a: U64, b: U64) -> U64:
+    """Low 64 bits of a 64x64 product."""
+    hi, lo = mul32x32(a[1], b[1])
+    hi = hi + a[0] * b[1] + a[1] * b[0]
+    return (hi, lo)
+
+
+def shl(a: U64, r: int) -> U64:
+    """Logical shift left by a static amount r in [0, 64)."""
+    assert 0 <= r < 64
+    hi, lo = a
+    if r == 0:
+        return a
+    if r == 32:
+        return (lo, jnp.zeros_like(lo))
+    if r > 32:
+        return (lo << (r - 32), jnp.zeros_like(lo))
+    return ((hi << r) | (lo >> (32 - r)), lo << r)
+
+
+def shr(a: U64, r: int) -> U64:
+    """Logical shift right by a static amount r in [0, 64)."""
+    assert 0 <= r < 64
+    hi, lo = a
+    if r == 0:
+        return a
+    if r == 32:
+        return (jnp.zeros_like(hi), hi)
+    if r > 32:
+        return (jnp.zeros_like(hi), hi >> (r - 32))
+    return (hi >> r, (lo >> r) | (hi << (32 - r)))
+
+
+def rotl(a: U64, r: int) -> U64:
+    """Rotate left by a static amount r in (0, 64)."""
+    r %= 64
+    if r == 0:
+        return a
+    left = shl(a, r)
+    right = shr(a, 64 - r)
+    return (left[0] | right[0], left[1] | right[1])
+
+
+def rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    r %= 32
+    if r == 0:
+        return x
+    return (x << r) | (x >> (32 - r))

@@ -1,0 +1,509 @@
+"""Batch-parallel Cuckoo filter — the paper's core contribution in JAX.
+
+Faithful mapping of Cuckoo-GPU's Algorithms 1–3 to the TPU execution model
+(see DESIGN.md §2 for the full adaptation table):
+
+* The GPU runs one CUDA thread per key and synchronises with word-granular
+  atomic CAS. Here one *batch* of keys advances in lock-step rounds inside a
+  ``lax.while_loop``; within a round every key proposes a write to a 32-bit
+  table word, and conflicts are resolved **per word** by a deterministic
+  priority rule (lowest batch index wins — the batch-synchronous analogue of
+  a CAS winner). Losers re-scan and retry next round, exactly like the
+  paper's reload-on-CAS-failure loops.
+* Eviction follows Alg. 1 phase 2: a stuck key picks a pseudo-random victim,
+  swaps in, and carries the displaced tag to that tag's alternate bucket.
+  With ``eviction="bfs"`` the §4.6.1 heuristic is used instead: inspect up to
+  b/2 victims, relocate one whose alternate bucket has a free slot (a
+  two-word transaction committed only if both word claims are won).
+* Queries are read-only gathers + SWAR-style matching, trivially parallel.
+
+Every operation is a pure function of ``(config, state, keys)`` and is
+jit-compatible with ``config`` static; state is a small pytree so filters can
+live inside larger jitted programs (data pipelines, serving engines) and be
+checkpointed like any other state.
+
+Progress guarantee: claims are resolved by (address, batch-index) priority,
+so the lowest-indexed pending key always wins every word it touches; each
+round therefore commits at least one action and the round loop terminates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layout as L
+from .hashing import fmix32, hash_key
+from .policies import make_policy
+
+_U32 = np.uint32
+_GOLDEN = _U32(0x9E3779B9)
+
+
+class CuckooState(NamedTuple):
+    """Filter state — a pytree of device arrays."""
+
+    table: jnp.ndarray   # uint32[num_words] packed fingerprints
+    count: jnp.ndarray   # int32[] stored-fingerprint count
+
+
+class InsertStats(NamedTuple):
+    """Per-key insertion statistics (feeds the Fig. 5/6 benchmarks)."""
+
+    evictions: jnp.ndarray  # int32[n] eviction-chain length per key
+    rounds: jnp.ndarray     # int32[]  rounds the batch loop ran
+
+
+@dataclasses.dataclass(frozen=True)
+class CuckooConfig:
+    """Static filter configuration (hashable; safe as a jit static arg).
+
+    Defaults follow the paper's GPU configuration: 16-bit fingerprints,
+    bucket size 16, XOR placement, xxHash64, BFS eviction.
+    """
+
+    num_buckets: int
+    fp_bits: int = 16
+    bucket_size: int = 16
+    policy: str = "xor"          # "xor" | "offset"   (§4.6.2)
+    hash_kind: str = "xxhash64"  # "xxhash64" | "fmix32"
+    eviction: str = "bfs"        # "bfs" | "dfs"      (§4.6.1)
+    max_evictions: int = 64
+    max_rounds: Optional[int] = None
+    seed: int = 0
+
+    @property
+    def layout(self) -> L.BucketLayout:
+        return L.BucketLayout(self.num_buckets, self.bucket_size, self.fp_bits)
+
+    @property
+    def placement(self):
+        return make_policy(self.policy, self.num_buckets, self.fp_bits)
+
+    @property
+    def num_slots(self) -> int:
+        return self.layout.num_slots
+
+    @property
+    def table_bytes(self) -> int:
+        return self.layout.table_bytes
+
+    @property
+    def effective_fp_bits(self) -> int:
+        return self.placement.effective_fp_bits
+
+    def expected_fpr(self, load_factor: float) -> float:
+        """Paper Eq. (4): eps ~= 1 - (1 - 2^-f)^(2 b alpha)."""
+        f = self.effective_fp_bits
+        return 1.0 - (1.0 - 2.0 ** -f) ** (2 * self.bucket_size * load_factor)
+
+    def init(self) -> CuckooState:
+        return CuckooState(self.layout.empty_table(), jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def for_capacity(
+        capacity: int,
+        load_factor: float = 0.95,
+        fp_bits: int = 16,
+        bucket_size: int = 16,
+        policy: str = "xor",
+        **kw,
+    ) -> "CuckooConfig":
+        """Size a filter for ``capacity`` items at a target load factor.
+
+        With the XOR policy the bucket count is rounded up to a power of two
+        (paper's over-provisioning problem); the OFFSET policy sizes exactly
+        (§4.6.2's motivation).
+        """
+        buckets = max(2, int(np.ceil(capacity / (load_factor * bucket_size))))
+        if policy == "xor":
+            buckets = 1 << int(np.ceil(np.log2(buckets)))
+        return CuckooConfig(
+            num_buckets=buckets, fp_bits=fp_bits, bucket_size=bucket_size,
+            policy=policy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Key preparation (Alg. 1 lines 2-5).
+# ---------------------------------------------------------------------------
+
+def prepare_keys(config: CuckooConfig, keys: jnp.ndarray):
+    """keys uint32[n, 2] -> (base_tag, i1, i2), all uint32[n]."""
+    hi, lo = hash_key(keys, config.hash_kind, config.seed)
+    pol = config.placement
+    tag = pol.make_tag(hi)           # fingerprint from the upper hash word
+    i1, i2 = pol.initial_buckets(lo, tag)  # bucket index from the lower word
+    return tag, i1, i2
+
+
+def _prng(x: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic per-key pseudo-randomness (fingerprint-derived, like the
+    paper's tag-based starts; salted by the round counter to break livelock)."""
+    return fmix32(x ^ (salt.astype(jnp.uint32) * _GOLDEN + _U32(1)))
+
+
+# ---------------------------------------------------------------------------
+# Word-claim resolution: the batch-synchronous CAS.
+# ---------------------------------------------------------------------------
+
+def _resolve_claims(addr1: jnp.ndarray, addr2: jnp.ndarray, invalid: int):
+    """Per-word winner election.
+
+    addr1/addr2: int32[n] flat word addresses (``invalid`` = no claim).
+    Returns (win1, win2): bool[n] — whether this key won each address.
+    Winner of an address = lowest (batch index, claim slot) touching it,
+    which guarantees the lowest pending key wins all of its claims.
+    """
+    n = addr1.shape[0]
+    flat = jnp.stack([addr1, addr2], axis=1).reshape(-1)        # interleaved
+    order = jnp.argsort(flat, stable=True)
+    sa = flat[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+    win_sorted = first & (sa != invalid)
+    win_flat = jnp.zeros((2 * n,), bool).at[order].set(win_sorted)
+    return win_flat[0::2], win_flat[1::2]
+
+
+def _masked_write(table, addr, desired, mask, invalid):
+    a = jnp.where(mask, addr, invalid)
+    return table.at[a].set(desired, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Insertion (Alg. 1 + §4.6.1 BFS).
+# ---------------------------------------------------------------------------
+
+# Action codes for a round.
+_DIRECT, _EVICT, _RELOC = 0, 1, 2
+
+
+def insert(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Insert a batch of keys. Returns (state', ok[n], stats).
+
+    ``ok[i]`` False means the table was too full for key i (paper Alg. 1
+    "Failure — caller will have to rebuild"). ``valid`` masks padding keys
+    (used by the sharded filter's fixed-capacity routing).
+    """
+    lay = config.layout
+    pol = config.placement
+    n = keys.shape[0]
+    invalid = lay.num_words  # out-of-range sentinel (dropped by scatter)
+    b = config.bucket_size
+    wpb = lay.words_per_bucket
+    n_cand = max(1, b // 2)  # BFS inspects up to half the bucket (§4.6.1)
+    use_bfs = config.eviction == "bfs"
+    max_rounds = config.max_rounds or (4 * config.max_evictions + 64)
+
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((n,), bool))   # stored form @ i1
+    tag2 = pol.place_tag(base_tag, jnp.ones((n,), bool))    # stored form @ i2
+
+    def gather_words(table, bucket):
+        return L.gather_bucket_words(table, bucket, lay)
+
+    def round_fn(carry):
+        (table, count, cur_tag, cur_bucket, evict_mode, pending, success,
+         n_evict, rnd) = carry
+
+        # --- expire keys whose eviction budget ran out (Alg. 1 line 24).
+        failed = pending & (n_evict >= config.max_evictions) & evict_mode
+        pending = pending & ~failed
+
+        # --- scan phase: fresh keys look at (i1, i2); evicting keys look at
+        #     their current bucket only (Alg. 1 line 22).
+        bucketA = jnp.where(evict_mode, cur_bucket, i1)
+        wordsA = gather_words(table, bucketA)                  # [n, wpb]
+        wordsB = gather_words(table, i2)                       # [n, wpb]
+        tagsA = L.unpack_words(wordsA, lay.fp_bits)            # [n, b]
+        tagsB = L.unpack_words(wordsB, lay.fp_bits)
+
+        scan_tag = jnp.where(evict_mode, cur_tag, base_tag)
+        start = L.scan_start(scan_tag, lay)
+        foundA, slotA = L.first_true_circular(tagsA == 0, start)
+        foundB, slotB = L.first_true_circular(tagsB == 0, start)
+        foundB = foundB & ~evict_mode
+
+        direct_found = foundA | foundB
+        d_bucket = jnp.where(foundA, bucketA, i2)
+        d_slot = jnp.where(foundA, slotA, slotB)
+        d_tag = jnp.where(
+            evict_mode, cur_tag, jnp.where(foundA, tag1, tag2))
+        d_widx, d_sw = L.slot_to_word(d_slot, lay)
+        d_words = jnp.where(foundA[:, None], wordsA, wordsB)
+        d_word = jnp.take_along_axis(d_words, d_widx[:, None], axis=1)[:, 0]
+        d_desired = L.replace_tag(d_word, d_sw, d_tag, lay.fp_bits)
+        d_addr = L.word_addr(d_bucket, d_widx, lay)
+
+        # --- eviction phase for keys whose candidate bucket(s) are full.
+        needs_evict = pending & ~direct_found
+        # Fresh keys choose a random bucket to evict from (Alg. 1 line 8).
+        coin = (_prng(base_tag, rnd) & _U32(1)).astype(bool)
+        e_bucket = jnp.where(evict_mode, cur_bucket,
+                             jnp.where(coin, i2, i1))
+        e_tag = jnp.where(evict_mode, cur_tag,
+                          jnp.where(coin, tag2, tag1))
+        e_words = jnp.where(
+            evict_mode[:, None] | ~coin[:, None], wordsA, wordsB)
+        e_tags = jnp.where(
+            evict_mode[:, None] | ~coin[:, None], tagsA, tagsB)
+
+        def eviction_actions(_):
+            # DFS victim (also the BFS fallback): pseudo-random occupied slot.
+            vic = (_prng(e_tag ^ e_bucket, rnd) % _U32(b)).astype(jnp.int32)
+
+            if use_bfs:
+                # §4.6.1: inspect n_cand candidates starting at a prng offset;
+                # relocate the first whose alternate bucket has a free slot.
+                cstart = (_prng(e_tag, rnd + 1) % _U32(b)).astype(jnp.int32)
+                cslots = (cstart[:, None]
+                          + jnp.arange(n_cand, dtype=jnp.int32)) % b  # [n,c]
+                ctags = jnp.take_along_axis(e_tags, cslots, axis=1)   # [n,c]
+                calt = pol.alt_bucket(e_bucket[:, None], ctags)       # [n,c]
+                cwords = gather_words(table, calt)                # [n,c,wpb]
+                cfree = L.unpack_words(cwords, lay.fp_bits) == 0  # [n,c,b]
+                reloc_tag = pol.on_relocate(ctags)
+                fstart = L.scan_start(reloc_tag, lay)
+                cfound, cslot_dst = L.first_true_circular(cfree, fstart)
+                has_viable = jnp.any(cfound, axis=1)
+                jstar = jnp.argmax(cfound, axis=1).astype(jnp.int32)
+
+                take = lambda a: jnp.take_along_axis(
+                    a, jstar[:, None], axis=1)[:, 0]
+                r_src_slot = take(cslots)
+                r_tag = take(ctags)
+                r_reloc = take(reloc_tag)
+                r_dst_bucket = take(calt)
+                r_dst_slot = take(cslot_dst)
+                r_dst_words = jnp.take_along_axis(
+                    cwords, jstar[:, None, None], axis=1)[:, 0]   # [n, wpb]
+
+                dst_widx, dst_sw = L.slot_to_word(r_dst_slot, lay)
+                dst_word = jnp.take_along_axis(
+                    r_dst_words, dst_widx[:, None], axis=1)[:, 0]
+                dst_desired = L.replace_tag(dst_word, dst_sw, r_reloc,
+                                            lay.fp_bits)
+                dst_addr = L.word_addr(r_dst_bucket, dst_widx, lay)
+
+                src_widx, src_sw = L.slot_to_word(r_src_slot, lay)
+                src_word = jnp.take_along_axis(
+                    e_words, src_widx[:, None], axis=1)[:, 0]
+                src_desired = L.replace_tag(src_word, src_sw, e_tag,
+                                            lay.fp_bits)
+                src_addr = L.word_addr(e_bucket, src_widx, lay)
+
+                # Same-word transaction: compose both lane updates into one
+                # write (the batch analogue of the paper's two-step relocation
+                # with CAS-failure compensation — impossible to half-apply).
+                same = src_addr == dst_addr
+                merged = L.replace_tag(
+                    L.replace_tag(src_word, dst_sw, r_reloc, lay.fp_bits),
+                    src_sw, e_tag, lay.fp_bits)
+                src_desired = jnp.where(same, merged, src_desired)
+                dst_addr = jnp.where(same, invalid, dst_addr)
+
+                # Fall back to DFS-evicting the last inspected candidate.
+                vic_bfs = (cstart + (n_cand - 1)) % b
+                vic = jnp.where(has_viable, vic, vic_bfs)
+            else:
+                has_viable = jnp.zeros((n,), bool)
+                src_addr = jnp.full((n,), invalid, jnp.int32)
+                src_desired = jnp.zeros((n,), jnp.uint32)
+                dst_addr = jnp.full((n,), invalid, jnp.int32)
+                dst_desired = jnp.zeros((n,), jnp.uint32)
+
+            # DFS eviction action (Alg. 1 lines 10-21).
+            v_widx, v_sw = L.slot_to_word(vic, lay)
+            v_word = jnp.take_along_axis(e_words, v_widx[:, None], axis=1)[:, 0]
+            v_desired = L.replace_tag(v_word, v_sw, e_tag, lay.fp_bits)
+            v_evicted = L.extract_tag(v_word, v_sw, lay.fp_bits)
+            v_addr = L.word_addr(e_bucket, v_widx, lay)
+
+            return (has_viable, src_addr, src_desired, dst_addr, dst_desired,
+                    v_addr, v_desired, v_evicted)
+
+        def no_eviction(_):
+            z32 = jnp.zeros((n,), jnp.uint32)
+            inv = jnp.full((n,), invalid, jnp.int32)
+            return (jnp.zeros((n,), bool), inv, z32, inv, z32, inv, z32, z32)
+
+        (has_viable, r_src_addr, r_src_desired, r_dst_addr, r_dst_desired,
+         v_addr, v_desired, v_evicted) = jax.lax.cond(
+            jnp.any(needs_evict), eviction_actions, no_eviction, None)
+
+        # --- assemble one action per pending key.
+        is_reloc = needs_evict & has_viable
+        is_evict = needs_evict & ~has_viable
+        is_direct = pending & direct_found
+
+        addr1 = jnp.where(is_direct, d_addr,
+                          jnp.where(is_reloc, r_src_addr,
+                                    jnp.where(is_evict, v_addr, invalid)))
+        desired1 = jnp.where(is_direct, d_desired,
+                             jnp.where(is_reloc, r_src_desired, v_desired))
+        addr2 = jnp.where(is_reloc, r_dst_addr, invalid)
+        addr1 = jnp.where(pending, addr1, invalid)
+        addr2 = jnp.where(pending, addr2, invalid)
+
+        win1, win2 = _resolve_claims(addr1, addr2, invalid)
+        has2 = addr2 != invalid
+        commit = pending & win1 & (win2 | ~has2) & (addr1 != invalid)
+
+        # --- apply winning writes.
+        table = _masked_write(table, addr1, desired1, commit, invalid)
+        table = _masked_write(table, addr2, r_dst_desired, commit & has2,
+                              invalid)
+
+        # --- state transitions.
+        done = commit & (is_direct | is_reloc)
+        success = success | done
+        count = count + jnp.sum(done, dtype=jnp.int32)
+        pending = pending & ~done
+
+        did_evict = commit & is_evict
+        new_cur_tag = pol.on_relocate(v_evicted)
+        new_cur_bucket = pol.alt_bucket(e_bucket, v_evicted)
+        cur_tag = jnp.where(did_evict, new_cur_tag, cur_tag)
+        cur_bucket = jnp.where(did_evict, new_cur_bucket, cur_bucket)
+        evict_mode = evict_mode | did_evict
+        n_evict = n_evict + did_evict.astype(jnp.int32)
+
+        return (table, count, cur_tag, cur_bucket, evict_mode, pending,
+                success, n_evict, rnd + 1)
+
+    def cond_fn(carry):
+        pending, rnd = carry[5], carry[8]
+        return jnp.any(pending) & (rnd < max_rounds)
+
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    carry0 = (
+        state.table, state.count,
+        base_tag.astype(jnp.uint32),              # cur_tag (evict mode)
+        i1.astype(jnp.uint32),                    # cur_bucket (evict mode)
+        jnp.zeros((n,), bool),                    # evict_mode
+        pending0,                                 # pending
+        jnp.zeros((n,), bool),                    # success
+        jnp.zeros((n,), jnp.int32),               # n_evict
+        jnp.zeros((), jnp.int32),                 # round
+    )
+    out = jax.lax.while_loop(cond_fn, round_fn, carry0)
+    (table, count, _, _, _, pending, success, n_evict, rnd) = out
+    # Keys still pending at max_rounds are reported as failures.
+    ok = success & ~pending
+    return CuckooState(table, count), ok, InsertStats(n_evict, rnd)
+
+
+# ---------------------------------------------------------------------------
+# Query (Alg. 2) — read-only, trivially parallel.
+# ---------------------------------------------------------------------------
+
+def query(config: CuckooConfig, state: CuckooState, keys: jnp.ndarray) -> jnp.ndarray:
+    """Membership test for a batch of keys -> bool[n]."""
+    lay = config.layout
+    pol = config.placement
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    t1, t2 = pol.query_match_tags(base_tag)
+    tags1 = L.bucket_tags(state.table, i1, lay)
+    tags2 = L.bucket_tags(state.table, i2, lay)
+    hit1 = jnp.any(tags1 == t1[:, None], axis=-1)
+    hit2 = jnp.any(tags2 == t2[:, None], axis=-1)
+    return hit1 | hit2
+
+
+# ---------------------------------------------------------------------------
+# Deletion (Alg. 3).
+# ---------------------------------------------------------------------------
+
+def delete(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+) -> Tuple[CuckooState, jnp.ndarray]:
+    """Delete one stored copy per key. Returns (state', ok[n])."""
+    lay = config.layout
+    pol = config.placement
+    n = keys.shape[0]
+    invalid = lay.num_words
+    max_rounds = 2 * config.bucket_size + 2  # duplicate deleters serialise
+
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    t1, t2 = pol.query_match_tags(base_tag)
+
+    def round_fn(carry):
+        table, count, pending, success, rnd = carry
+        words1 = L.gather_bucket_words(table, i1, lay)
+        words2 = L.gather_bucket_words(table, i2, lay)
+        tags1 = L.unpack_words(words1, lay.fp_bits)
+        tags2 = L.unpack_words(words2, lay.fp_bits)
+
+        start = L.scan_start(base_tag, lay)
+        f1, s1 = L.first_true_circular(tags1 == t1[:, None], start)
+        f2, s2 = L.first_true_circular(tags2 == t2[:, None], start)
+
+        found = f1 | f2
+        bucket = jnp.where(f1, i1, i2)
+        slot = jnp.where(f1, s1, s2)
+        words = jnp.where(f1[:, None], words1, words2)
+        widx, sw = L.slot_to_word(slot, lay)
+        word = jnp.take_along_axis(words, widx[:, None], axis=1)[:, 0]
+        desired = L.replace_tag(word, sw, jnp.zeros((n,), jnp.uint32),
+                                lay.fp_bits)
+        addr = L.word_addr(bucket, widx, lay)
+
+        # Keys with no remaining match fail out (Alg. 3 line 21).
+        pending = pending & found
+
+        addr = jnp.where(pending, addr, invalid)
+        win, _ = _resolve_claims(addr, jnp.full((n,), invalid, jnp.int32),
+                                 invalid)
+        commit = pending & win & (addr != invalid)
+        table = _masked_write(table, addr, desired, commit, invalid)
+        success = success | commit
+        pending = pending & ~commit
+        count = count - jnp.sum(commit, dtype=jnp.int32)
+        return table, count, pending, success, rnd + 1
+
+    def cond_fn(carry):
+        return jnp.any(carry[2]) & (carry[4] < max_rounds)
+
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    carry0 = (state.table, state.count, pending0,
+              jnp.zeros((n,), bool), jnp.zeros((), jnp.int32))
+    table, count, _, success, _ = jax.lax.while_loop(cond_fn, round_fn, carry0)
+    return CuckooState(table, count), success
+
+
+# ---------------------------------------------------------------------------
+# Convenience object API (functional; methods return new state).
+# ---------------------------------------------------------------------------
+
+class CuckooFilter:
+    """Thin OO wrapper with per-config jitted entry points."""
+
+    def __init__(self, config: CuckooConfig, state: Optional[CuckooState] = None):
+        self.config = config
+        self.state = config.init() if state is None else state
+        self._insert = jax.jit(functools.partial(insert, config))
+        self._query = jax.jit(functools.partial(query, config))
+        self._delete = jax.jit(functools.partial(delete, config))
+
+    def insert(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
+        self.state, ok, stats = self._insert(self.state, keys)
+        return ok, stats
+
+    def query(self, keys) -> jnp.ndarray:
+        return self._query(self.state, keys)
+
+    def delete(self, keys) -> jnp.ndarray:
+        self.state, ok = self._delete(self.state, keys)
+        return ok
+
+    @property
+    def load_factor(self) -> float:
+        return float(self.state.count) / self.config.num_slots

@@ -1,0 +1,200 @@
+"""Packed-fingerprint bucket layout + SWAR primitives (paper §4.2).
+
+The paper packs 8/16/32-bit fingerprints into 64-bit words. TPU VPU lanes are
+32 bits wide, so our machine word is ``uint32`` (hardware-adaptation note in
+DESIGN.md §2): a word holds 4×8-bit, 2×16-bit or 1×32-bit fingerprints. The
+SWAR zero/match-mask algebra is identical, just on 32-bit constants.
+
+The table is a flat ``uint32[num_buckets * words_per_bucket]`` array; a bucket
+is the contiguous word range ``[b * wpb, (b+1) * wpb)`` — bucket-major layout
+so one vector load covers a whole bucket (the TPU analogue of the paper's
+256-bit vectorized query loads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = np.uint32
+
+# SWAR constants per fingerprint width: (low-7(15,31)-bits pattern, high-bit pattern).
+_SWAR_LOW7 = {8: 0x7F7F7F7F, 16: 0x7FFF7FFF, 32: 0x7FFFFFFF}
+_SWAR_HIGH = {8: 0x80808080, 16: 0x80008000, 32: 0x80000000}
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static description of the packed bucket layout."""
+
+    num_buckets: int
+    bucket_size: int          # b: fingerprints per bucket
+    fp_bits: int              # f: bits per stored tag (incl. choice bit if any)
+
+    def __post_init__(self):
+        if self.fp_bits not in (8, 16, 32):
+            raise ValueError("fp_bits must be 8, 16 or 32 (hardware-friendly widths)")
+        if self.bucket_size % self.tags_per_word:
+            raise ValueError("bucket_size must be a multiple of tags_per_word")
+
+    @property
+    def tags_per_word(self) -> int:
+        return 32 // self.fp_bits
+
+    @property
+    def words_per_bucket(self) -> int:
+        return self.bucket_size // self.tags_per_word
+
+    @property
+    def num_words(self) -> int:
+        return self.num_buckets * self.words_per_bucket
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_buckets * self.bucket_size
+
+    @property
+    def fp_mask(self) -> int:
+        return (1 << self.fp_bits) - 1
+
+    @property
+    def table_bytes(self) -> int:
+        return self.num_words * 4
+
+    def empty_table(self) -> jnp.ndarray:
+        return jnp.zeros((self.num_words,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# SWAR primitives (paper §4.3 "bitwise SWAR algorithm", §4.4 HasZeroSegment).
+# ---------------------------------------------------------------------------
+
+def swar_zero_mask(word: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """High bit of each fp lane set iff that lane is zero — *exact* per lane.
+
+    The paper's classic haszero ``(v - 0x01..01) & ~v & 0x80..80`` is only
+    exact for the lowest flagged lane (borrows pollute higher lanes); since
+    our scans start at a fingerprint-derived circular offset we need the
+    carry-free exact variant:
+
+        y = (v & 0x7F..7F) + 0x7F..7F   # high bit <- OR of low bits
+        y |= v                           # high bit <- lane nonzero
+        mask = ~y & 0x80..80
+    """
+    low7 = _U32(_SWAR_LOW7[fp_bits])
+    high = _U32(_SWAR_HIGH[fp_bits])
+    y = ((word & low7) + low7) | word
+    return ~y & high
+
+
+def swar_match_mask(word: jnp.ndarray, tag: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """High bit of each fp lane set iff that lane equals ``tag``."""
+    return swar_zero_mask(word ^ broadcast_tag(tag, fp_bits), fp_bits)
+
+
+def broadcast_tag(tag: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """Replicate a tag into every lane of a 32-bit word (paper BroadcastTag)."""
+    tag = jnp.asarray(tag, jnp.uint32)
+    word = tag
+    if fp_bits <= 16:
+        word = word | (word << 16)
+    if fp_bits <= 8:
+        word = word | ((word & _U32(0x00FF00FF)) << 8)
+    return word
+
+
+def swar_mask_to_bools(mask: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """SWAR high-bit mask (uint32) -> bool[..., tags_per_word] per-lane flags."""
+    tpw = 32 // fp_bits
+    shifts = (jnp.arange(tpw, dtype=jnp.uint32) * _U32(fp_bits)) + _U32(fp_bits - 1)
+    return ((mask[..., None] >> shifts) & _U32(1)).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack and slot read-modify-write.
+# ---------------------------------------------------------------------------
+
+def unpack_words(words: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """uint32[..., W] packed words -> uint32[..., W * tpw] tag values."""
+    tpw = 32 // fp_bits
+    shifts = jnp.arange(tpw, dtype=jnp.uint32) * _U32(fp_bits)
+    tags = (words[..., None] >> shifts) & _U32((1 << fp_bits) - 1)
+    return tags.reshape(*words.shape[:-1], words.shape[-1] * tpw)
+
+
+def pack_tags(tags: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """Inverse of unpack_words."""
+    tpw = 32 // fp_bits
+    t = tags.reshape(*tags.shape[:-1], tags.shape[-1] // tpw, tpw)
+    shifts = jnp.arange(tpw, dtype=jnp.uint32) * _U32(fp_bits)
+    return jnp.sum(
+        (t & _U32((1 << fp_bits) - 1)).astype(jnp.uint32) << shifts, axis=-1,
+        dtype=jnp.uint32,
+    )
+
+
+def extract_tag(word: jnp.ndarray, slot_in_word: jnp.ndarray, fp_bits: int) -> jnp.ndarray:
+    """ExtractTag (paper Alg. 1 line 17)."""
+    shift = (slot_in_word.astype(jnp.uint32) * _U32(fp_bits))
+    return (word >> shift) & _U32((1 << fp_bits) - 1)
+
+
+def replace_tag(
+    word: jnp.ndarray, slot_in_word: jnp.ndarray, tag: jnp.ndarray, fp_bits: int
+) -> jnp.ndarray:
+    """ReplaceTag (paper Alg. 1 line 18) — returns the ``desired`` word."""
+    shift = slot_in_word.astype(jnp.uint32) * _U32(fp_bits)
+    lane_mask = _U32((1 << fp_bits) - 1) << shift
+    return (word & ~lane_mask) | ((tag.astype(jnp.uint32) << shift) & lane_mask)
+
+
+# ---------------------------------------------------------------------------
+# Bucket gather + circular first-empty / first-match scans (paper TryInsert /
+# Find start at a fingerprint-derived pseudo-random offset).
+# ---------------------------------------------------------------------------
+
+def gather_bucket_words(table: jnp.ndarray, bucket: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Gather the packed words of each bucket: -> uint32[..., words_per_bucket]."""
+    base = bucket.astype(jnp.uint32) * _U32(layout.words_per_bucket)
+    offs = jnp.arange(layout.words_per_bucket, dtype=jnp.uint32)
+    return table[(base[..., None] + offs).astype(jnp.int32)]
+
+
+def bucket_tags(table: jnp.ndarray, bucket: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Gather and unpack a bucket: -> uint32[..., bucket_size] tags."""
+    return unpack_words(gather_bucket_words(table, bucket, layout), layout.fp_bits)
+
+
+def scan_start(tag: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Pseudo-random slot scan start: ``tag mod bucketSize`` (paper Alg. 1 l.26)."""
+    return (tag.astype(jnp.uint32) % _U32(layout.bucket_size)).astype(jnp.int32)
+
+
+def first_true_circular(flags: jnp.ndarray, start: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """First True position scanning circularly from ``start``.
+
+    flags: bool[..., b]; start: int32[...] in [0, b).
+    Returns (found: bool[...], slot: int32[...] absolute index).
+    """
+    b = flags.shape[-1]
+    idx = (start[..., None] + jnp.arange(b, dtype=jnp.int32)) % b
+    rot = jnp.take_along_axis(flags, idx, axis=-1)
+    found = jnp.any(rot, axis=-1)
+    first_rel = jnp.argmax(rot, axis=-1).astype(jnp.int32)
+    slot = (start + first_rel) % b
+    return found, slot
+
+
+def slot_to_word(slot: jnp.ndarray, layout: BucketLayout) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Absolute slot index in bucket -> (word index in bucket, slot within word)."""
+    tpw = layout.tags_per_word
+    return slot // tpw, slot % tpw
+
+
+def word_addr(bucket: jnp.ndarray, word_in_bucket: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Flat word address of (bucket, word) — the claim/CAS granule."""
+    return (bucket.astype(jnp.int32) * layout.words_per_bucket
+            + word_in_bucket.astype(jnp.int32))

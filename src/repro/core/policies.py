@@ -1,0 +1,164 @@
+"""Bucket placement policies (paper §2.1 and §4.6.2).
+
+* ``XorPolicy``    — standard partial-key cuckoo hashing. Requires num_buckets
+  to be a power of two; ``i2 = i1 ^ H(fp)`` is an involution, so an entry's
+  alternate bucket is computable from (current bucket, stored tag) alone.
+
+* ``OffsetPolicy`` — the flexible placement of §4.6.2 (after Schmitz et al.):
+  any bucket count m; a *choice bit* stored in the tag's top bit records
+  whether the entry sits in its primary (0) or alternate (1) bucket:
+
+      choice 0:  i2 = (i1 + offset(fp)) mod m
+      choice 1:  i1 = (i2 - offset(fp)) mod m
+
+  Costs one fingerprint bit (higher FPR, Eq. 4 with f-1) and a bit-flip per
+  relocation — evaluated in benchmarks/bucket_policy.py (paper Fig. 7).
+
+Both policies expose the same interface over *stored tags* (fingerprint plus
+any metadata bits), so the filter core is policy-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import fmix32
+from .layout import BucketLayout
+
+_U32 = np.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class XorPolicy:
+    """i2 = i1 XOR H(fp); power-of-two bucket counts only."""
+
+    num_buckets: int
+    fp_bits: int
+
+    kind: str = dataclasses.field(default="xor", init=False)
+
+    def __post_init__(self):
+        if self.num_buckets & (self.num_buckets - 1):
+            raise ValueError(
+                "XorPolicy requires a power-of-two number of buckets "
+                "(use OffsetPolicy for arbitrary sizes — paper §4.6.2)")
+
+    @property
+    def mask(self) -> int:
+        return self.num_buckets - 1
+
+    @property
+    def effective_fp_bits(self) -> int:
+        return self.fp_bits
+
+    def make_tag(self, fp_hash: jnp.ndarray) -> jnp.ndarray:
+        """Derive the stored tag from the fingerprint hash word (never 0)."""
+        fp = fp_hash & _U32((1 << self.fp_bits) - 1)
+        return jnp.where(fp == 0, _U32(1), fp)
+
+    def primary_bucket(self, index_hash: jnp.ndarray) -> jnp.ndarray:
+        return index_hash & _U32(self.mask)
+
+    def initial_buckets(self, index_hash, tag):
+        i1 = self.primary_bucket(index_hash)
+        return i1, self.alt_bucket(i1, tag)
+
+    def alt_bucket(self, bucket: jnp.ndarray, tag: jnp.ndarray) -> jnp.ndarray:
+        """Involution: alt(alt(i, t), t) == i."""
+        return bucket ^ (fmix32(tag) & _U32(self.mask))
+
+    def place_tag(self, tag: jnp.ndarray, in_alternate: jnp.ndarray) -> jnp.ndarray:
+        """Tag as stored when placed in primary/alternate bucket (no-op here)."""
+        del in_alternate
+        return tag
+
+    def on_relocate(self, stored_tag: jnp.ndarray) -> jnp.ndarray:
+        """Stored tag after moving to its other bucket (no-op for XOR)."""
+        return stored_tag
+
+    def match_tag(self, stored: jnp.ndarray, query_tag: jnp.ndarray) -> jnp.ndarray:
+        return stored == query_tag
+
+    def query_match_tags(self, query_tag: jnp.ndarray):
+        """Tags to match in (primary, alternate) buckets for a query."""
+        return query_tag, query_tag
+
+
+@dataclasses.dataclass(frozen=True)
+class OffsetPolicy:
+    """Asymmetric offset + choice bit; arbitrary bucket counts (§4.6.2)."""
+
+    num_buckets: int
+    fp_bits: int
+
+    kind: str = dataclasses.field(default="offset", init=False)
+
+    @property
+    def choice_bit(self) -> int:
+        return 1 << (self.fp_bits - 1)
+
+    @property
+    def effective_fp_bits(self) -> int:
+        return self.fp_bits - 1  # one bit of entropy spent on the choice bit
+
+    @property
+    def fp_value_mask(self) -> int:
+        return (1 << (self.fp_bits - 1)) - 1
+
+    def make_tag(self, fp_hash: jnp.ndarray) -> jnp.ndarray:
+        fp = fp_hash & _U32(self.fp_value_mask)
+        return jnp.where(fp == 0, _U32(1), fp)
+
+    def _offset(self, tag: jnp.ndarray) -> jnp.ndarray:
+        """Fingerprint-derived offset in [1, m) (0 would alias the buckets)."""
+        fp = tag & _U32(self.fp_value_mask)
+        return (fmix32(fp ^ _U32(0x27D4EB2F)) % _U32(self.num_buckets - 1)) + _U32(1)
+
+    def primary_bucket(self, index_hash: jnp.ndarray) -> jnp.ndarray:
+        return index_hash % _U32(self.num_buckets)
+
+    def initial_buckets(self, index_hash, tag):
+        i1 = self.primary_bucket(index_hash)
+        m = _U32(self.num_buckets)
+        i2 = (i1 + self._offset(tag)) % m
+        return i1, i2
+
+    def alt_bucket(self, bucket: jnp.ndarray, stored_tag: jnp.ndarray) -> jnp.ndarray:
+        """Other bucket of a *stored* entry, using its choice bit."""
+        m = _U32(self.num_buckets)
+        off = self._offset(stored_tag)
+        in_alt = (stored_tag & _U32(self.choice_bit)) != 0
+        fwd = (bucket + off) % m          # choice 0: currently primary -> alt
+        back = (bucket + m - off) % m     # choice 1: currently alt -> primary
+        return jnp.where(in_alt, back, fwd)
+
+    def place_tag(self, tag: jnp.ndarray, in_alternate: jnp.ndarray) -> jnp.ndarray:
+        base = tag & _U32(self.fp_value_mask)
+        return jnp.where(in_alternate, base | _U32(self.choice_bit), base)
+
+    def on_relocate(self, stored_tag: jnp.ndarray) -> jnp.ndarray:
+        """Moving between buckets flips the choice bit (paper §4.6.2)."""
+        return stored_tag ^ _U32(self.choice_bit)
+
+    def match_tag(self, stored: jnp.ndarray, query_tag: jnp.ndarray) -> jnp.ndarray:
+        """Match ignores the choice bit — but a query knows which bucket it is
+        scanning, so the caller matches against the properly-placed tag."""
+        return (stored & _U32(self.fp_value_mask)) == (query_tag & _U32(self.fp_value_mask))
+
+    def query_match_tags(self, query_tag: jnp.ndarray):
+        """In the primary bucket an entry must carry choice=0; in the
+        alternate, choice=1. Matching the full tag (incl. choice bit) keeps the
+        effective fingerprint at f-1 bits without extra masking."""
+        base = query_tag & _U32(self.fp_value_mask)
+        return base, base | _U32(self.choice_bit)
+
+
+def make_policy(kind: str, num_buckets: int, fp_bits: int):
+    if kind == "xor":
+        return XorPolicy(num_buckets, fp_bits)
+    if kind == "offset":
+        return OffsetPolicy(num_buckets, fp_bits)
+    raise ValueError(f"unknown placement policy {kind!r}")

@@ -1,0 +1,210 @@
+"""Mesh-sharded Cuckoo filter — the distributed scale-out layer.
+
+Partitioning scheme (DESIGN.md §5): one *independent* sub-filter per device
+along a mesh axis, shard chosen by a dedicated hash of the key. Both cuckoo
+candidate buckets of a key live in the same shard, so eviction chains never
+cross devices — the PCF partitioning of Schmidt et al. promoted to the
+accelerator mesh. Aggregate filter bandwidth scales linearly with devices
+(the TPU analogue of the paper's "saturate global memory bandwidth": here we
+saturate *n_devices x* HBM bandwidth).
+
+Routing is a fixed-capacity all-to-all (no data-dependent shapes — a
+straggler-mitigation requirement at scale, DESIGN.md §5): each device sorts
+its local keys by destination shard into ``[num_shards, capacity]`` bins,
+exchanges bins with one ``lax.all_to_all``, applies the local filter op with
+a validity mask, and routes results back with the inverse exchange. Keys
+beyond a bin's capacity are reported in the ``routed`` mask so callers can
+retry them next step (they are never silently dropped).
+
+All ops run inside ``shard_map`` over the chosen axis and are jit-compatible;
+the sharded state is an ordinary pytree (stacked per-shard tables), so it
+checkpoints/restores like model state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .cuckoo_filter import CuckooConfig, CuckooState
+from .cuckoo_filter import delete as _delete
+from .cuckoo_filter import insert as _insert
+from .cuckoo_filter import query as _query
+from .hashing import fmix32
+
+_U32 = np.uint32
+_SHARD_SALT = _U32(0x51ED270C)
+
+
+class ShardedCuckooState(NamedTuple):
+    table: jnp.ndarray  # uint32[num_shards, num_words]  (sharded over axis)
+    count: jnp.ndarray  # int32[num_shards]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCuckooConfig:
+    shard: CuckooConfig          # per-shard filter config
+    num_shards: int
+    axis_name: str = "data"
+    capacity_factor: float = 2.0  # bin capacity overprovision vs n/num_shards
+
+    def bin_capacity(self, local_batch: int) -> int:
+        cap = int(np.ceil(local_batch / self.num_shards * self.capacity_factor))
+        return max(8, cap)
+
+    def init(self) -> ShardedCuckooState:
+        lay = self.shard.layout
+        return ShardedCuckooState(
+            jnp.zeros((self.num_shards, lay.num_words), jnp.uint32),
+            jnp.zeros((self.num_shards,), jnp.int32))
+
+    @property
+    def total_slots(self) -> int:
+        return self.num_shards * self.shard.num_slots
+
+    @staticmethod
+    def for_capacity(capacity: int, num_shards: int, load_factor: float = 0.95,
+                     axis_name: str = "data", **kw) -> "ShardedCuckooConfig":
+        per_shard = int(np.ceil(capacity / num_shards))
+        cf = kw.pop("capacity_factor", 2.0)
+        return ShardedCuckooConfig(
+            CuckooConfig.for_capacity(per_shard, load_factor, **kw),
+            num_shards, axis_name, cf)
+
+
+def shard_of(config: ShardedCuckooConfig, keys: jnp.ndarray) -> jnp.ndarray:
+    """Owner shard per key — a hash independent of the in-shard hashes."""
+    mix = fmix32(keys[..., 0] ^ fmix32(keys[..., 1] ^ _SHARD_SALT))
+    return (mix % _U32(config.num_shards)).astype(jnp.int32)
+
+
+def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int):
+    """Local routing: sort keys into [num_shards, cap] bins.
+
+    Returns (bins uint32[S, cap, 2], bin_valid bool[S, cap],
+             order, dest_sorted, idx_in_group, routed_sorted).
+    """
+    S = config.num_shards
+    n = keys.shape[0]
+    dest = shard_of(config, keys)
+    order = jnp.argsort(dest, stable=True)
+    dest_s = dest[order]
+    keys_s = keys[order]
+    first_of_group = jnp.searchsorted(dest_s, dest_s, side="left")
+    idx_in_group = jnp.arange(n, dtype=jnp.int32) - first_of_group
+    routed = idx_in_group < cap
+    slot = jnp.where(routed, dest_s * cap + idx_in_group, S * cap)
+    bins = jnp.zeros((S * cap, 2), jnp.uint32).at[slot].set(keys_s, mode="drop")
+    bin_valid = jnp.zeros((S * cap,), bool).at[slot].set(routed, mode="drop")
+    return (bins.reshape(S, cap, 2), bin_valid.reshape(S, cap),
+            order, dest_s, idx_in_group, routed)
+
+
+def _unroute(order, dest_s, idx_in_group, routed, back, fill=False):
+    """Inverse of _route for a per-key result channel ``back[S, cap]``."""
+    n = order.shape[0]
+    got = back[dest_s, jnp.minimum(idx_in_group, back.shape[1] - 1)]
+    got = jnp.where(routed, got, fill)
+    return jnp.zeros((n,), back.dtype).at[order].set(got)
+
+
+def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int):
+    """Build the per-device function for one op (runs under shard_map)."""
+    cap = config.bin_capacity(local_batch)
+    ax = config.axis_name
+
+    def fn(table, count, keys):
+        # table: [1, num_words] local shard; keys: [local_batch, 2]
+        state = CuckooState(table[0], count[0])
+        bins, bin_valid, order, dest_s, idxg, routed = _route(
+            config, keys, cap)
+        recv = jax.lax.all_to_all(bins, ax, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        recv_valid = jax.lax.all_to_all(bin_valid, ax, split_axis=0,
+                                        concat_axis=0, tiled=False)
+        flat_keys = recv.reshape(-1, 2)
+        flat_valid = recv_valid.reshape(-1)
+
+        if op == "insert":
+            state, ok, _ = _insert(config.shard, state, flat_keys,
+                                   valid=flat_valid)
+        elif op == "delete":
+            state, ok = _delete(config.shard, state, flat_keys,
+                                valid=flat_valid)
+        elif op == "query":
+            ok = _query(config.shard, state, flat_keys) & flat_valid
+        else:  # pragma: no cover
+            raise ValueError(op)
+
+        back = jax.lax.all_to_all(
+            ok.reshape(config.num_shards, cap), ax,
+            split_axis=0, concat_axis=0, tiled=False)
+        result = _unroute(order, dest_s, idxg, routed, back)
+        routed_out = jnp.zeros((keys.shape[0],), bool).at[order].set(routed)
+        return state.table[None], state.count[None], result, routed_out
+
+    return fn
+
+
+class ShardedCuckooFilter:
+    """Driver: owns the mesh-placed state and jitted sharded ops.
+
+    ``mesh`` must contain ``config.axis_name`` with size ``num_shards``.
+    Keys arrive sharded along the same axis (global batch split across
+    devices); results come back in the same layout.
+    """
+
+    def __init__(self, config: ShardedCuckooConfig, mesh: Mesh,
+                 local_batch: int):
+        if mesh.shape[config.axis_name] != config.num_shards:
+            raise ValueError(
+                f"mesh axis {config.axis_name} has size "
+                f"{mesh.shape[config.axis_name]}, want {config.num_shards}")
+        self.config = config
+        self.mesh = mesh
+        self.local_batch = local_batch
+        ax = config.axis_name
+        others = [a for a in mesh.axis_names if a != ax]
+
+        def build(op):
+            fn = _make_sharded_op(config, op, local_batch)
+            mapped = jax.shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(ax), P(ax), P(ax)),
+                out_specs=(P(ax), P(ax), P(ax), P(ax)),
+                check_vma=False,
+            )
+            return jax.jit(mapped)
+
+        self._ops = {op: build(op) for op in ("insert", "query", "delete")}
+        del others
+        self.state = jax.device_put(
+            config.init(),
+            NamedSharding(mesh, P(ax)))
+
+    def _run(self, op, keys):
+        table, count, result, routed = self._ops[op](
+            self.state.table, self.state.count, keys)
+        if op != "query":
+            self.state = ShardedCuckooState(table, count)
+        return result, routed
+
+    def insert(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (ok, routed): ok[i] requires routed[i]; retry ~routed keys."""
+        return self._run("insert", keys)
+
+    def query(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._run("query", keys)
+
+    def delete(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._run("delete", keys)
+
+    @property
+    def total_count(self) -> int:
+        return int(jnp.sum(self.state.count))

@@ -1,0 +1,76 @@
+"""Genomic k-mer tooling (paper §5.5 case study).
+
+Pipeline: FASTA-like base string -> 2-bit codes -> rolling 31-mers (Pallas
+kernel) -> optional canonicalization (min of k-mer and reverse complement,
+the KMC3 convention) -> filter keys.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bits64 as b64
+from ..kernels.ops import kmer_pack
+
+_CODE = np.full(256, 255, np.uint8)
+for i, c in enumerate("ACGT"):
+    _CODE[ord(c)] = i
+    _CODE[ord(c.lower())] = i
+
+
+def synthetic_genome(n_bases: int, seed: int = 0) -> np.ndarray:
+    """Random ACGT codes with mild repeat structure (uint8[n])."""
+    rng = np.random.default_rng(seed)
+    bases = rng.integers(0, 4, size=n_bases).astype(np.uint8)
+    # paste in repeated segments so the k-mer multiset is realistically skewed
+    seg = rng.integers(0, 4, size=512).astype(np.uint8)
+    for _ in range(max(1, n_bases // 8192)):
+        at = int(rng.integers(0, max(1, n_bases - 512)))
+        bases[at:at + 512] = seg[: max(0, min(512, n_bases - at))]
+    return bases
+
+
+def encode_bases(seq: str) -> np.ndarray:
+    """ACGT string -> 2-bit codes; raises on non-ACGT (caller splits on N)."""
+    codes = _CODE[np.frombuffer(seq.encode(), np.uint8)]
+    if (codes == 255).any():
+        raise ValueError("non-ACGT base; split reads on N first")
+    return codes
+
+
+def kmer_keys(bases: np.ndarray, k: int = 31, canonical: bool = True
+              ) -> jnp.ndarray:
+    """uint8/uint32 base codes -> uint32[n-k+1, 2] filter keys."""
+    keys = kmer_pack(jnp.asarray(bases, jnp.uint32), k=k)
+    if canonical:
+        keys = canonicalize(keys, k)
+    return keys
+
+
+def canonicalize(keys: jnp.ndarray, k: int) -> jnp.ndarray:
+    """min(kmer, revcomp(kmer)) per key — strand-independent identity."""
+    hi, lo = keys[:, 1], keys[:, 0]
+    rh, rl = _revcomp((hi, lo), k)
+    less = (rh < hi) | ((rh == hi) & (rl < lo))
+    return jnp.stack([jnp.where(less, rl, lo), jnp.where(less, rh, hi)],
+                     axis=-1)
+
+
+def _revcomp(x: b64.U64, k: int) -> b64.U64:
+    """Reverse complement of a 2-bit-packed k-mer in a u64 pair."""
+    hi, lo = x
+    # complement: A<->T (00<->11), C<->G (01<->10) == bitwise NOT per 2 bits
+    hi, lo = ~hi, ~lo
+    # reverse 2-bit groups within each word, then swap/realign words
+    def rev2(v):
+        v = ((v & jnp.uint32(0x33333333)) << 2) | ((v >> 2) & jnp.uint32(0x33333333))
+        v = ((v & jnp.uint32(0x0F0F0F0F)) << 4) | ((v >> 4) & jnp.uint32(0x0F0F0F0F))
+        v = ((v & jnp.uint32(0x00FF00FF)) << 8) | ((v >> 8) & jnp.uint32(0x00FF00FF))
+        return (v << 16) | (v >> 16)
+
+    rhi, rlo = rev2(lo), rev2(hi)   # word swap completes the 64-bit reverse
+    # the k-mer occupies the low 2k bits; shift the reversed value down
+    return b64.shr((rhi, rlo), 64 - 2 * k)

@@ -1,0 +1,12 @@
+"""Baseline AMQ structures evaluated by the paper (§5.1).
+
+Each module provides ``*Config`` (static, hashable), a state NamedTuple,
+functional ``insert/query[/delete]`` and an OO wrapper. The registry maps the
+benchmark names used in benchmarks/throughput.py to constructors.
+"""
+
+from .bcht import BCHTConfig, BucketedCuckooHashTable  # noqa: F401
+from .blocked_bloom import BlockedBloomFilter, BloomConfig  # noqa: F401
+from .cpu_reference import PyCuckooFilter  # noqa: F401
+from .quotient import GQFConfig, QuotientFilter  # noqa: F401
+from .two_choice import TCFConfig, TwoChoiceFilter  # noqa: F401

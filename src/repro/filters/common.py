@@ -1,0 +1,58 @@
+"""Shared machinery for the baseline filters.
+
+``scatter_or`` is the workhorse: a deterministic batched bitwise-OR scatter
+(duplicate addresses merged with a segmented scan), the TPU-functional
+equivalent of the GPU baselines' ``atomicOr``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = np.uint32
+
+
+def scatter_or(table: jnp.ndarray, addr: jnp.ndarray, val: jnp.ndarray,
+               valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """table[addr] |= val with duplicate-address merging.
+
+    addr: int32[k] flat indices (may repeat); val: uint32[k];
+    valid: optional bool[k] mask.
+    """
+    invalid = table.shape[0]
+    if valid is not None:
+        addr = jnp.where(valid, addr, invalid)
+    order = jnp.argsort(addr, stable=True)
+    sa = addr[order]
+    sv = val[order]
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+
+    def combine(a, b):
+        # Segmented inclusive OR-scan over (segment-start flag, value).
+        flag_a, val_a = a
+        flag_b, val_b = b
+        return flag_a | flag_b, jnp.where(flag_b, val_b, val_a | val_b)
+
+    _, acc = jax.lax.associative_scan(combine, (seg_start, sv))
+    is_last = jnp.concatenate([seg_start[1:], jnp.ones((1,), bool)])
+    # Merge with the existing table contents; each surviving addr is unique.
+    safe = jnp.minimum(sa, invalid - 1)
+    merged = table[safe] | acc
+    waddr = jnp.where(is_last & (sa != invalid), sa, invalid)
+    return table.at[waddr].set(merged, mode="drop")
+
+
+def resolve_claims_single(addr: jnp.ndarray, invalid: int) -> jnp.ndarray:
+    """Single-address claim election: True where this entry owns ``addr``.
+
+    Lowest batch index wins (same rule as the core filter; see
+    core.cuckoo_filter._resolve_claims).
+    """
+    n = addr.shape[0]
+    order = jnp.argsort(addr, stable=True)
+    sa = addr[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+    win_sorted = first & (sa != invalid)
+    return jnp.zeros((n,), bool).at[order].set(win_sorted)

@@ -1,0 +1,247 @@
+"""Two-Choice Filter (TCF) — dynamic GPU baseline (McCoy et al., PPoPP'23).
+
+Power-of-two-choices: each key has two candidate blocks; it is inserted into
+the *emptier* one. No eviction chains — if both blocks are full the key
+overflows into a small stash. Deletion removes a matching tag from either
+block or the stash.
+
+The GPU TCF leans on cooperative groups to sort blocks in shared memory; our
+batch version keeps the data-structure semantics (two choices + stash) and
+resolves intra-batch races with the same word-claim election as the core
+filter. Its FPR is worse than the cuckoo filter's at equal space because load
+balancing needs larger blocks (paper Fig. 4 discussion).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import layout as L
+from ..core.hashing import fmix32, hash_key
+from .common import resolve_claims_single
+
+_U32 = np.uint32
+
+
+class TCFState(NamedTuple):
+    table: jnp.ndarray   # uint32[num_blocks * words_per_block] packed tags
+    stash: jnp.ndarray   # uint32[stash_size] packed (block << fp_bits | tag)
+    count: jnp.ndarray   # int32[]
+
+
+@dataclasses.dataclass(frozen=True)
+class TCFConfig:
+    num_blocks: int
+    fp_bits: int = 16
+    block_size: int = 32          # tags per block (TCF favours large blocks)
+    stash_size: int = 128
+    hash_kind: str = "fmix32"
+    seed: int = 0
+    max_rounds: int = 16
+
+    @property
+    def layout(self) -> L.BucketLayout:
+        return L.BucketLayout(self.num_blocks, self.block_size, self.fp_bits)
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_blocks * self.block_size
+
+    @property
+    def table_bytes(self) -> int:
+        return self.layout.table_bytes + self.stash_size * 4
+
+    def init(self) -> TCFState:
+        return TCFState(self.layout.empty_table(),
+                        jnp.zeros((self.stash_size,), jnp.uint32),
+                        jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def for_capacity(capacity: int, load_factor: float = 0.95,
+                     fp_bits: int = 16, block_size: int = 32, **kw) -> "TCFConfig":
+        blocks = max(2, int(np.ceil(capacity / (load_factor * block_size))))
+        return TCFConfig(num_blocks=blocks, fp_bits=fp_bits,
+                         block_size=block_size, **kw)
+
+
+def _prepare(config: TCFConfig, keys: jnp.ndarray):
+    hi, lo = hash_key(keys, config.hash_kind, config.seed)
+    fp = hi & _U32((1 << config.fp_bits) - 1)
+    tag = jnp.where(fp == 0, _U32(1), fp)
+    b1 = lo % _U32(config.num_blocks)
+    b2 = fmix32(lo ^ _U32(0xB5297A4D)) % _U32(config.num_blocks)
+    return tag, b1, b2
+
+
+def _stash_entry(config: TCFConfig, block: jnp.ndarray, tag: jnp.ndarray):
+    return ((block.astype(jnp.uint32) << _U32(config.fp_bits))
+            | tag.astype(jnp.uint32)) | _U32(1 << 31)  # bit31 = occupied
+
+
+def insert(config: TCFConfig, state: TCFState, keys: jnp.ndarray
+           ) -> Tuple[TCFState, jnp.ndarray]:
+    lay = config.layout
+    n = keys.shape[0]
+    invalid = lay.num_words + config.stash_size
+    tag, b1, b2 = _prepare(config, keys)
+
+    def round_fn(carry):
+        table, stash, count, pending, success, rnd = carry
+        tags1 = L.bucket_tags(table, b1, lay)
+        tags2 = L.bucket_tags(table, b2, lay)
+        n_free1 = jnp.sum(tags1 == 0, axis=-1)
+        n_free2 = jnp.sum(tags2 == 0, axis=-1)
+        # Power of two choices: pick the emptier block.
+        pick2 = n_free2 > n_free1
+        blk = jnp.where(pick2, b2, b1)
+        tags = jnp.where(pick2[:, None], tags2, tags1)
+        has_room = (jnp.maximum(n_free1, n_free2) > 0)
+
+        start = L.scan_start(tag, lay)
+        found, slot = L.first_true_circular(tags == 0, start)
+        widx, sw = L.slot_to_word(slot, lay)
+        words = L.gather_bucket_words(table, blk, lay)
+        word = jnp.take_along_axis(words, widx[:, None], axis=1)[:, 0]
+        desired = L.replace_tag(word, sw, tag, lay.fp_bits)
+        addr = L.word_addr(blk, widx, lay)
+
+        # Both blocks full -> claim a stash slot instead.
+        stash_free = stash == 0
+        sstart = (fmix32(tag + rnd.astype(jnp.uint32))
+                  % _U32(config.stash_size)).astype(jnp.int32)
+        sfound, sslot = L.first_true_circular(
+            jnp.broadcast_to(stash_free, (n, config.stash_size)), sstart)
+        use_stash = pending & ~has_room & sfound
+        use_table = pending & has_room & found
+
+        claim = jnp.where(use_table, addr,
+                          jnp.where(use_stash, lay.num_words + sslot, invalid))
+        win = resolve_claims_single(claim, invalid)
+        commit_t = use_table & win
+        commit_s = use_stash & win
+
+        table = table.at[jnp.where(commit_t, addr, lay.num_words)].set(
+            desired, mode="drop")
+        sval = _stash_entry(config, blk, tag)
+        stash = stash.at[jnp.where(commit_s, sslot, config.stash_size)].set(
+            sval, mode="drop")
+
+        done = commit_t | commit_s
+        # Keys with no room anywhere (stash full) fail out.
+        dead = pending & ~has_room & ~sfound
+        pending = pending & ~done & ~dead
+        success = success | done
+        count = count + jnp.sum(done, dtype=jnp.int32)
+        return table, stash, count, pending, success, rnd + 1
+
+    def cond_fn(carry):
+        return jnp.any(carry[3]) & (carry[5] < config.max_rounds)
+
+    carry0 = (state.table, state.stash, state.count, jnp.ones((n,), bool),
+              jnp.zeros((n,), bool), jnp.zeros((), jnp.int32))
+    table, stash, count, pending, success, _ = jax.lax.while_loop(
+        cond_fn, round_fn, carry0)
+    return TCFState(table, stash, count), success & ~pending
+
+
+def query(config: TCFConfig, state: TCFState, keys: jnp.ndarray) -> jnp.ndarray:
+    lay = config.layout
+    tag, b1, b2 = _prepare(config, keys)
+    hit1 = jnp.any(L.bucket_tags(state.table, b1, lay) == tag[:, None], axis=-1)
+    hit2 = jnp.any(L.bucket_tags(state.table, b2, lay) == tag[:, None], axis=-1)
+    # Stash: compare against both candidate blocks' entries.
+    e1 = _stash_entry(config, b1, tag)
+    e2 = _stash_entry(config, b2, tag)
+    hs = jnp.any((state.stash[None, :] == e1[:, None])
+                 | (state.stash[None, :] == e2[:, None]), axis=-1)
+    return hit1 | hit2 | hs
+
+
+def delete(config: TCFConfig, state: TCFState, keys: jnp.ndarray
+           ) -> Tuple[TCFState, jnp.ndarray]:
+    lay = config.layout
+    n = keys.shape[0]
+    invalid = lay.num_words + config.stash_size
+    tag, b1, b2 = _prepare(config, keys)
+    max_rounds = 2 * config.block_size + 2
+
+    def round_fn(carry):
+        table, stash, count, pending, success, rnd = carry
+        words1 = L.gather_bucket_words(table, b1, lay)
+        words2 = L.gather_bucket_words(table, b2, lay)
+        tags1 = L.unpack_words(words1, lay.fp_bits)
+        tags2 = L.unpack_words(words2, lay.fp_bits)
+        start = L.scan_start(tag, lay)
+        f1, s1 = L.first_true_circular(tags1 == tag[:, None], start)
+        f2, s2 = L.first_true_circular(tags2 == tag[:, None], start)
+        blk = jnp.where(f1, b1, b2)
+        slot = jnp.where(f1, s1, s2)
+        words = jnp.where(f1[:, None], words1, words2)
+        found = f1 | f2
+
+        widx, sw = L.slot_to_word(slot, lay)
+        word = jnp.take_along_axis(words, widx[:, None], axis=1)[:, 0]
+        desired = L.replace_tag(word, sw, jnp.zeros((n,), jnp.uint32),
+                                lay.fp_bits)
+        addr = L.word_addr(blk, widx, lay)
+
+        # Stash fallback.
+        e1 = _stash_entry(config, b1, tag)
+        e2 = _stash_entry(config, b2, tag)
+        smatch = (stash[None, :] == e1[:, None]) | (stash[None, :] == e2[:, None])
+        sfound = jnp.any(smatch, axis=-1)
+        sslot = jnp.argmax(smatch, axis=-1).astype(jnp.int32)
+
+        use_table = pending & found
+        use_stash = pending & ~found & sfound
+        pending = pending & (found | sfound)
+
+        claim = jnp.where(use_table, addr,
+                          jnp.where(use_stash, lay.num_words + sslot, invalid))
+        win = resolve_claims_single(claim, invalid)
+        commit_t = use_table & win
+        commit_s = use_stash & win
+        table = table.at[jnp.where(commit_t, addr, lay.num_words)].set(
+            desired, mode="drop")
+        stash = stash.at[jnp.where(commit_s, sslot, config.stash_size)].set(
+            jnp.zeros((n,), jnp.uint32), mode="drop")
+        done = commit_t | commit_s
+        success = success | done
+        pending = pending & ~done
+        count = count - jnp.sum(done, dtype=jnp.int32)
+        return table, stash, count, pending, success, rnd + 1
+
+    def cond_fn(carry):
+        return jnp.any(carry[3]) & (carry[5] < max_rounds)
+
+    carry0 = (state.table, state.stash, state.count, jnp.ones((n,), bool),
+              jnp.zeros((n,), bool), jnp.zeros((), jnp.int32))
+    table, stash, count, _, success, _ = jax.lax.while_loop(
+        cond_fn, round_fn, carry0)
+    return TCFState(table, stash, count), success
+
+
+class TwoChoiceFilter:
+    def __init__(self, config: TCFConfig):
+        self.config = config
+        self.state = config.init()
+        self._insert = jax.jit(functools.partial(insert, config))
+        self._query = jax.jit(functools.partial(query, config))
+        self._delete = jax.jit(functools.partial(delete, config))
+
+    def insert(self, keys):
+        self.state, ok = self._insert(self.state, keys)
+        return ok
+
+    def query(self, keys):
+        return self._query(self.state, keys)
+
+    def delete(self, keys):
+        self.state, ok = self._delete(self.state, keys)
+        return ok

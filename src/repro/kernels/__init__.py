@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the filter hot paths.
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+tiling, ``ops.py`` the jit'd public wrappers, ``ref.py`` the pure-jnp
+oracles. All kernels validate in interpret mode on CPU (this container) and
+target TPU VMEM-resident tables (the paper's L2-resident regime analogue).
+"""
+
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention_pallas  # noqa: F401
+from .ops import (  # noqa: F401
+    bloom_insert,
+    bloom_query,
+    cuckoo_insert_direct,
+    cuckoo_query,
+    hash64,
+    kmer_pack,
+)

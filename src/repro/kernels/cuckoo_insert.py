@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: Cuckoo-filter direct insertion (paper Alg. 1 phase 1).
+
+TPU adaptation of the lock-free CAS insert (DESIGN.md §2): a TPU core's grid
+steps execute **sequentially**, so read-modify-write on a VMEM-resident table
+is race-free *by construction* — the atomicity the GPU buys with CAS, the TPU
+gets from exclusive core ownership. Parallel scale-out happens above this
+kernel (one filter shard per core via shard_map; see core/sharded_filter.py).
+
+The kernel implements the *direct-insert fast path*: hash a tile of keys on
+the VPU (vectorized), then apply them with an in-kernel sequential loop —
+scan bucket i1 then i2 from the fingerprint-derived start, take the first
+empty slot, store the updated word back to VMEM. Keys whose buckets are both
+full are reported in the failure mask; the (rare at <95% load) eviction path
+is handled by the general batch machinery in core/cuckoo_filter.py. This
+hybrid mirrors the paper's own structure, where phase 2 is the slow path.
+
+The table is input/output-aliased so the update is in-place in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core import layout as L
+from ..core.cuckoo_filter import CuckooConfig
+from ..core.hashing import hash_key
+
+_U32 = np.uint32
+
+
+def _insert_kernel(config: CuckooConfig, block_keys: int,
+                   table_in_ref, keys_lo_ref, keys_hi_ref, valid_ref,
+                   table_out_ref, ok_ref):
+    lay = config.layout
+    pol = config.placement
+    wpb = lay.words_per_bucket
+
+    # Phase A (vectorized over the tile): hashing + candidate derivation.
+    keys = jnp.stack([keys_lo_ref[...], keys_hi_ref[...]], axis=-1)
+    hi, lo = hash_key(keys, config.hash_kind, config.seed)
+    base_tag = pol.make_tag(hi)
+    i1, i2 = pol.initial_buckets(lo, base_tag)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((block_keys,), bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones((block_keys,), bool))
+    start = L.scan_start(base_tag, lay)
+
+    # Phase B (sequential RMW): grid steps and this loop both execute in
+    # order on the core, so each iteration sees all prior writes.
+    def body(i, _):
+        def try_bucket(bucket, tag):
+            base = bucket.astype(jnp.int32) * wpb
+            words = table_out_ref[pl.ds(base, wpb)]
+            lanes = L.unpack_words(words, lay.fp_bits)
+            found, slot = L.first_true_circular(lanes == 0, start[i])
+            widx, sw = L.slot_to_word(slot, lay)
+            desired = L.replace_tag(words[widx], sw, tag, lay.fp_bits)
+            return found, base + widx, desired
+
+        f1, addr1_, des1 = try_bucket(i1[i], tag1[i])
+        f2, addr2_, des2 = try_bucket(i2[i], tag2[i])
+        found = (f1 | f2) & (valid_ref[i] != 0)
+        addr = jnp.where(f1, addr1_, addr2_)
+        desired = jnp.where(f1, des1, des2)
+        # Masked store: failed keys write back the original word.
+        current = table_out_ref[pl.ds(addr, 1)]
+        table_out_ref[pl.ds(addr, 1)] = jnp.where(found, desired[None],
+                                                  current)
+        ok_ref[pl.ds(i, 1)] = found.astype(jnp.uint32)[None]
+        return 0
+
+    # First grid step: copy the table into the aliased output buffer (no-op
+    # under aliasing, but keeps interpret mode and real lowering identical).
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        table_out_ref[...] = table_in_ref[...]
+
+    jax.lax.fori_loop(0, block_keys, body, 0)
+
+
+def cuckoo_insert_pallas(config: CuckooConfig, table: jnp.ndarray,
+                         keys_lo: jnp.ndarray, keys_hi: jnp.ndarray,
+                         valid: jnp.ndarray | None = None,
+                         *, block_keys: int = 256,
+                         interpret: bool = True):
+    """Direct-insert a key stream; returns (table', ok uint32[n]).
+
+    ok==0 keys need the eviction path (core.cuckoo_filter.insert).
+    ``valid`` (uint32[n], nonzero = live) masks padding keys.
+    """
+    n = keys_lo.shape[0]
+    assert n % block_keys == 0, (n, block_keys)
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint32)
+    grid = (n // block_keys,)
+    kernel = functools.partial(_insert_kernel, config, block_keys)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+        name="cuckoo_insert_direct",
+    )(table, keys_lo, keys_hi, valid)

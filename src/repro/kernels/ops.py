@@ -1,0 +1,105 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, key packing conventions, and backend
+selection: kernels run compiled on TPU and in interpret mode elsewhere
+(CPU validation per DESIGN.md; the kernel body is identical).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cuckoo_filter import CuckooConfig, CuckooState
+from ..filters.blocked_bloom import BloomConfig, BloomState
+from .bloom import bloom_insert_pallas, bloom_query_pallas
+from .cuckoo_insert import cuckoo_insert_pallas
+from .cuckoo_query import cuckoo_query_pallas
+from .hash64 import hash64_pallas
+from .kmer_pack import kmer_pack_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, multiple: int, fill=0):
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pad = jnp.full((rem,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad]), n
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def cuckoo_query(config: CuckooConfig, state: CuckooState,
+                 keys: jnp.ndarray, block_keys: int = 1024) -> jnp.ndarray:
+    """Kernel-backed batch query. keys: uint32[n, 2] -> bool[n]."""
+    keys, n = _pad_to(keys, block_keys)
+    out = cuckoo_query_pallas(config, state.table, keys[:, 0], keys[:, 1],
+                              block_keys=block_keys,
+                              interpret=not _on_tpu())
+    return out[:n].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
+                         keys: jnp.ndarray, block_keys: int = 256):
+    """Kernel-backed direct insert (no eviction). -> (state', ok bool[n]).
+
+    Failed keys (ok==False) should be retried through the eviction-capable
+    core.cuckoo_filter.insert.
+    """
+    n0 = keys.shape[0]
+    keys, n = _pad_to(keys, block_keys, fill=0)
+    valid = (jnp.arange(keys.shape[0]) < n0).astype(jnp.uint32)
+    table, ok = cuckoo_insert_pallas(config, state.table,
+                                     keys[:, 0], keys[:, 1], valid,
+                                     block_keys=block_keys,
+                                     interpret=not _on_tpu())
+    count = state.count + jnp.sum(ok[:n], dtype=jnp.int32)
+    return CuckooState(table, count), ok[:n].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def bloom_query(config: BloomConfig, state: BloomState,
+                keys: jnp.ndarray, block_keys: int = 1024) -> jnp.ndarray:
+    keys, n = _pad_to(keys, block_keys)
+    out = bloom_query_pallas(config, state.table, keys[:, 0], keys[:, 1],
+                             block_keys=block_keys,
+                             interpret=not _on_tpu())
+    return out[:n].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def bloom_insert(config: BloomConfig, state: BloomState,
+                 keys: jnp.ndarray, block_keys: int = 256):
+    n0 = keys.shape[0]
+    keys, n = _pad_to(keys, block_keys)
+    valid = (jnp.arange(keys.shape[0]) < n0).astype(jnp.uint32)
+    table = bloom_insert_pallas(config, state.table, keys[:, 0], keys[:, 1],
+                                valid, block_keys=block_keys,
+                                interpret=not _on_tpu())
+    return BloomState(table, state.count + n), jnp.ones((n,), bool)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def hash64(keys: jnp.ndarray, seed: int = 0, block_keys: int = 2048):
+    """xxHash64 of uint32[n, 2] keys -> (hi, lo) uint32[n]."""
+    keys, n = _pad_to(keys, block_keys)
+    hi, lo = hash64_pallas(keys[:, 0], keys[:, 1], seed=seed,
+                           block_keys=block_keys, interpret=not _on_tpu())
+    return hi[:n], lo[:n]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def kmer_pack(bases: jnp.ndarray, k: int = 31, block: int = 1024):
+    """2-bit base codes uint32[n] -> packed k-mer keys uint32[n-k+1, 2]."""
+    bases, n = _pad_to(bases.astype(jnp.uint32), block)
+    hi, lo = kmer_pack_pallas(bases, k=k, block=block,
+                              interpret=not _on_tpu())
+    m = n - k + 1
+    return jnp.stack([lo[:m], hi[:m]], axis=-1)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each ``*_ref`` function computes exactly what the corresponding kernel in
+this package must produce; kernel tests sweep shapes/dtypes and
+``assert_allclose`` (exact equality for these integer ops) against them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import layout as L
+from ..core import bits64 as b64
+from ..core.cuckoo_filter import CuckooConfig, CuckooState
+from ..core.cuckoo_filter import query as cuckoo_query_core
+from ..core.hashing import xxhash64_u64
+from ..filters.blocked_bloom import BloomConfig, BloomState
+from ..filters.blocked_bloom import query as bloom_query_core
+
+_U32 = np.uint32
+
+
+def _pack_keys(keys_lo: jnp.ndarray, keys_hi: jnp.ndarray) -> jnp.ndarray:
+    return jnp.stack([keys_lo, keys_hi], axis=-1)
+
+
+def cuckoo_query_ref(config: CuckooConfig, table: jnp.ndarray,
+                     keys_lo: jnp.ndarray, keys_hi: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.cuckoo_query — reuses the core query (Alg. 2)."""
+    state = CuckooState(table, jnp.zeros((), jnp.int32))
+    hit = cuckoo_query_core(config, state, _pack_keys(keys_lo, keys_hi))
+    return hit.astype(jnp.uint32)
+
+
+def cuckoo_insert_ref(config: CuckooConfig, table: jnp.ndarray,
+                      keys_lo: jnp.ndarray, keys_hi: jnp.ndarray):
+    """Oracle for kernels.cuckoo_insert (direct-insert fast path only).
+
+    Sequential semantics: keys are applied one at a time in batch order; each
+    key scans bucket i1 then i2 from its fingerprint-derived start and takes
+    the first empty slot (no eviction — kernel reports failure instead).
+    Returns (table', ok uint32[n]).
+    """
+    import jax
+
+    lay = config.layout
+    pol = config.placement
+    from ..core.cuckoo_filter import prepare_keys
+
+    keys = _pack_keys(keys_lo, keys_hi)
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    tag1 = pol.place_tag(base_tag, jnp.zeros(base_tag.shape, bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones(base_tag.shape, bool))
+
+    def body(i, carry):
+        table, ok = carry
+        words1 = L.gather_bucket_words(table, i1[i], lay)
+        words2 = L.gather_bucket_words(table, i2[i], lay)
+        start = L.scan_start(base_tag[i], lay)
+        f1, s1 = L.first_true_circular(
+            L.unpack_words(words1, lay.fp_bits) == 0, start)
+        f2, s2 = L.first_true_circular(
+            L.unpack_words(words2, lay.fp_bits) == 0, start)
+        bucket = jnp.where(f1, i1[i], i2[i])
+        slot = jnp.where(f1, s1, s2)
+        tag = jnp.where(f1, tag1[i], tag2[i])
+        widx, sw = L.slot_to_word(slot, lay)
+        word = jnp.where(f1, words1[widx], words2[widx])
+        desired = L.replace_tag(word, sw, tag, lay.fp_bits)
+        addr = L.word_addr(bucket, widx, lay)
+        found = f1 | f2
+        table = jnp.where(found, table.at[addr].set(desired), table)
+        ok = ok.at[i].set(found.astype(jnp.uint32))
+        return table, ok
+
+    n = keys_lo.shape[0]
+    return jax.lax.fori_loop(0, n, body,
+                             (table, jnp.zeros((n,), jnp.uint32)))
+
+
+def bloom_query_ref(config: BloomConfig, table: jnp.ndarray,
+                    keys_lo: jnp.ndarray, keys_hi: jnp.ndarray) -> jnp.ndarray:
+    state = BloomState(table, jnp.zeros((), jnp.int32))
+    hit = bloom_query_core(config, state, _pack_keys(keys_lo, keys_hi))
+    return hit.astype(jnp.uint32)
+
+
+def bloom_insert_ref(config: BloomConfig, table: jnp.ndarray,
+                     keys_lo: jnp.ndarray, keys_hi: jnp.ndarray) -> jnp.ndarray:
+    from ..filters.blocked_bloom import insert as bloom_insert_core
+
+    state = BloomState(table, jnp.zeros((), jnp.int32))
+    state, _ = bloom_insert_core(config, state, _pack_keys(keys_lo, keys_hi))
+    return state.table
+
+
+def hash64_ref(keys_lo: jnp.ndarray, keys_hi: jnp.ndarray, seed: int = 0):
+    """Oracle for kernels.hash64 — xxHash64 on (hi, lo) uint32 pairs."""
+    hi, lo = xxhash64_u64((keys_hi, keys_lo), seed=seed)
+    return hi, lo
+
+
+def kmer_pack_ref(bases: jnp.ndarray, k: int = 31):
+    """Oracle for kernels.kmer_pack.
+
+    bases: uint32[n] 2-bit base codes (0..3), padded with >= k-1 trailing
+    entries. Output: (hi, lo) uint32[n] where position i holds the 2k-bit
+    packed k-mer starting at i (positions beyond n-k+1 are don't-care but
+    computed identically from the padding).
+    """
+    n = bases.shape[0]
+    acc = (jnp.zeros((n,), jnp.uint32), jnp.zeros((n,), jnp.uint32))
+    padded = jnp.concatenate([bases, jnp.zeros((k,), jnp.uint32)])
+    for j in range(k):
+        nxt = padded[j:j + n]
+        acc = b64.shl(acc, 2)
+        acc = (acc[0], acc[1] | (nxt & _U32(3)))
+    return acc

@@ -1,0 +1,287 @@
+"""Text-based HLO cost model with while-loop trip-count accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**, but
+our layer stacks are ``lax.scan`` loops — a 61-layer model would be
+under-counted ~61x. This module parses ``compiled.as_text()`` into a call
+graph, extracts scan trip counts from the loop conditions, and accumulates:
+
+  * FLOPs      — dots (2*M*N*K from operand shapes + contracting dims),
+                 elementwise ops, reduces;
+  * HBM bytes  — operand + result bytes of *materializing* instructions
+                 (fusions, dots, copies, collectives); intra-fusion ops are
+                 free (they live in registers/VMEM);
+  * collective wire bytes — ring-algorithm factors x replica-group size.
+
+every quantity scaled by the product of enclosing while trip counts. Values
+are per-device (the module is the post-SPMD per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d+|pred)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*{")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "exponential", "tanh", "rsqrt",
+    "sqrt", "log", "maximum", "minimum", "power", "logistic", "negate",
+    "compare", "select", "and", "or", "xor", "abs", "floor", "cosine",
+    "sine", "expm1", "log1p", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+# Ops whose operands/results genuinely transit HBM on TPU. Pure layout /
+# elementwise ops (transpose, reshape, broadcast, convert, copy, slice, pad,
+# concatenate, iota) fuse into their consumers on TPU and are excluded —
+# counting them (as the CPU backend materializes them) inflated the memory
+# term ~10x (validated against analytic activation-traffic estimates).
+_MATERIALIZING = {"fusion", "dot", "reduce", "dynamic-update-slice",
+                  "gather", "scatter", "select-and-scatter", "sort", "rng",
+                  "convolution", "custom-call"} | _COLLECTIVES
+
+# opcode = first `word(` token after the type string
+_OP_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+
+
+class Instr:
+    __slots__ = ("name", "op", "shapes", "operands", "line")
+
+    def __init__(self, name, op, shapes, operands, line):
+        self.name = name
+        self.op = op
+        self.shapes = shapes        # list of (dtype, [dims])
+        self.operands = operands    # operand %names (order preserved)
+        self.line = line
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nelems(shape: Tuple[str, List[int]]) -> int:
+    n = 1
+    for d in shape[1]:
+        n *= d
+    return n
+
+
+def _nbytes(shape: Tuple[str, List[int]]) -> int:
+    return _nelems(shape) * _DTYPE_BYTES.get(shape[0], 4)
+
+
+def parse_module(txt: str):
+    """-> (computations: {name: [Instr]}, symbols: {name: shapes})."""
+    comps: Dict[str, List[Instr]] = {}
+    symbols: Dict[str, List[Tuple[str, List[int]]]] = {}
+    cur: Optional[str] = None
+    for line in txt.splitlines():
+        h = _HEADER_RE.match(line.strip()) if "{" in line and "=" not in \
+            line.split("{")[0].split("(")[0] else None
+        if h and ("->" in line):
+            cur = h.group(1)
+            comps[cur] = []
+            continue
+        m = _INSTR_RE.match(line)
+        if not m or cur is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = _OP_RE.search(" " + rhs)
+        op = opm.group(1) if opm else "unknown"
+        type_str = rhs[:opm.start()] if opm else rhs
+        shapes = _parse_shapes(type_str)
+        # operand names: %refs before any attr keyword that names computations
+        args_part = rhs[opm.end():] if opm else ""
+        operands = re.findall(r"%([\w\.\-]+)", args_part.split("),")[0])
+        ins = Instr(name, op, shapes, operands, line)
+        comps[cur].append(ins)
+        symbols[name] = shapes
+        # parameters declare shapes too
+    return comps, symbols
+
+
+def _trip_count(cond_comp: List[Instr]) -> int:
+    consts = []
+    for ins in cond_comp:
+        consts += [int(c) for c in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or entry is None:
+            pass
+    # entry = computation not called by anyone
+    called = set()
+    for name, instrs in comps.items():
+        for ins in instrs:
+            for key, rx in _CALLED_RE.items():
+                m = rx.search(ins.line)
+                if m:
+                    called.add(m.group(1))
+    roots = [n for n in comps if n not in called]
+    for r in roots:
+        mult[r] = 1.0
+    # propagate in dependency order (HLO call graph is a DAG; iterate)
+    for _ in range(len(comps)):
+        changed = False
+        for name, instrs in comps.items():
+            m0 = mult.get(name, 0.0)
+            if m0 == 0.0:
+                continue
+            for ins in instrs:
+                if ins.op == "while":
+                    b = _CALLED_RE["body"].search(ins.line)
+                    c = _CALLED_RE["condition"].search(ins.line)
+                    if b and c:
+                        trip = _trip_count(comps.get(c.group(1), []))
+                        want = m0 * trip
+                        if mult[b.group(1)] < want:
+                            mult[b.group(1)] = want
+                            changed = True
+                        if mult[c.group(1)] < want:
+                            mult[c.group(1)] = want
+                            changed = True
+                else:
+                    for key in ("calls", "to_apply"):
+                        m = _CALLED_RE[key].search(ins.line)
+                        if m and mult[m.group(1)] < m0:
+                            mult[m.group(1)] = m0
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(ins: Instr, symbols) -> float:
+    out_elems = sum(_nelems(s) for s in ins.shapes)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    k = 1
+    if m and ins.operands:
+        lhs_shapes = symbols.get(ins.operands[0])
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _inplace_update_comps(comps) -> set:
+    """Fusion computations that update a slice of a loop-carried buffer
+    (KV-cache writes): a dynamic-update-slice whose dims match the fusion
+    root (possibly through a dtype convert). Counted as slice-sized traffic,
+    not whole-buffer — which is how TPU executes donated cache updates."""
+    out = set()
+    for cname, instrs in comps.items():
+        root_dims = None
+        for ins in instrs:
+            if "ROOT" in ins.line and ins.shapes:
+                root_dims = ins.shapes[0][1]
+        if root_dims is None:
+            continue
+        for ins in instrs:
+            if ins.op == "dynamic-update-slice" and ins.shapes and \
+                    ins.shapes[0][1] == root_dims:
+                out.add(cname)
+                break
+    return out
+
+
+def analyse_text(txt: str, n_devices: int) -> Dict:
+    comps, symbols = parse_module(txt)
+    mult = computation_multipliers(comps)
+    inplace = _inplace_update_comps(comps)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    colls: Dict[str, Dict] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        # is this computation a fusion body? (only fusion *instructions*
+        # move HBM bytes; ops inside fusion bodies still count flops)
+        in_fusion = cname.startswith("fused_") or ".fused" in cname
+        for ins in instrs:
+            op = ins.op
+            if op == "dot":
+                flops += m * _dot_flops(ins, symbols)
+            elif op in ("reduce", "reduce-window"):
+                src = symbols.get(ins.operands[0]) if ins.operands else None
+                flops += m * (_nelems(src[0]) if src else
+                              sum(_nelems(s) for s in ins.shapes))
+            elif op in _ELEMENTWISE:
+                flops += m * sum(_nelems(s) for s in ins.shapes)
+            elif op == "convolution":
+                # rough: out elems x kernel spatial x in-channels x 2
+                flops += m * 2 * sum(_nelems(s) for s in ins.shapes)
+
+            if in_fusion:
+                continue
+            if op in _MATERIALIZING:
+                rb = sum(_nbytes(s) for s in ins.shapes)
+                ob_list = [_nbytes(symbols[o][0]) for o in ins.operands
+                           if o in symbols and symbols[o]]
+                called = _CALLED_RE["calls"].search(ins.line)
+                if (op == "dynamic-update-slice"
+                        or (op == "fusion" and called
+                            and called.group(1) in inplace)):
+                    # in-place update: count only sub-result-size operands
+                    # (the update slice + indices), twice (read + write)
+                    small = sum(b for b in ob_list if b < rb)
+                    bytes_hbm += m * 2 * small
+                elif op == "fusion":
+                    # fusions that dynamic-slice/gather from a large buffer
+                    # only touch the addressed rows: cap each operand at 8x
+                    # the result (keeps reduction fusions honest while not
+                    # charging a full stacked-layer cache per slice).
+                    ob = sum(min(b, 8 * max(rb, 1)) for b in ob_list)
+                    bytes_hbm += m * (rb + ob)
+                else:
+                    bytes_hbm += m * (rb + sum(ob_list))
+            base = op[:-6] if op.endswith("-start") else op
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                b = sum(_nbytes(s) for s in ins.shapes)
+                gm = _GROUPS_RE.search(ins.line)
+                g = int(gm.group(2)) if gm else n_devices
+                frac = (g - 1) / max(g, 1)
+                wire = {"all-reduce": 2 * b * frac,
+                        "all-gather": b * frac,
+                        "reduce-scatter": b * g * frac,
+                        "all-to-all": b * frac,
+                        "collective-permute": b}[base]
+                s = colls[base]
+                s["count"] += m
+                s["result_bytes"] += m * b
+                s["wire_bytes"] += m * wire
+
+    return {"flops": flops, "bytes": bytes_hbm,
+            "collectives": {k: dict(v) for k, v in colls.items()},
+            "n_computations": len(comps)}

@@ -1,0 +1,81 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+Shapes are the assigned public-literature set:
+    train_4k      seq 4,096   global_batch 256   (training step)
+    prefill_32k   seq 32,768  global_batch 32    (inference prefill)
+    decode_32k    seq 32,768  global_batch 128   (one decode step, full cache)
+    long_500k     seq 524,288 global_batch 1     (long-context decode)
+
+SKIPS (DESIGN.md §4): encoder-only hubert has no decode; pure full-attention
+archs skip long_500k (unbounded full KV at 500k).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import build_model
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+SKIPS: Dict[Tuple[str, str], str] = {
+    ("hubert_xlarge", "decode_32k"): "encoder-only: no autoregressive step",
+    ("hubert_xlarge", "long_500k"): "encoder-only: no autoregressive step",
+    ("deepseek_v3_671b", "long_500k"):
+        "pure full-attention decode at 500k (unbounded KV)",
+    ("qwen1_5_4b", "long_500k"):
+        "pure full-attention decode at 500k (unbounded KV)",
+    ("chameleon_34b", "long_500k"):
+        "pure full-attention decode at 500k (unbounded KV)",
+}
+
+
+def live_cells():
+    from ..configs.base import ARCHS
+
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if (arch, shape) not in SKIPS:
+                yield arch, shape
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins + step kind for one cell."""
+    s = SHAPES[shape_name]
+    kind, seq, batch = s["kind"], s["seq"], s["batch"]
+    model = build_model(cfg)
+    out: Dict[str, Any] = {"kind": kind, "seq": seq, "batch": batch}
+
+    if kind == "train":
+        if cfg.frontend == "frames":
+            out["batch_spec"] = {
+                "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+        else:
+            out["batch_spec"] = {
+                "tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+    elif kind == "prefill":
+        if cfg.frontend == "frames":
+            out["batch_spec"] = {
+                "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16)}
+        else:
+            out["batch_spec"] = {
+                "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    else:  # decode
+        out["token_spec"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        out["pos_spec"] = jax.ShapeDtypeStruct((), jnp.int32)
+        out["cache_spec"] = jax.eval_shape(
+            lambda: model.init_caches(batch, seq))
+    return out

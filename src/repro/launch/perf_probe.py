@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf probe: per-op breakdown of one dry-run cell (§Perf methodology).
+
+Prints bytes/flops by op kind and the top contributors (shape x while-loop
+multiplier), so each hillclimb iteration can name the tensor it is attacking.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch qwen1_5_4b \
+        --shape train_4k [--multi-pod] [--microbatches 8]
+"""
+
+import argparse  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from . import hlo_cost as HC  # noqa: E402
+from .dryrun import analyse, lower_cell  # noqa: E402
+
+
+def breakdown(txt: str, n_devices: int, top: int = 20):
+    comps, symbols = HC.parse_module(txt)
+    mult = HC.computation_multipliers(comps)
+    by_op_bytes = defaultdict(float)
+    by_op_flops = defaultdict(float)
+    items = []
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname.startswith("fused_") or ".fused" in cname
+        for ins in instrs:
+            op = ins.op
+            fl = 0.0
+            if op == "dot":
+                fl = m * HC._dot_flops(ins, symbols)
+            elif op in HC._ELEMENTWISE:
+                fl = m * sum(HC._nelems(s) for s in ins.shapes)
+            by_op_flops[op] += fl
+            if in_fusion or op not in HC._MATERIALIZING:
+                continue
+            rb = sum(HC._nbytes(s) for s in ins.shapes)
+            ob = sum(HC._nbytes(symbols[o][0]) for o in ins.operands
+                     if o in symbols and symbols[o])
+            b = m * (rb + ob)
+            by_op_bytes[op] += b
+            items.append((b, fl, op, ins.shapes[:1], int(m), cname[:40]))
+    print("\n== bytes by op ==")
+    for op, b in sorted(by_op_bytes.items(), key=lambda kv: -kv[1]):
+        print(f"  {op:25s} {b / 1e12:10.3f} TB")
+    print("== flops by op ==")
+    for op, f in sorted(by_op_flops.items(), key=lambda kv: -kv[1])[:8]:
+        print(f"  {op:25s} {f / 1e12:10.3f} TFLOP")
+    print(f"== top {top} byte contributors ==")
+    items.sort(key=lambda t: -t[0])
+    for b, fl, op, shapes, m, cname in items[:top]:
+        print(f"  {b / 1e12:8.3f} TB x{m:<5d} {op:22s} {shapes} {cname}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--no-hints", action="store_true",
+                    help="disable shard_ctx constraints (baseline repro)")
+    ap.add_argument("--param-mode", default=None,
+                    choices=["train", "serve"])
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. mla_absorb=False")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"True": True, "False": False}.get(v, v)
+
+    compiled, meta = lower_cell(args.arch, args.shape, args.multi_pod,
+                                microbatches=args.microbatches,
+                                overrides=overrides or None,
+                                no_hints=args.no_hints,
+                                param_mode=args.param_mode)
+    result = analyse(compiled, meta)
+    r = result["roofline"]
+    print(f"terms: compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+          f"collective={r['collective_s']:.3e}s dominant={result['dominant']}")
+    print(f"temp={result['memory']['temp_bytes'] / 2**30:.1f}GiB "
+          f"useful={result['useful_flop_ratio']:.3f}")
+    print("collectives:", {k: f"{v['wire_bytes'] / 1e9:.1f}GB(x{v['count']:.0f})"
+                           for k, v in result["collectives"].items()})
+    breakdown(compiled.as_text(), meta["n_devices"], args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Partition rules: pytree -> PartitionSpec trees for params, optimizer
+state, batches and serving caches.
+
+Strategy (DESIGN.md §5): ``model`` = tensor/expert parallel, ``data`` =
+FSDP (parameters, grads and optimizer state sharded), ``pod`` = data
+parallel replicas. Every rule degrades per-dimension when a dim is not
+divisible by the axis size (e.g. hubert's 504-way head stays replicated on
+the vocab dim), so one rule set covers all ten architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..train.optimizer import QTensor
+
+# parameter names that are column-parallel (output dim -> model axis)
+_COL = {"wq", "wk", "wv", "up", "gate", "wuq", "wuk", "wuv", "wkr", "wdq",
+        "wdkv", "in_proj", "x_proj", "gate_proj", "wa", "wx", "head"}
+# row-parallel (input dim -> model axis)
+_ROW = {"wo", "down", "out_proj"}
+
+
+def _names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(f"#{k.idx}")
+    return out
+
+
+def _div(dim: int, mesh, axis) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return dim % size == 0
+
+
+def _guard(spec_dims, shape, mesh) -> P:
+    """Replace any axis assignment whose dim is not divisible with None."""
+    out = []
+    for dim, ax in zip(shape, spec_dims):
+        out.append(ax if ax is not None and _div(dim, mesh, ax) else None)
+    return P(*out)
+
+
+def param_spec(mesh, path, leaf, mode: str = "train") -> P:
+    """Partition rule for one parameter leaf (handles scan-stacked dims).
+
+    mode="train": FSDP over 'data' + TP over 'model' (ZeRO-3 style).
+    mode="serve": TP/EP only — decode must not all-gather weights every
+    token (§Perf deepseek decode iteration 3); weights replicate over
+    'data' and shard over 'model'.
+    """
+    names = _names(path)
+    shape = leaf.shape
+    fsdp = "data" if mode == "train" else None
+    tp = "model"
+    # scan-stacked params have 1 leading rep dim beyond the logical rank
+    logical = shape
+    lead = 0
+    # embed / router / experts / norms identified by name
+    base = names[-1] if names else ""
+    parents = set(names)
+
+    if base == "table":  # embedding [V, d]
+        return _guard((tp, fsdp), shape, mesh)
+    if base == "router":
+        lead = len(shape) - 2
+        return _guard((None,) * lead + (fsdp, None), shape, mesh)
+    if base in ("wgate", "wup", "wdown"):  # experts [.., E, d, ff]/[.., E, ff, d]
+        lead = len(shape) - 3
+        if mode == "serve":
+            # full EP: experts over model x data (1 expert/device at 256/256)
+            # — weights stay resident, tokens move (all-to-all), no per-step
+            # weight gathers. Few-expert configs (mixtral E=8) shard the FFN
+            # dim over model x data instead (else 141B replicates).
+            if _div(shape[lead], mesh, (tp, "data")):
+                spec = (None,) * lead + ((tp, "data"), None, None)
+            elif _div(shape[lead], mesh, tp):
+                spec = (None,) * lead + (tp, None, None)
+            else:
+                ff_dim = 1 if base == "wdown" else 2
+                inner = [None, None, None]
+                inner[0] = None
+                inner[ff_dim] = (tp, "data")
+                spec = (None,) * lead + tuple(inner)
+        elif base == "wdown":
+            spec = (None,) * lead + ((tp, None, fsdp)
+                                     if _div(shape[lead], mesh, tp)
+                                     else (None, tp, fsdp))
+        else:
+            spec = (None,) * lead + ((tp, fsdp, None)
+                                     if _div(shape[lead], mesh, tp)
+                                     else (None, fsdp, tp))
+        return _guard(spec, shape, mesh)
+    if base == "w" and len(names) >= 2:
+        owner = names[-2]
+        lead = len(shape) - 2
+        if owner in _COL:
+            return _guard((None,) * lead + (fsdp, tp), shape, mesh)
+        if owner in _ROW:
+            return _guard((None,) * lead + (tp, fsdp), shape, mesh)
+        return _guard((None,) * lead + (fsdp, None), shape, mesh)
+    if base == "b" and len(names) >= 2:
+        owner = names[-2]
+        lead = len(shape) - 1
+        if owner in _COL:
+            return _guard((None,) * lead + (tp,), shape, mesh)
+        return P(*(None,) * len(shape))
+    if base in ("conv_w",):
+        lead = len(shape) - 2
+        return _guard((None,) * lead + (None, fsdp), shape, mesh)
+    if base in ("lambda", "conv_b"):
+        lead = len(shape) - 1
+        return _guard((None,) * lead + (fsdp,), shape, mesh)
+    # norms, scalars, small vectors: replicated
+    return P(*(None,) * len(shape))
+
+
+def make_param_shardings(mesh, params_shape, mode: str = "train"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(mesh, path, leaf, mode)),
+        params_shape)
+
+
+def make_opt_shardings(mesh, opt_shape, quantized: bool = False):
+    """AdamWState shardings: step replicated; m/v follow params (fp32) or
+    use the blocked QTensor layout (int8 q [nblocks, 256] + fp32 scale
+    [nblocks], nblocks always divisible by 512)."""
+    import jax.numpy as jnp
+
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if quantized:
+            # in quantized mode every non-scalar m/v leaf is a QTensor part
+            if leaf.dtype == jnp.int8:
+                return NamedSharding(mesh, P(fsdp, None))
+            if leaf.ndim == 1:
+                return NamedSharding(mesh, P(fsdp))
+        return NamedSharding(mesh, param_spec(mesh, path, leaf))
+
+    return jax.tree_util.tree_map_with_path(
+        rule, opt_shape,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_spec(mesh) -> P:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return P(dp)
+
+
+def make_batch_shardings(mesh, batch_shape):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def rule(leaf):
+        if leaf.shape and _div(leaf.shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp, *(None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, P(*(None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map(rule, batch_shape)
+
+
+def cache_spec(mesh, leaf, seq_len: int, batch: int) -> P:
+    """Serving-cache rule: shard the long sequence dim of KV/latent caches
+    over 'model' (and over everything for batch-1 long-context); shard batch
+    over dp when divisible."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    shape = leaf.shape
+    batch_ok = _div(shape[0], mesh, dp) if shape else False
+    b_ax = dp if batch_ok else None
+    # caches carry one leading stacked-layer dim handled upstream; here the
+    # first dim is batch.
+    if len(shape) >= 2 and shape[1] >= seq_len // 2 and seq_len > 1:
+        seq_ax = ("data", "model") if not batch_ok and \
+            _div(shape[1], mesh, ("data", "model")) else "model"
+        if not _div(shape[1], mesh, seq_ax):
+            seq_ax = None
+        return P(b_ax, seq_ax, *(None,) * (len(shape) - 2))
+    # states / conv windows: shard the widest trailing dim over model.
+    # (Replicating small SWA ring caches instead was tried and REFUTED —
+    # §Perf recurrentgemma iter 2: resharding the attention output costs
+    # more than the 16 MB per-step window gather.)
+    if len(shape) >= 2 and _div(shape[-1], mesh, "model"):
+        return P(b_ax, *(None,) * (len(shape) - 2), "model")
+    return P(b_ax, *(None,) * (len(shape) - 1))
+
+
+def make_cache_shardings(mesh, caches_shape, seq_len: int, batch: int):
+    def rule(leaf):
+        shape = leaf.shape
+        # strip the scan-stacked leading dim (reps)
+        inner = jax.ShapeDtypeStruct(shape[1:], leaf.dtype)
+        spec = cache_spec(mesh, inner, seq_len, batch)
+        return NamedSharding(mesh, P(None, *spec))
+
+    return jax.tree_util.tree_map(rule, caches_shape)

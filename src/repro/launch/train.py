@@ -1,0 +1,98 @@
+"""Training driver: end-to-end runnable on local devices, mesh-ready.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2_130m \
+        --reduced --steps 100 --batch 8 --seq 256 [--resume] [--dedup]
+
+On a real cluster the same driver runs under the production mesh
+(launch/mesh.py) with the dry-run's shardings; locally it uses whatever
+devices exist. XLA latency-hiding scheduler flags for real TPU runs are
+recorded here (no-ops on CPU):
+    --xla_tpu_enable_latency_hiding_scheduler=true
+    --xla_tpu_overlap_compute_collective_tc=true
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..core import CuckooConfig
+from ..data import DataConfig, DedupConfig, dedup_batch, make_batch, make_frames_batch
+from ..models import build_model
+from ..train import AdamWConfig, TrainingRunner, init_train_state, make_train_step
+from ..train import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2_130m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--dedup", action="store_true",
+                    help="filter-backed streaming dedup of training data")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    params, opt_state = init_train_state(model, opt_cfg,
+                                         jax.random.key(args.seed))
+    n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                          seq_len=args.seq, seed=args.seed)
+
+    dedup_state = {"filter": None}
+    if args.dedup:
+        dcfg = DedupConfig(CuckooConfig.for_capacity(
+            max(args.steps * args.batch, 4096), hash_kind="fmix32"))
+        dedup_state["filter"] = dcfg.filter.init()
+        dedup_fn = jax.jit(lambda s, b: dedup_batch(dcfg, s, b))
+
+    def data_fn(step):
+        if cfg.frontend == "frames":
+            return make_frames_batch(data_cfg, step, cfg.d_model)
+        batch = make_batch(data_cfg, step)
+        if dedup_state["filter"] is not None:
+            dedup_state["filter"], batch, stats = dedup_fn(
+                dedup_state["filter"], batch)
+            if step % 20 == 0:
+                print(f"  dedup: {int(stats['duplicates'])} duplicate "
+                      f"sequences masked at step {step}")
+        return batch
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+
+    runner = TrainingRunner(train_step=step_fn, data_fn=data_fn,
+                            ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every)
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        params, opt_state, start = runner.resume(params, opt_state)
+        print(f"resumed from step {start}")
+    params, opt_state, monitor = runner.run(
+        params, opt_state, num_steps=args.steps, start_step=start)
+    print("straggler summary:", monitor.summary())
+
+
+if __name__ == "__main__":
+    main()

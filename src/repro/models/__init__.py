@@ -1,0 +1,3 @@
+"""Model zoo: composable blocks covering all 10 assigned architectures."""
+
+from .model import Model, build_model  # noqa: F401

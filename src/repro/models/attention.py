@@ -1,0 +1,343 @@
+"""Attention: GQA/MQA with RoPE, sliding windows, softcap, QK-norm, and MLA.
+
+Training/prefill use a double-chunked online-softmax attention (flash-style
+``lax.scan`` over query and KV chunks) so activation memory is bounded by
+``chunk_q x chunk_k`` regardless of sequence length — required for the 32k
+prefill shapes. Decode (q_len == 1) is a single masked einsum over the cache.
+
+Sliding-window layers pass ``window``; bidirectional encoders (HuBERT) pass
+``causal=False``. Gemma-2 style attention-logit softcapping and Chameleon
+QK-norm are supported inline.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense_apply, dense_init, rmsnorm_apply, rmsnorm_init, softcap
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """bool[..., Q, K] allowed-attention mask from absolute positions."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    return m
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, attn_softcap=None,
+                    q_offset=0, chunk_q=512, chunk_k=1024, scale=None):
+    """Online-softmax attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KVH, D] with H % KVH == 0.
+    Returns [B, Sq, H, D]. Memory: O(chunk_q * chunk_k) scores per step.
+    """
+    B, Sq0, H, D = q.shape
+    Sk0, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]            # may differ from D (MLA: qk 192, v 128)
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    chunk_q = min(chunk_q, Sq0)
+    chunk_k = min(chunk_k, Sk0)
+    # pad to chunk multiples; padded keys are masked out, padded q rows are
+    # sliced off at the end.
+    pq = (-Sq0) % chunk_q
+    pk = (-Sk0) % chunk_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + pq, Sk0 + pk
+    nq = Sq // chunk_q
+    nk = Sk // chunk_k
+
+    # [B, KVH, g, nq, Cq, D] queries; [B, KVH, nk, Ck, D] keys/values.
+    from . import shard_ctx
+
+    qr = q.reshape(B, nq, chunk_q, KVH, g, D).transpose(0, 3, 4, 1, 2, 5)
+    kr = k.reshape(B, nk, chunk_k, KVH, D).transpose(0, 3, 1, 2, 4)
+    vr = v.reshape(B, nk, chunk_k, KVH, Dv).transpose(0, 3, 1, 2, 4)
+    # keep batch sharded over dp: without the hint the partitioner
+    # replicates score chunks when KVH doesn't divide a mesh axis
+    qr = shard_ctx.hint_batch_leading(qr)
+    kr = shard_ctx.hint_batch_leading(kr)
+    vr = shard_ctx.hint_batch_leading(vr)
+
+    def q_step(_, qi):
+        qc, qpos = qi     # [B, KVH, g, Cq, D], [Cq]
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kc, vc, kpos = ki
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            s = softcap(s, attn_softcap) if attn_softcap else s
+            allowed = _mask(qpos, kpos, causal=causal, window=window)
+            allowed &= (kpos < Sk0)[..., None, :]   # padded keys
+            s = jnp.where(allowed, s, NEG_INF)
+            # clamp the running max so fully-masked lanes give
+            # exp(NEG_INF - clamp) == 0 — avoids materializing an extra
+            # score-sized bool mask + multiply per step (§Perf qwen iter 2)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.maximum(m_new, NEG_INF * 1e-10)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.minimum(m - m_new, 0.0))
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        kpos_all = jnp.arange(Sk).reshape(nk, chunk_k)
+        acc0 = jnp.zeros((B, KVH, g, chunk_q, Dv), jnp.float32)
+        m0 = jnp.full((B, KVH, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, g, chunk_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kr.transpose(2, 0, 1, 3, 4), vr.transpose(2, 0, 1, 3, 4),
+             kpos_all))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, (out, qpos)
+
+    qpos_all = q_offset + jnp.arange(Sq).reshape(nq, chunk_q)
+    _, (out, _) = jax.lax.scan(
+        q_step, None, (qr.transpose(3, 0, 1, 2, 4, 5), qpos_all))
+    # out: [nq, B, KVH, g, Cq, Dv] -> [B, nq, Cq, KVH, g, Dv] -> [B, Sq, H, Dv]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dv)
+    return out[:, :Sq0]
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None,
+                     attn_softcap=None, scale=None):
+    """Single-token attention over a (padded) cache.
+
+    q: [B, 1, H, D]; k_cache/v_cache: [B, S, KVH, D]; cur_len: int32[] —
+    number of valid cache positions *including* the new token.
+    """
+    B, _, H, D = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    g = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qr = q.reshape(B, KVH, g, D)
+    # bf16 operands + f32 accumulation: avoids materializing f32 copies of
+    # the cache (§Perf recurrentgemma iter 3 / MLA iter 2)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_softcap) if attn_softcap else s
+    pos = jnp.arange(S)
+    valid = pos < cur_len
+    if window is not None:
+        valid &= pos >= (cur_len - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [B, S, KVH, D] (S = window for SWA ring buffers)
+    v: jnp.ndarray
+
+
+def gqa_init(key, cfg, layer_cfg, dtype=jnp.bfloat16):
+    """cfg: ModelConfig; layer_cfg: dict(window=..., softcap=...)."""
+    d, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype=dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, KVH * hd, dtype=dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, KVH * hd, dtype=dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd)
+        p["knorm"] = rmsnorm_init(hd)
+    return p
+
+
+def gqa_apply(p, cfg, x, *, positions, window=None, cache: Optional[KVCache] = None,
+              cache_pos=None, causal=True, attn_softcap=None,
+              update_cache=False):
+    """Returns (out, new_cache | None).
+
+    Train/prefill: cache is None (or update_cache=True to build one).
+    Decode: x is [B, 1, d]; cache holds past KV; cache_pos = write index.
+    """
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_()
+    q = dense_apply(p["wq"], x).reshape(B, S, H, hd)
+    k = dense_apply(p["wk"], x).reshape(B, S, KVH, hd)
+    v = dense_apply(p["wv"], x).reshape(B, S, KVH, hd)
+    if "qnorm" in p:
+        q = rmsnorm_apply(p["qnorm"], q)
+        k = rmsnorm_apply(p["knorm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and S == 1:
+        # decode: append to cache (ring-buffer write for SWA layers)
+        Sc = cache.k.shape[1]
+        write = cache_pos % Sc if window is not None else cache_pos
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, write, 0, 0))
+        new_cache = KVCache(kc, vc)
+        if window is not None:
+            # ring buffer: all Sc slots valid once cache_pos >= Sc; masking by
+            # recency is positional — use cur_len=min(pos+1, Sc), window=None
+            cur = jnp.minimum(cache_pos + 1, Sc)
+            out = decode_attention(q, kc, vc, cur, window=None,
+                                   attn_softcap=attn_softcap)
+        else:
+            out = decode_attention(q, kc, vc, cache_pos + 1, window=None,
+                                   attn_softcap=attn_softcap)
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              attn_softcap=attn_softcap,
+                              chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+        if update_cache:
+            if window is not None and k.shape[1] >= window:
+                # SWA ring buffer: token t lives at slot t % window, so roll
+                # the kept tail to align the decode-time write phase.
+                shift = k.shape[1] % window
+                new_cache = KVCache(
+                    jnp.roll(k[:, -window:], shift, axis=1).astype(jnp.bfloat16),
+                    jnp.roll(v[:, -window:], shift, axis=1).astype(jnp.bfloat16))
+            else:
+                new_cache = KVCache(k.astype(jnp.bfloat16),
+                                    v.astype(jnp.bfloat16))
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    return dense_apply(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # [B, S, kv_lora_rank]   compressed latent
+    k_rope: jnp.ndarray   # [B, S, qk_rope_dim]    shared rope key
+
+
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    H = cfg.num_heads
+    rq, rkv = cfg.mla_q_lora_rank, cfg.mla_kv_lora_rank
+    dn, dr, dv = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": dense_init(ks[0], d, rq, dtype=dtype),
+        "q_norm": rmsnorm_init(rq),
+        "wuq": dense_init(ks[1], rq, H * (dn + dr), dtype=dtype),
+        "wdkv": dense_init(ks[2], d, rkv, dtype=dtype),
+        "kv_norm": rmsnorm_init(rkv),
+        "wkr": dense_init(ks[3], d, dr, dtype=dtype),
+        "wuk": dense_init(ks[4], rkv, H * dn, dtype=dtype),
+        "wuv": dense_init(ks[5], rkv, H * dv, dtype=dtype),
+        "wo": dense_init(ks[6], H * dv, d, dtype=dtype),
+    }
+
+
+def mla_apply(p, cfg, x, *, positions, cache: Optional[MLACache] = None,
+              cache_pos=None, update_cache=False):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim
+
+    q = dense_apply(p["wuq"], rmsnorm_apply(p["q_norm"],
+                                            dense_apply(p["wdq"], x)))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm_apply(p["kv_norm"], dense_apply(p["wdkv"], x))  # [B,S,rkv]
+    k_rope = apply_rope(dense_apply(p["wkr"], x)[:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]        # [B,S,dr]
+
+    new_cache = None
+    if cache is not None and S == 1:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache_pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache_pos, 0))
+        new_cache = MLACache(c_kv, k_rope)
+    elif update_cache:
+        new_cache = MLACache(c_kv.astype(jnp.bfloat16),
+                             k_rope.astype(jnp.bfloat16))
+
+    scale = 1.0 / np.sqrt(dn + dr)
+    if cache is not None and S == 1:
+        if cfg.mla_absorb:
+            # Absorbed decode (§Perf iteration, DeepSeek-V2's own serving
+            # form): fold W_uk into q and W_uv into the output projection so
+            # attention runs in the rank-rkv latent space. The naive path
+            # re-expands the ENTIRE cached latent to per-head K/V every
+            # step: 2*2*S*rkv*(H*dn) flops/layer vs 4*H*S*rkv absorbed —
+            # ~dn x fewer (128x here).
+            rkv = cfg.mla_kv_lora_rank
+            f32 = jnp.float32
+            wuk = p["wuk"]["w"].reshape(rkv, H, dn)
+            # bf16 operands + f32 accumulation: materializing f32 copies of
+            # the [B, S, rkv] cache was 75% of this cell's HBM traffic
+            # (§Perf iteration 2).
+            q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk,
+                               preferred_element_type=f32)       # [B,H,rkv]
+            s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_kv.dtype), c_kv,
+                            preferred_element_type=f32)
+                 + jnp.einsum("bhp,bsp->bhs", q_rope[:, 0], k_rope,
+                              preferred_element_type=f32)) * scale
+            Sk = c_kv.shape[1]
+            valid = jnp.arange(Sk) < (cache_pos + 1)
+            s = jnp.where(valid[None, None, :], s, NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+            ctx = jnp.einsum("bhs,bsr->bhr", pr, c_kv,
+                             preferred_element_type=f32)         # [B,H,rkv]
+            wuv = p["wuv"]["w"].reshape(rkv, H, dv)
+            out = jnp.einsum("bhr,rhv->bhv", ctx.astype(wuv.dtype), wuv,
+                             preferred_element_type=f32)[:, None]
+        else:
+            # naive decode: expand cached latents to per-head K/V (baseline)
+            Sk = c_kv.shape[1]
+            k_nope = dense_apply(p["wuk"], c_kv).reshape(B, Sk, H, dn)
+            vfull = dense_apply(p["wuv"], c_kv).reshape(B, Sk, H, dv)
+            k = jnp.concatenate(
+                [k_nope,
+                 jnp.broadcast_to(k_rope[:, :, None, :], (B, Sk, H, dr))],
+                axis=-1)
+            qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = decode_attention(qfull, k, vfull, cache_pos + 1,
+                                   scale=scale)
+    else:
+        # train/prefill: expanded form (the einsum order is compute-optimal
+        # when every position is a query)
+        Sk = c_kv.shape[1]
+        k_nope = dense_apply(p["wuk"], c_kv).reshape(B, Sk, H, dn)
+        vfull = dense_apply(p["wuv"], c_kv).reshape(B, Sk, H, dv)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :], (B, Sk, H, dr))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = flash_attention(qfull, k, vfull, causal=True, scale=scale,
+                              chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+    out = out.reshape(B, S, H * dv).astype(x.dtype)
+    return dense_apply(p["wo"], out), new_cache

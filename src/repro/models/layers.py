@@ -1,0 +1,138 @@
+"""Shared model layers: norms, GLU MLPs, embeddings, RoPE, softcap.
+
+Plain functional modules: ``<layer>_init(key, ...) -> params`` and
+``<layer>_apply(params, x, ...)``. Params are nested dicts of arrays;
+weights default to bf16 with fp32 norm scales (production mixed precision).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, in_dim, out_dim, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, *, dtype=jnp.bfloat16, bias=False,
+               scale=None):
+    p = {"w": _dense_init(key, in_dim, out_dim, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim):
+    return {"scale": jnp.zeros((dim,), jnp.float32)}  # (1 + scale) * x
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(dt)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_init(key, d_model, d_ff, *, act="silu", gated=True, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act="silu"):
+    up = dense_apply(p["up"], x)
+    if "gate" in p:
+        up = _ACTS[act](dense_apply(p["gate"], x)) * up
+    else:
+        up = _ACTS[act](up)
+    return dense_apply(p["down"], up)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 1.0).astype(dtype)}
+
+
+def embed_apply(p, tokens):
+    return p["table"][tokens]
+
+
+def embed_logits(p, x, *, scale=None):
+    """Tied-readout logits (fp32 accumulate)."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        p["table"].astype(jnp.float32))
+    if scale is not None:
+        logits = logits * scale
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                           # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None):
+    """Mean next-token CE; logits fp32 [..., V], labels int32 [...]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,183 @@
+"""Model facade: init / loss / prefill / decode for every assigned arch."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import transformer as T
+from .layers import (
+    cross_entropy_loss,
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    embed_logits,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softcap,
+)
+
+
+class Model:
+    """Functional model: all methods are pure and jit/pjit-compatible."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: Dict[str, Any] = {}
+        if cfg.frontend != "frames":
+            p["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model)
+        p["stack"] = T.stack_init(ks[1], cfg)
+        p["final_norm"] = rmsnorm_init(cfg.d_model)
+        if not cfg.tie_embeddings or cfg.frontend == "frames":
+            p["head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                                   dtype=jnp.bfloat16)
+        if cfg.mtp_heads:
+            kinds = cfg.layer_kinds()
+            p["mtp"] = {
+                "norm": rmsnorm_init(cfg.d_model),
+                "block": T.block_init(ks[3], cfg, kinds[-1]),
+            }
+        return p
+
+    # -- shared pieces ----------------------------------------------------
+    def _embed(self, p, batch):
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            x = batch["frames"].astype(jnp.bfloat16)
+        else:
+            x = embed_apply(p["embed"], batch["tokens"])
+            if cfg.embed_scale:
+                x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        return x
+
+    def _logits(self, p, x):
+        cfg = self.cfg
+        x = rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        if "head" in p:
+            logits = dense_apply(p["head"], x).astype(jnp.float32)
+        else:
+            logits = embed_logits(p["embed"], x)
+        return softcap(logits, cfg.final_softcap)
+
+    # -- training forward + loss -------------------------------------------
+    def forward(self, p, batch, *, remat: bool = True) -> jnp.ndarray:
+        cfg = self.cfg
+        x = self._embed(p, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = T.stack_apply(p["stack"], cfg, x, positions=positions,
+                          remat=remat)
+        return x
+
+    def _chunked_ce(self, p, x, labels, mask=None) -> jnp.ndarray:
+        """Seq-chunked CE: never materializes [B, S, V] fp32 logits.
+
+        The readout chunk is rematted, so backward recomputes each chunk's
+        logits from (x_chunk, embed) — residency is one [B, c, V] slab.
+        """
+        cfg = self.cfg
+        B, S = labels.shape
+        c = min(cfg.loss_chunk, S)
+        while S % c:
+            c -= 1
+        nc = S // c
+
+        def chunk(xc, yc, mc):
+            logits = self._logits(p, xc)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+            nll = (logz - gold) * mc
+            return jnp.sum(nll), jnp.sum(mc)
+
+        chunk = jax.checkpoint(chunk)
+
+        def body(carry, inp):
+            tot, cnt = carry
+            s, n = chunk(*inp)
+            return (tot + s, cnt + n), None
+
+        xs = (x.reshape(B, nc, c, -1).transpose(1, 0, 2, 3),
+              labels.reshape(B, nc, c).transpose(1, 0, 2),
+              (jnp.ones((B, S), jnp.float32) if mask is None
+               else mask.astype(jnp.float32)).reshape(B, nc, c)
+              .transpose(1, 0, 2))
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    def loss(self, p, batch, *, remat: bool = True) -> jnp.ndarray:
+        """batch: tokens [B, S+1] (causal LM) or frames+labels (encoder)."""
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            x = self.forward(p, batch, remat=remat)
+            return self._chunked_ce(p, x, batch["labels"], batch.get("mask"))
+        tokens = batch["tokens"]
+        inp = {"tokens": tokens[:, :-1]}
+        labels = tokens[:, 1:]
+        mask = batch.get("mask")
+        if mask is not None and mask.ndim == 1:  # per-sequence dedup mask
+            mask = jnp.broadcast_to(mask[:, None], labels.shape)
+        x = self.forward(p, inp, remat=remat)
+        total = self._chunked_ce(p, x, labels, mask)
+        if cfg.mtp_heads and "mtp" in p:
+            # Multi-token prediction (DeepSeek-V3 style, simplified): one
+            # extra block on the trunk output predicts token t+2.
+            B, S = labels.shape
+            pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+            h, _ = T.block_apply(p["mtp"]["block"], cfg,
+                                 cfg.layer_kinds()[-1],
+                                 rmsnorm_apply(p["mtp"]["norm"], x),
+                                 positions=pos)
+            total = total + 0.1 * self._chunked_ce(
+                p, h[:, :-1], labels[:, 1:])
+        return total
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, p, batch) -> Tuple[jnp.ndarray, Any]:
+        """Full-sequence forward building caches.
+
+        Returns (next-token logits [B, V], caches).
+        """
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            raise ValueError("encoder-only arch has no autoregressive serve")
+        x = self._embed(p, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, caches = T.stack_prefill(p["stack"], cfg, x, positions=positions)
+        logits = self._logits(p, x[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(self, p, token, caches, pos):
+        """token: int32[B]; pos: int32[] absolute position of this token."""
+        cfg = self.cfg
+        x = embed_apply(p["embed"], token[:, None])
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+        x, caches = T.stack_decode(p["stack"], cfg, x, caches,
+                                   positions=positions, cache_pos=pos)
+        logits = self._logits(p, x)[:, 0]
+        return logits, caches
+
+    def init_caches(self, batch: int, max_len: int):
+        return T.init_caches(self.cfg, batch, max_len)
+
+    # -- encoder-only forward (hubert) ------------------------------------
+    def encode(self, p, frames) -> jnp.ndarray:
+        x = self.forward(p, {"frames": frames}, remat=False)
+        return self._logits(p, x)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = a ** (c * r_t),  a = sigmoid(Lambda)  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over time (the linear
+recurrence h_t = a_t h_{t-1} + b_t is associative); decode is a single step.
+The full recurrent block is Griffin's: parallel (gelu gate) x (conv1d ->
+RG-LRU) branches merged by an output projection.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_apply, dense_init
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jnp.ndarray      # [B, W] recurrent state
+    conv: jnp.ndarray   # [B, conv_w - 1, W] conv window
+
+
+def rglru_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    W = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a in (0.9, 0.999) (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (W,), jnp.float32, 2.2, 6.9)
+    return {
+        "gate_proj": dense_init(ks[1], d, W, dtype=dtype),
+        "x_proj": dense_init(ks[2], d, W, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, W),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "wa": dense_init(ks[4], W, W, dtype=dtype, bias=True),
+        "wx": dense_init(ks[5], W, W, dtype=dtype, bias=True),
+        "lambda": lam,
+        "out_proj": dense_init(jax.random.fold_in(key, 7), W, d, dtype=dtype),
+    }
+
+
+def _rglru_scan(x, a_gate, i_gate, lam, h0):
+    """x, gates: [B, S, W] fp32. h0: [B, W]. Returns (y [B,S,W], h_last)."""
+    log_a_max = jnp.log(jax.nn.sigmoid(lam))            # [W], < 0
+    log_a = _C * a_gate * log_a_max                     # [B,S,W]
+    a = jnp.exp(log_a)
+    gated_x = i_gate * x
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated_x
+
+    # fold h0 into the first step: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_apply(p, cfg, x, *, cache: RGLRUCache | None = None,
+                update_cache: bool = False):
+    """x: [B, S, d] -> (y, cache'). S==1 + cache = decode."""
+    B, S, d = x.shape
+    W = cfg.rglru_width or d
+    Wc = cfg.conv1d_width
+
+    gate = jax.nn.gelu(dense_apply(p["gate_proj"], x))          # branch 1
+    xb = dense_apply(p["x_proj"], x)                            # branch 2
+
+    new_cache = None
+    if cache is not None and S == 1:
+        window = jnp.concatenate([cache.conv, xb], axis=1)      # [B, Wc, W]
+        conv = jnp.sum(window * p["conv_w"], axis=1, keepdims=True) \
+            + p["conv_b"]
+        cf = conv.astype(jnp.float32)
+        r = jax.nn.sigmoid(dense_apply(p["wa"], conv).astype(jnp.float32))
+        i = jax.nn.sigmoid(dense_apply(p["wx"], conv).astype(jnp.float32))
+        log_a = _C * r * jnp.log(jax.nn.sigmoid(p["lambda"]))
+        a = jnp.exp(log_a)
+        h = a[:, 0] * cache.h + (jnp.sqrt(jnp.maximum(1 - jnp.square(a[:, 0]),
+                                                      1e-12))
+                                 * (i[:, 0] * cf[:, 0]))
+        y = h[:, None]
+        new_cache = RGLRUCache(h, window[:, 1:])
+    else:
+        pads = jnp.pad(xb, ((0, 0), (Wc - 1, 0), (0, 0)))
+        conv = sum(pads[:, j:j + S] * p["conv_w"][j] for j in range(Wc)) \
+            + p["conv_b"]
+        r = jax.nn.sigmoid(dense_apply(p["wa"], conv).astype(jnp.float32))
+        i = jax.nn.sigmoid(dense_apply(p["wx"], conv).astype(jnp.float32))
+        h0 = (cache.h if cache is not None
+              else jnp.zeros((B, W), jnp.float32))
+        y, h_last = _rglru_scan(conv.astype(jnp.float32), r, i,
+                                p["lambda"], h0)
+        if update_cache:
+            keep = xb[:, -(Wc - 1):] if S >= Wc - 1 else \
+                jnp.pad(xb, ((0, 0), (Wc - 1 - S, 0), (0, 0)))
+            new_cache = RGLRUCache(h_last, keep.astype(jnp.bfloat16))
+
+    out = (y.astype(x.dtype) * gate)
+    return dense_apply(p["out_proj"], out), new_cache

@@ -1,0 +1,38 @@
+"""Sharding-hint context for model internals.
+
+The SPMD partitioner occasionally replicates large intermediates when no
+mesh axis divides a tensor dim (e.g. qwen's 20 KV heads on a 16x16 mesh
+replicated the attention scores across all devices — §Perf qwen iteration).
+Model code calls :func:`hint` at such points; the launcher installs the
+mesh's data-parallel axis names via :func:`set_dp_axes` (a no-op context by
+default, so library users are unaffected).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_dp_axes(axes: Optional[Tuple[str, ...]]):
+    global _DP_AXES
+    _DP_AXES = tuple(axes) if axes else None
+
+
+def dp_axes() -> Optional[Tuple[str, ...]]:
+    return _DP_AXES
+
+
+def hint_batch_leading(x):
+    """Constrain dim 0 to the data-parallel axes (rest unconstrained)."""
+    if _DP_AXES is None:
+        return x
+    try:
+        spec = P(_DP_AXES, *(None,) * (x.ndim - 1))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # no mesh context (plain jit on local devices)
+        return x

@@ -1,0 +1,165 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-parallel form.
+
+Follows the minimal SSD reference of Dao & Gu (arXiv:2405.21060): scalar
+per-head decay ``a``, shared B/C projections (like MQA), short causal conv on
+the (x, B, C) stream, chunked algorithm =
+
+  1. intra-chunk (quadratic in chunk length L, "attention-like"):
+     ``Y_diag = (C Bᵀ ⊙ decay) X``
+  2. chunk states + inter-chunk linear recurrence over chunk index
+     (``lax.scan`` over n_chunks — tiny sequential dimension)
+  3. state-to-output correction ``Y_off = C h_prev ⊙ decay_out``
+
+Decode is the O(1) recurrent step on the [B, H, P, N] state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # [B, conv_w - 1, conv_dim]  rolling conv window
+    state: jnp.ndarray   # [B, H, P, N]               SSM state
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv1d_width, conv_dim),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),                # a = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in),
+        "out_proj": dense_init(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width W: xBC [B, S, C]."""
+    W = w.shape[0]
+    pads = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(p, cfg, x, *, cache: SSMCache | None = None,
+              update_cache: bool = False):
+    """x: [B, S, d]. Returns (y, new_cache | None). S==1 + cache = decode."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    L = min(cfg.ssm_chunk, S)
+    while S % L:  # largest divisor of S not exceeding the chunk size
+        L -= 1
+
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["A_log"])                                      # [H]
+
+    xBC = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    new_cache = None
+    if cache is not None and S == 1:
+        # decode: conv over rolling window, then one recurrent state step
+        W = cfg.conv1d_width
+        window = jnp.concatenate([cache.conv, xBC], axis=1)       # [B, W, C]
+        conv = jax.nn.silu(jnp.sum(window * p["conv_w"], axis=1,
+                                   keepdims=True) + p["conv_b"])
+        xs_c, B_c, C_c = jnp.split(conv, [d_in, d_in + N], axis=-1)
+        xh = xs_c.reshape(B, 1, H, P)[:, 0]                        # [B,H,P]
+        dA = jnp.exp(dt[:, 0] * a)                                 # [B,H]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         B_c[:, 0].astype(jnp.float32),
+                         xh.astype(jnp.float32))
+        state = cache.state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, C_c[:, 0].astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, d_in)
+        new_cache = SSMCache(window[:, 1:], state)
+    else:
+        conv = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xs_c, B_c, C_c = jnp.split(conv, [d_in, d_in + N], axis=-1)
+        nc = S // L
+        # chunk-major xs for a scan over chunks: only ONE chunk's quadratic
+        # [B, H, L, L] decay matrix is ever live (the all-chunks form
+        # materializes B*S*H*L fp32 — 100s of GiB at train_4k scale).
+        # Keep scanned xs in bf16; fp32 casts happen inside the chunk body.
+        xh = xs_c.reshape(B, nc, L, H, P)
+        Bb = B_c.reshape(B, nc, L, N)
+        Cb = C_c.reshape(B, nc, L, N)
+        dtb = dt.reshape(B, nc, L, H)
+        dA = dtb * a                                               # [B,nc,L,H]
+
+        init = (cache.state if cache is not None
+                else jnp.zeros((B, H, P, N), jnp.float32))
+
+        def chunk_step(h, inp):
+            xh_c, Bb_c, Cb_c, dt_c, dA_c = inp                    # [B,L,...]
+            xh_c = xh_c.astype(jnp.float32)
+            Bb_c = Bb_c.astype(jnp.float32)
+            Cb_c = Cb_c.astype(jnp.float32)
+            # 1. intra-chunk (quadratic in L)
+            Lmat = jnp.exp(_segsum(dA_c.transpose(0, 2, 1)))      # [B,H,L,L]
+            scores = jnp.einsum("bln,bmn->blm", Cb_c, Bb_c)       # [B,L,L]
+            y = jnp.einsum("bhlm,blm,bmh,bmhp->blhp",
+                           Lmat, scores, dt_c, xh_c)
+            # 2. contribution of the incoming state
+            decay_out = jnp.exp(jnp.cumsum(dA_c, axis=1))         # [B,L,H]
+            y = y + jnp.einsum("bln,bhpn,blh->blhp", Cb_c, h, decay_out)
+            # 3. state update
+            decay_states = jnp.exp(
+                jnp.cumsum(dA_c[:, ::-1], axis=1)[:, ::-1] - dA_c)
+            states = jnp.einsum("blh,blh,bln,blhp->bhpn",
+                                decay_states, dt_c, Bb_c, xh_c)
+            chunk_decay = jnp.exp(jnp.sum(dA_c, axis=1))          # [B,H]
+            h_new = h * chunk_decay[..., None, None] + states
+            return h_new, y.astype(jnp.bfloat16)
+
+        # remat the chunk body: the backward pass otherwise saves every
+        # chunk's [B, H, L, L] decay matrix (terabytes at train_4k scale).
+        final_state, Y = jax.lax.scan(
+            jax.checkpoint(chunk_step), init,
+            (xh.transpose(1, 0, 2, 3, 4), Bb.transpose(1, 0, 2, 3),
+             Cb.transpose(1, 0, 2, 3), dtb.transpose(1, 0, 2, 3),
+             dA.transpose(1, 0, 2, 3)))
+        Y = Y.transpose(1, 0, 2, 3, 4)                             # [B,nc,L,H,P]
+        y = (Y + (p["D"][None, None, None, :, None]
+                  * xh.astype(jnp.float32)).astype(jnp.bfloat16)
+             ).reshape(B, S, d_in)
+        if update_cache:
+            W = cfg.conv1d_width
+            new_cache = SSMCache(xBC[:, -(W - 1):].astype(jnp.bfloat16)
+                                 if S >= W - 1 else
+                                 jnp.pad(xBC, ((0, 0), (W - 1 - S, 0), (0, 0))),
+                                 final_state)
+
+    # gated RMSNorm + output projection (Mamba-2 block epilogue)
+    y = rmsnorm_apply(p["norm"], y.astype(x.dtype) * jax.nn.silu(z))
+    return dense_apply(p["out_proj"], y), new_cache

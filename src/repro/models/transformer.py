@@ -1,0 +1,227 @@
+"""Block assembly + layer stacks.
+
+A *block* = pre-norm mixer (attention / MLA / SSD / RG-LRU) + pre-norm
+FFN (dense GLU or MoE), both residual. Layers are grouped into *segments*
+(ModelConfig.segments()): each segment is a repeating period of identical
+layer kinds, scanned with ``lax.scan`` over stacked parameters — one period
+is traced/compiled once regardless of depth (compile-time and HLO-size
+discipline for the 61-layer 671B config), and remat is applied per period.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import rglru as R
+from . import ssm as S
+from .layers import mlp_apply, mlp_init, rmsnorm_apply, rmsnorm_init
+
+
+def _mixer_kind(kind: str) -> str:
+    return kind.split("+")[0]
+
+
+def _ffn_kind(kind: str) -> str:
+    parts = kind.split("+")
+    return parts[1] if len(parts) > 1 else "none"
+
+
+def block_init(key, cfg, kind: str):
+    mixer, ffn = _mixer_kind(kind), _ffn_kind(kind)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model)}
+    if mixer in ("attn", "attn_local"):
+        p["mixer"] = A.gqa_init(k1, cfg, {})
+    elif mixer == "mla":
+        p["mixer"] = A.mla_init(k1, cfg)
+    elif mixer == "ssm":
+        p["mixer"] = S.ssm_init(k1, cfg)
+    elif mixer == "rglru":
+        p["mixer"] = R.rglru_init(k1, cfg)
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.act)
+    elif ffn == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = M.moe_init(k2, cfg)
+    return p
+
+
+def block_apply(p, cfg, kind: str, x, *, positions, cache=None,
+                cache_pos=None, update_cache=False):
+    mixer, ffn = _mixer_kind(kind), _ffn_kind(kind)
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    kw = dict(cache=cache, cache_pos=cache_pos, update_cache=update_cache)
+    if mixer == "attn":
+        out, new_cache = A.gqa_apply(
+            p["mixer"], cfg, h, positions=positions, window=None,
+            causal=cfg.causal, attn_softcap=cfg.attn_softcap, **kw)
+    elif mixer == "attn_local":
+        out, new_cache = A.gqa_apply(
+            p["mixer"], cfg, h, positions=positions,
+            window=cfg.sliding_window, causal=cfg.causal,
+            attn_softcap=cfg.attn_softcap, **kw)
+    elif mixer == "mla":
+        out, new_cache = A.mla_apply(p["mixer"], cfg, h, positions=positions,
+                                     **kw)
+    elif mixer == "ssm":
+        out, new_cache = S.ssm_apply(p["mixer"], cfg, h, cache=cache,
+                                     update_cache=update_cache)
+    elif mixer == "rglru":
+        out, new_cache = R.rglru_apply(p["mixer"], cfg, h, cache=cache,
+                                       update_cache=update_cache)
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    x = x + out
+
+    if ffn == "mlp":
+        x = x + mlp_apply(p["ffn"], rmsnorm_apply(p["ln2"], x, cfg.norm_eps),
+                          act=cfg.act)
+    elif ffn == "moe":
+        x = x + M.moe_apply(p["ffn"], cfg,
+                            rmsnorm_apply(p["ln2"], x, cfg.norm_eps),
+                            capacity_factor=cfg.capacity_factor)
+    return x, new_cache
+
+
+def _empty_cache(cfg, kind: str, batch: int, max_len: int):
+    """ShapeDtype-complete empty cache for one layer (decode lowering)."""
+    mixer = _mixer_kind(kind)
+    hd = cfg.head_dim_()
+    if mixer == "attn":
+        shape = (batch, max_len, cfg.num_kv_heads, hd)
+        return A.KVCache(jnp.zeros(shape, jnp.bfloat16),
+                         jnp.zeros(shape, jnp.bfloat16))
+    if mixer == "attn_local":
+        w = min(cfg.sliding_window, max_len)
+        shape = (batch, w, cfg.num_kv_heads, hd)
+        return A.KVCache(jnp.zeros(shape, jnp.bfloat16),
+                         jnp.zeros(shape, jnp.bfloat16))
+    if mixer == "mla":
+        return A.MLACache(
+            jnp.zeros((batch, max_len, cfg.mla_kv_lora_rank), jnp.bfloat16),
+            jnp.zeros((batch, max_len, cfg.mla_qk_rope_dim), jnp.bfloat16))
+    if mixer == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        conv_dim = d_in + 2 * cfg.ssm_state
+        return S.SSMCache(
+            jnp.zeros((batch, cfg.conv1d_width - 1, conv_dim), jnp.bfloat16),
+            jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32))
+    if mixer == "rglru":
+        W = cfg.rglru_width or cfg.d_model
+        return R.RGLRUCache(
+            jnp.zeros((batch, W), jnp.float32),
+            jnp.zeros((batch, cfg.conv1d_width - 1, W), jnp.bfloat16))
+    raise ValueError(mixer)  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# Stack: segments of scanned periods
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg):
+    """Returns a list of segment params; each leaf has leading dim = reps."""
+    segs = cfg.segments()
+    out = []
+    for si, (period, reps) in enumerate(segs):
+        kseg = jax.random.fold_in(key, si)
+
+        def one_rep(k, _period=period):
+            ks = jax.random.split(k, len(_period))
+            return [block_init(ks[j], cfg, kind)
+                    for j, kind in enumerate(_period)]
+
+        out.append(jax.vmap(one_rep)(jax.random.split(kseg, reps)))
+    return out
+
+
+_REMAT_POLICIES = {
+    # "full": recompute everything in the backward pass — ~8ND total FLOPs
+    # instead of 6ND, but per-layer activation residency drops to the scan
+    # carry only. The memory-lean default for the big configs.
+    "full": None,
+    # "dots": save matmul outputs (XLA's dots_with_no_batch_dims) — faster
+    # backward, much higher residency. A §Perf knob for the small configs.
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def stack_apply(params, cfg, x, *, positions, remat: bool = True):
+    """Train/prefill forward through all segments (no caches)."""
+    for (period, reps), seg_params in zip(cfg.segments(), params):
+
+        def seg_step(h, layer_params, _period=period):
+            for j, kind in enumerate(_period):
+                h, _ = block_apply(layer_params[j], cfg, kind, h,
+                                   positions=positions)
+            return h, None
+
+        if remat and cfg.remat_policy != "none":
+            policy_name = _REMAT_POLICIES.get(cfg.remat_policy)
+            policy = (getattr(jax.checkpoint_policies, policy_name)
+                      if policy_name else None)
+            seg_step = jax.checkpoint(seg_step, policy=policy)
+        x, _ = jax.lax.scan(seg_step, x, seg_params)
+    return x
+
+
+def stack_prefill(params, cfg, x, *, positions):
+    """Forward + build per-layer caches. Returns (x, caches)."""
+    caches = []
+    for (period, reps), seg_params in zip(cfg.segments(), params):
+
+        def seg_step(h, layer_params, _period=period):
+            new = []
+            for j, kind in enumerate(_period):
+                h, c = block_apply(layer_params[j], cfg, kind, h,
+                                   positions=positions, update_cache=True)
+                new.append(c)
+            return h, tuple(new)
+
+        x, seg_caches = jax.lax.scan(seg_step, x, seg_params)
+        caches.append(seg_caches)
+    return x, caches
+
+
+def stack_decode(params, cfg, x, caches, *, positions, cache_pos):
+    """Single-token step updating caches. Returns (x, caches')."""
+    new_caches = []
+    for (period, reps), seg_params, seg_caches in zip(
+            cfg.segments(), params, caches):
+
+        def seg_step(h, inp, _period=period):
+            layer_params, layer_caches = inp
+            new = []
+            for j, kind in enumerate(_period):
+                h, c = block_apply(layer_params[j], cfg, kind, h,
+                                   positions=positions,
+                                   cache=layer_caches[j],
+                                   cache_pos=cache_pos)
+                new.append(c)
+            return h, tuple(new)
+
+        x, seg_new = jax.lax.scan(seg_step, x, (seg_params, seg_caches))
+        new_caches.append(seg_new)
+    return x, new_caches
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    """Empty decode caches matching stack_decode's expected structure."""
+    out = []
+    for period, reps in cfg.segments():
+        seg = []
+        for kind in period:
+            one = _empty_cache(cfg, kind, batch, max_len)
+            seg.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one))
+        out.append(tuple(seg))
+    return out

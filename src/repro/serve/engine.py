@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill + decode with prefix-cache reuse.
+
+Serving path used by examples/serve_with_prefix_filter.py and the decode
+shape cells of the dry-run. Static shapes throughout: the engine pads the
+request batch, allocates max_len caches up front, and steps decode under
+jit; the PrefixCache (cuckoo-filter-guarded) short-circuits prefill for
+previously-seen prompts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from .prefix_cache import PrefixCache
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch: int, max_len: int,
+                 prefix_cache_entries: int = 64):
+        if model.cfg.frontend == "frames":
+            raise ValueError("encoder-only arch has no autoregressive serve")
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.prefix_cache = PrefixCache(prefix_cache_entries)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _grow_caches(self, caches, prompt_len: int):
+        big = self.model.init_caches(self.batch, self.max_len)
+
+        def fill(dst, src):
+            return jax.lax.dynamic_update_slice(
+                dst.astype(src.dtype), src, (0,) * src.ndim)
+
+        return jax.tree.map(fill, big, caches)
+
+    def generate(self, prompts: np.ndarray, steps: int, *,
+                 greedy: bool = True, reuse_prefix: bool = True
+                 ) -> Tuple[np.ndarray, Dict]:
+        """prompts: int32[batch, prompt_len]. Returns (tokens, stats)."""
+        assert prompts.shape[0] == self.batch
+        prompt_len = prompts.shape[1]
+        assert prompt_len + steps <= self.max_len
+
+        cached = self.prefix_cache.lookup(prompts.reshape(-1)) \
+            if reuse_prefix else None
+        if cached is not None:
+            logits, caches = cached
+        else:
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompts, jnp.int32)})
+            caches = self._grow_caches(caches, prompt_len)
+            if reuse_prefix:
+                self.prefix_cache.insert(prompts.reshape(-1),
+                                         (logits, caches))
+
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for t in range(steps):
+            out.append(np.asarray(tok))
+            pos = jnp.asarray(prompt_len + t, jnp.int32)
+            logits, caches = self._decode(self.params, tok, caches, pos)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        tokens = np.stack(out, axis=1)
+        return tokens, dict(self.prefix_cache.stats)

@@ -1,0 +1,74 @@
+"""Prefix-cache admission guarded by the Cuckoo filter.
+
+Serving-side integration of the paper's technique: the KV prefix cache is
+expensive to probe (sharded, host-sized), so a per-host Cuckoo filter sits in
+front of it as an AMQ: a negative lookup ("this prefix hash was never
+cached") skips the probe entirely. Crucially, cache *eviction* must remove
+the key from the filter too — deletion support, the paper's headline
+capability vs Bloom filters, is what keeps the filter in sync with an LRU
+cache instead of rotting toward 100% false positives.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CuckooConfig, CuckooFilter
+from ..core.hashing import fmix32_py
+
+
+def prefix_key(tokens) -> int:
+    """Order-sensitive 64-bit hash of a token prefix (host-side)."""
+    h1, h2 = 0x9E3779B9, 0x85EBCA6B
+    for i, t in enumerate(np.asarray(tokens).tolist()):
+        h1 = fmix32_py(h1 ^ (t + i))
+        h2 = fmix32_py(h2 + (t ^ (i * 0x27D4EB2F)))
+    return (h2 << 32) | h1
+
+
+class PrefixCache:
+    """LRU prefix->cache-entry store with filter-guarded lookups."""
+
+    def __init__(self, capacity_entries: int, filter_capacity: int = 0):
+        self.capacity = capacity_entries
+        self.entries: "collections.OrderedDict[int, Any]" = \
+            collections.OrderedDict()
+        fcap = filter_capacity or capacity_entries * 4
+        self.filter = CuckooFilter(CuckooConfig.for_capacity(
+            fcap, load_factor=0.8, hash_kind="fmix32"))
+        self.stats = {"hits": 0, "misses": 0, "filtered": 0, "evictions": 0}
+
+    def _fkey(self, key: int):
+        return jnp.asarray(
+            [[key & 0xFFFFFFFF, (key >> 32) & 0xFFFFFFFF]], jnp.uint32)
+
+    def lookup(self, tokens) -> Optional[Any]:
+        key = prefix_key(tokens)
+        # AMQ front door: definite-negative skips the (expensive) probe.
+        if not bool(self.filter.query(self._fkey(key))[0]):
+            self.stats["filtered"] += 1
+            return None
+        entry = self.entries.get(key)
+        if entry is None:
+            self.stats["misses"] += 1  # filter false positive
+            return None
+        self.entries.move_to_end(key)
+        self.stats["hits"] += 1
+        return entry
+
+    def insert(self, tokens, entry: Any):
+        key = prefix_key(tokens)
+        if key in self.entries:
+            self.entries.move_to_end(key)
+            self.entries[key] = entry
+            return
+        while len(self.entries) >= self.capacity:
+            old_key, _ = self.entries.popitem(last=False)   # LRU eviction
+            self.filter.delete(self._fkey(old_key))          # keep AMQ in sync
+            self.stats["evictions"] += 1
+        self.entries[key] = entry
+        self.filter.insert(self._fkey(key))

@@ -1,0 +1,115 @@
+"""Fault tolerance + elasticity utilities (DESIGN.md §5).
+
+At 1000+ nodes the failure model is: a host dies mid-step, the job restarts
+on (possibly fewer) hosts, and training must resume bit-identically from the
+last complete checkpoint. Everything here is built around that:
+
+* ``TrainingRunner`` — checkpointed step loop with resume, per-step wall-time
+  tracking (straggler forensics persisted into checkpoint aux), and a failure
+  injection hook for tests.
+* ``remesh`` — re-places a train state onto a new (smaller/larger) mesh; with
+  microbatch accumulation the global batch is preserved under a shrunken
+  ``data`` axis (elastic scaling).
+* ``StragglerMonitor`` — flags steps slower than k·median; on a real cluster
+  this feeds host-replacement, here it records the evidence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from . import checkpoint as ckpt
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+
+    def record(self, step: int, dt: float):
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) >= 10:
+            med = float(np.median(hist))
+            if dt > self.threshold * med:
+                self.flagged.append(step)
+
+    def summary(self) -> Dict[str, Any]:
+        if not self.times:
+            return {}
+        return {
+            "median_s": float(np.median(self.times)),
+            "p99_s": float(np.percentile(self.times, 99)),
+            "straggler_steps": self.flagged[-20:],
+        }
+
+
+def remesh(state, old_mesh: Optional[Mesh], new_mesh: Mesh, spec_fn):
+    """Re-place a pytree onto a new mesh (elastic shrink/grow).
+
+    ``spec_fn(path, leaf) -> PartitionSpec`` decides placement per leaf. On a
+    real cluster this is a device_put across the new topology; semantics are
+    identical here.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(path, leaf)
+        out.append(jax.device_put(leaf, NamedSharding(new_mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class TrainingRunner:
+    """Checkpointed training loop with resume + failure injection."""
+
+    train_step: Callable  # (params, opt_state, batch) -> (p, o, metrics)
+    data_fn: Callable     # (step) -> batch   (stateless-resumable pipeline)
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    fail_at_step: Optional[int] = None  # test hook: raise mid-run
+
+    def run(self, params, opt_state, num_steps: int,
+            start_step: int = 0, log_every: int = 10,
+            log_fn: Callable[[str], None] = print):
+        monitor = StragglerMonitor()
+        step = start_step
+        while step < num_steps:
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = self.data_fn(step)
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.record(step, dt)
+            step += 1
+            if step % log_every == 0:
+                log_fn(f"step {step}: loss={float(metrics['loss']):.4f} "
+                       f"gnorm={float(metrics['grad_norm']):.3f} "
+                       f"lr={float(metrics['lr']):.2e} ({dt * 1e3:.0f} ms)")
+            if step % self.ckpt_every == 0 or step == num_steps:
+                ckpt.save(self.ckpt_dir, step,
+                          {"params": params, "opt": opt_state},
+                          aux={"straggler": monitor.summary(),
+                               "data_cursor": step})
+        return params, opt_state, monitor
+
+    def resume(self, params_template, opt_template):
+        """Restore the latest checkpoint into matching templates."""
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return params_template, opt_template, 0
+        state, step, aux = ckpt.restore(
+            self.ckpt_dir, {"params": params_template, "opt": opt_template})
+        return state["params"], state["opt"], step

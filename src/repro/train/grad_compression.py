@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §5).
+
+At 2+ pods the gradient all-reduce crosses the (slow) DCI once per step. The
+standard mitigation is compressing the cross-pod leg: blockwise int8 with
+**error feedback** (the quantization residual is carried into the next step,
+keeping the accumulated update unbiased — Seide et al. / 1-bit SGD lineage).
+
+Usage (train loop):
+    residual = zero_residual(grads)
+    q, residual = compress(grads, residual)     # int8 payload (+ scales)
+    q = jax.lax.pmean(q, "pod")                 # or psum on the wire
+    grads = decompress(q)
+
+The compressed payload is 4x smaller than fp32 (2x vs bf16); tests assert
+the error-feedback property (mean update error -> 0 over steps).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+class CompressedGrads(NamedTuple):
+    q: Any        # pytree of int8 [nblocks, _BLOCK]
+    scale: Any    # pytree of f32 [nblocks]
+
+
+def _quant_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[:, None], 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    n = 1
+    for d in shape:
+        n *= d
+    return (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n] \
+        .reshape(shape)
+
+
+def zero_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads, residual) -> Tuple[CompressedGrads, Any]:
+    """-> (compressed, new_residual). Error feedback: residual carries the
+    quantization error into the next step."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residual)
+    qs, scales, res = [], [], []
+    for g, r in zip(g_leaves, r_leaves):
+        x = g.astype(jnp.float32) + r
+        q, scale = _quant_leaf(x)
+        qs.append(q)
+        scales.append(scale)
+        res.append(x - _dequant_leaf(q, scale, g.shape))
+    return (CompressedGrads(treedef.unflatten(qs), treedef.unflatten(scales)),
+            treedef.unflatten(res))
+
+
+def decompress(c: CompressedGrads, grads_template) -> Any:
+    """Dequantize to f32 (optimizer input precision) — casting back down to
+    bf16 would break the error-feedback telescoping exactness."""
+    return jax.tree.map(
+        lambda q, s, g: _dequant_leaf(q, s, g.shape),
+        c.q, c.scale, grads_template)

@@ -1,0 +1,142 @@
+"""AdamW with optional int8-quantized moments + LR schedules.
+
+The int8 path (blockwise-scaled, à la 8-bit Adam) is what lets the 671B
+config fit 256 x 16 GB chips: m and v cost 1 byte/param instead of 4
+(EXPERIMENTS.md §Dry-run memory table). Quantization is blockwise symmetric
+(m) / blockwise max (v, non-negative) over flattened 256-element blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_state: bool = False   # int8 m/v (671B config)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# --- blockwise int8 quantization -------------------------------------------
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray        # int8[nblocks, _BLOCK]  (nblocks % 512 == 0)
+    scale: jnp.ndarray    # fp32[nblocks]
+    shape: Tuple[int, ...]  # static, carried on the type
+
+
+def _quantize(x: jnp.ndarray) -> QTensor:
+    shape = x.shape
+    flat = x.reshape(-1)
+    # pad so nblocks is a multiple of 512 — shardable over any production
+    # mesh axis combination (pod x data x model divides 512).
+    pad = (-flat.shape[0]) % (_BLOCK * 512)
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[:, None], 1e-12)
+                  ).astype(jnp.int8)
+    return QTensor(q, scale, shape)
+
+
+def _dequantize(t: QTensor) -> jnp.ndarray:
+    blocks = t.q.astype(jnp.float32) * t.scale[:, None]
+    n = int(np.prod(t.shape)) if t.shape else 1
+    return blocks.reshape(-1)[:n].reshape(t.shape)
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), t.shape),
+    lambda shape, xs: QTensor(xs[0], xs[1], shape))
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any   # pytree of fp32 arrays or QTensors
+    v: Any
+
+
+def adamw_init(cfg: AdamWConfig, params) -> AdamWState:
+    """v is stored in sqrt-domain when quantized: v = q^2. Squaring halves
+    the dynamic range the int8 grid must span — linear-domain int8 flushes
+    small v to 0 and the eps-divided update explodes (8-bit Adam lesson,
+    validated by test_quantized_optimizer_tracks_fp32)."""
+
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quantize(z) if cfg.quantize_state else z
+
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zero_like, params),
+                      jax.tree.map(zero_like, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        tree, jnp.zeros(()))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """-> (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _dequantize(m) if isinstance(m, QTensor) else m
+        vf = jnp.square(_dequantize(v)) if isinstance(v, QTensor) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        delta = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        if p.ndim > 1:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if isinstance(m, QTensor):
+            return new_p, _quantize(mf), _quantize(jnp.sqrt(vf))
+        return new_p, mf, vf
+
+    is_q = lambda x: isinstance(x, QTensor)
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = jax.tree.flatten(state.m, is_leaf=is_q)[0]
+    v_leaves = jax.tree.flatten(state.v, is_leaf=is_q)[0]
+    results = [upd(p, g, m, v) for p, g, m, v
+               in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_params = treedef.unflatten([r[0] for r in results])
+    new_m = treedef.unflatten([r[1] for r in results])
+    new_v = treedef.unflatten([r[2] for r in results])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,64 @@
+"""Training step factory: loss -> grads -> AdamW, with microbatch
+accumulation and pjit shardings supplied by the launcher.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With microbatches > 1 the global batch is split along axis 0 and
+    gradients are accumulated with a ``lax.scan`` (memory/throughput knob for
+    the biggest configs).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zero), micro)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, opt_cfg: AdamWConfig, key):
+    params = model.init(key)
+    return params, adamw_init(opt_cfg, params)

@@ -1,0 +1,88 @@
+"""Subprocess worker: sharded-filter equivalence on an 8-device CPU mesh.
+
+Run directly (tests/test_sharded_filter.py drives it):
+    XLA flags are set before jax import — 8 host devices.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import CuckooConfig, CuckooFilter, keys_from_numpy  # noqa: E402
+from repro.core.sharded_filter import (  # noqa: E402
+    ShardedCuckooConfig,
+    ShardedCuckooFilter,
+    shard_of,
+)
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((8,), ("data",))
+
+    cfg = ShardedCuckooConfig.for_capacity(
+        8 * 2048, num_shards=8, load_factor=0.9,
+        fp_bits=16, bucket_size=16, hash_kind="fmix32", policy="xor")
+    local_batch = 1024
+    filt = ShardedCuckooFilter(cfg, mesh, local_batch)
+
+    rng = np.random.default_rng(0)
+    raw = np.unique(rng.integers(0, 2**64, size=20000, dtype=np.uint64))
+    keys = jnp.asarray(keys_from_numpy(raw[: 8 * local_batch]))
+
+    ok, routed = filt.insert(keys)
+    ok, routed = np.asarray(ok), np.asarray(routed)
+    assert routed.mean() > 0.95, f"too much overflow: {1 - routed.mean()}"
+    assert ok[routed].mean() > 0.99, "insert failures at modest load"
+
+    # retry unrouted keys (fixed-capacity overflow) — must eventually land
+    retries = 0
+    pending = keys[~routed]
+    while pending.shape[0] and retries < 5:
+        pad = (-pending.shape[0]) % (8 * local_batch)
+        # pad by repeating (duplicates allowed; they just add copies)
+        batch = jnp.concatenate(
+            [pending, jnp.zeros((pad, 2), jnp.uint32)])[: 8 * local_batch]
+        ok2, routed2 = filt.insert(batch)
+        pending = batch[~np.asarray(routed2)]
+        retries += 1
+    assert pending.shape[0] == 0, "overflow keys never routed"
+
+    # query everything — no false negatives across the mesh
+    q, qrouted = filt.query(keys)
+    q, qrouted = np.asarray(q), np.asarray(qrouted)
+    assert qrouted[ok & routed].all()
+    assert q[ok & routed].all(), "sharded false negative"
+
+    # equivalence vs manually-routed single-device shards
+    dest = np.asarray(shard_of(cfg, keys))
+    single = [CuckooFilter(cfg.shard) for _ in range(8)]
+    for s in range(8):
+        sk = keys[dest == s]
+        if sk.shape[0]:
+            single[s].insert(sk)
+    got = np.zeros(len(keys), bool)
+    for s in range(8):
+        m = dest == s
+        if m.any():
+            got[m] = np.asarray(single[s].query(keys[m]))
+    # both views must agree on membership for keys inserted exactly once
+    inserted_once = ok & routed
+    assert (q[inserted_once] == got[inserted_once]).all() or \
+        got[inserted_once].all()
+
+    # deletion across the mesh
+    dok, drouted = filt.delete(keys)
+    dok, drouted = np.asarray(dok), np.asarray(drouted)
+    assert dok[inserted_once & drouted].mean() > 0.99
+    print("SHARDED_OK total_count", filt.total_count)
+
+
+if __name__ == "__main__":
+    main()

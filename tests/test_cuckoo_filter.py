@@ -1,0 +1,207 @@
+"""Behavioural invariants of the batch Cuckoo filter (paper Algs. 1-3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CuckooConfig,
+    CuckooFilter,
+    keys_from_numpy,
+    prepare_keys,
+)
+
+
+def make_keys(rng, n):
+    raw = rng.integers(0, 2**64, size=n, dtype=np.uint64)
+    return jnp.asarray(keys_from_numpy(np.unique(raw)[:n]))
+
+
+def signatures(cfg, keys):
+    """(fp, frozenset{i1,i2}) per key — identifies indistinguishable keys."""
+    tag, i1, i2 = prepare_keys(cfg, keys)
+    tag, i1, i2 = np.asarray(tag), np.asarray(i1), np.asarray(i2)
+    return [(int(t), frozenset((int(a), int(b)))) for t, a, b in zip(tag, i1, i2)]
+
+
+CONFIGS = [
+    CuckooConfig(num_buckets=256, fp_bits=16, bucket_size=16,
+                 policy="xor", eviction="bfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=256, fp_bits=16, bucket_size=16,
+                 policy="xor", eviction="dfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=300, fp_bits=16, bucket_size=16,
+                 policy="offset", eviction="bfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=300, fp_bits=16, bucket_size=16,
+                 policy="offset", eviction="dfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=512, fp_bits=8, bucket_size=8,
+                 policy="xor", eviction="bfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=128, fp_bits=32, bucket_size=4,
+                 policy="xor", eviction="dfs", hash_kind="xxhash64"),
+]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: f"{c.policy}-{c.eviction}-f{c.fp_bits}b{c.bucket_size}")
+def test_no_false_negatives_at_high_load(cfg):
+    rng = np.random.default_rng(42)
+    f = CuckooFilter(cfg)
+    n = int(cfg.num_slots * 0.9)
+    keys = make_keys(rng, n)
+    ok, _ = f.insert(keys)
+    ok = np.asarray(ok)
+    assert ok.mean() > 0.98, f"too many failures: {1 - ok.mean():.3f}"
+    present = np.asarray(f.query(keys))
+    assert present[ok].all(), "false negative for successfully inserted key"
+    assert int(f.state.count) == int(ok.sum())
+
+
+@pytest.mark.parametrize("cfg", CONFIGS[:4], ids=lambda c: f"{c.policy}-{c.eviction}")
+def test_delete_restores_empty(cfg):
+    rng = np.random.default_rng(1)
+    f = CuckooFilter(cfg)
+    keys = make_keys(rng, int(cfg.num_slots * 0.8))
+    ok, _ = f.insert(keys)
+    ok = np.asarray(ok)
+    del_ok = np.asarray(f.delete(keys[ok]))
+    assert del_ok.all()
+    assert int(f.state.count) == 0
+    assert not np.asarray(f.state.table).any(), "table not empty after delete-all"
+
+
+def test_failed_delete_reports_false():
+    cfg = CONFIGS[0]
+    f = CuckooFilter(cfg)
+    rng = np.random.default_rng(2)
+    keys = make_keys(rng, 64)
+    f.insert(keys[:32])
+    # Deleting never-inserted keys must fail (up to fp collisions, rare here).
+    ok = np.asarray(f.delete(keys[32:]))
+    assert ok.mean() < 0.2
+    assert int(f.state.count) >= 32 - int(ok.sum())
+
+
+def test_duplicate_inserts_accumulate_copies():
+    cfg = CONFIGS[0]
+    f = CuckooFilter(cfg)
+    key = make_keys(np.random.default_rng(3), 1)
+    dup = jnp.tile(key, (5, 1))
+    ok, _ = f.insert(dup)
+    assert np.asarray(ok).all()
+    assert int(f.state.count) == 5
+    # five deletes succeed, the sixth fails
+    ok = np.asarray(f.delete(jnp.tile(key, (6, 1))))
+    assert ok.sum() == 5
+    assert int(f.state.count) == 0
+
+
+def test_overload_reports_failures():
+    cfg = CuckooConfig(num_buckets=8, fp_bits=16, bucket_size=4,
+                       policy="xor", eviction="dfs", hash_kind="fmix32",
+                       max_evictions=16)
+    f = CuckooFilter(cfg)
+    rng = np.random.default_rng(4)
+    keys = make_keys(rng, cfg.num_slots * 2)  # 2x capacity
+    ok, _ = f.insert(keys)
+    ok = np.asarray(ok)
+    assert not ok.all(), "must fail beyond capacity"
+    assert int(f.state.count) == int(ok.sum())
+    assert int(f.state.count) <= cfg.num_slots
+    # NOTE: after a failed insert the carried victim fingerprint is dropped
+    # (paper Alg. 1 "caller will have to rebuild"), so earlier successful
+    # keys may have lost their copy — the strict no-false-negative guarantee
+    # only holds for failure-free batches (covered by the high-load test).
+    # At 2x overload with a saturated table we only smoke-check that a
+    # meaningful fraction survived.
+    present = np.asarray(f.query(keys))
+    assert present[ok].mean() > 0.25
+
+
+def test_bfs_bounds_eviction_chains_vs_dfs():
+    """Paper Fig. 5: BFS suppresses tail eviction-chain lengths."""
+    rng = np.random.default_rng(5)
+    tails = {}
+    for evic in ("bfs", "dfs"):
+        cfg = CuckooConfig(num_buckets=1024, fp_bits=16, bucket_size=16,
+                           policy="xor", eviction=evic, hash_kind="fmix32",
+                           max_evictions=256)
+        f = CuckooFilter(cfg)
+        n = int(cfg.num_slots * 0.96)
+        keys = make_keys(rng, n)
+        # pre-fill 3/4 then measure the contended final quarter (paper §5.4.1)
+        ok1, _ = f.insert(keys[: 3 * n // 4])
+        ok2, stats = f.insert(keys[3 * n // 4:])
+        ev = np.asarray(stats.evictions)
+        tails[evic] = np.percentile(ev, 99)
+        assert np.asarray(ok1).mean() > 0.95
+        assert np.asarray(ok2).mean() > 0.9
+    assert tails["bfs"] <= tails["dfs"], (
+        f"BFS p99 evictions {tails['bfs']} should not exceed DFS {tails['dfs']}")
+
+
+def test_fpr_tracks_equation4():
+    """Paper Eq. (4) within loose statistical bounds."""
+    cfg = CuckooConfig(num_buckets=1 << 12, fp_bits=8, bucket_size=4,
+                       policy="xor", eviction="bfs", hash_kind="fmix32")
+    f = CuckooFilter(cfg)
+    rng = np.random.default_rng(6)
+    n = int(cfg.num_slots * 0.95)
+    keys = rng.integers(0, 2**32, size=n, dtype=np.uint64)
+    ok, _ = f.insert(jnp.asarray(keys_from_numpy(keys)))
+    load = int(f.state.count) / cfg.num_slots
+    neg = rng.integers(2**32, 2**64, size=1 << 16, dtype=np.uint64)
+    fpr = float(np.asarray(f.query(jnp.asarray(keys_from_numpy(neg)))).mean())
+    expected = cfg.expected_fpr(load)
+    assert 0.3 * expected < fpr < 3.0 * expected, (fpr, expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), data=st.data())
+def test_property_random_op_sequences(seed, data):
+    """Model-based: filter agrees with a multiset model on collision-free keys."""
+    cfg = CuckooConfig(num_buckets=64, fp_bits=16, bucket_size=8,
+                       policy="xor", eviction="bfs", hash_kind="fmix32")
+    rng = np.random.default_rng(seed)
+    universe = make_keys(rng, 128)
+    sigs = signatures(cfg, universe)
+    # keys with unique signatures -> filter behaves exactly like a multiset
+    uniq = [i for i, s in enumerate(sigs) if sigs.count(s) == 1]
+    f = CuckooFilter(cfg)
+    live = set()
+    for _ in range(data.draw(st.integers(1, 6))):
+        op = data.draw(st.sampled_from(["insert", "delete", "query"]))
+        idx = data.draw(st.lists(st.sampled_from(uniq), min_size=1,
+                                 max_size=16, unique=True))
+        batch = universe[np.asarray(idx)]
+        if op == "insert":
+            ok, _ = f.insert(batch)
+            for i, o in zip(idx, np.asarray(ok)):
+                if o and i not in live:
+                    live.add(i)
+        elif op == "delete":
+            ok = f.delete(batch)
+            for i, o in zip(idx, np.asarray(ok)):
+                assert bool(o) == (i in live)
+                live.discard(i)
+        else:
+            got = np.asarray(f.query(batch))
+            for i, g in zip(idx, got):
+                if i in live:
+                    assert g, "false negative in op sequence"
+
+
+def test_for_capacity_sizing():
+    cfg = CuckooConfig.for_capacity(10_000, load_factor=0.95, policy="xor")
+    assert cfg.num_buckets & (cfg.num_buckets - 1) == 0
+    assert cfg.num_slots * 0.95 >= 10_000
+    cfg2 = CuckooConfig.for_capacity(10_000, load_factor=0.95, policy="offset")
+    assert cfg2.num_slots < cfg.num_slots  # no power-of-two over-provisioning
+    assert cfg2.num_slots * 0.95 >= 10_000
+
+
+def test_expected_fpr_monotonic():
+    cfg8 = CuckooConfig(num_buckets=64, fp_bits=8, bucket_size=16)
+    cfg16 = CuckooConfig(num_buckets=64, fp_bits=16, bucket_size=16)
+    assert cfg8.expected_fpr(0.95) > cfg16.expected_fpr(0.95)
+    cfg_b4 = CuckooConfig(num_buckets=64, fp_bits=16, bucket_size=4)
+    assert cfg_b4.expected_fpr(0.95) < cfg16.expected_fpr(0.95)

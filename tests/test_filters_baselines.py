@@ -1,0 +1,190 @@
+"""Baseline filters: correctness + differential checks vs the Python oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CuckooConfig, CuckooFilter, keys_from_numpy
+from repro.filters import (
+    BCHTConfig,
+    BloomConfig,
+    BlockedBloomFilter,
+    BucketedCuckooHashTable,
+    GQFConfig,
+    PyCuckooFilter,
+    QuotientFilter,
+    TCFConfig,
+    TwoChoiceFilter,
+)
+
+
+def raw_keys(rng, n):
+    return np.unique(rng.integers(0, 2**64, size=2 * n, dtype=np.uint64))[:n]
+
+
+# --------------------------------------------------------------------------
+# Blocked Bloom
+# --------------------------------------------------------------------------
+
+def test_bloom_no_false_negatives():
+    rng = np.random.default_rng(0)
+    cfg = BloomConfig.for_capacity(4096, bits_per_key=16)
+    f = BlockedBloomFilter(cfg)
+    raw = raw_keys(rng, 4096)
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ok = f.insert(keys)
+    assert np.asarray(ok).all()
+    assert np.asarray(f.query(keys)).all()
+
+
+def test_bloom_fpr_reasonable():
+    rng = np.random.default_rng(1)
+    cfg = BloomConfig.for_capacity(1 << 14, bits_per_key=16)
+    f = BlockedBloomFilter(cfg)
+    f.insert(jnp.asarray(keys_from_numpy(
+        rng.integers(0, 2**32, size=1 << 14, dtype=np.uint64))))
+    neg = rng.integers(2**32, 2**64, size=1 << 15, dtype=np.uint64)
+    fpr = float(np.asarray(f.query(jnp.asarray(keys_from_numpy(neg)))).mean())
+    # paper Fig. 4: BBF FPR is the worst of the pack, 0.5%..6%
+    assert fpr < 0.06, fpr
+
+
+def test_bloom_duplicate_insert_batch():
+    cfg = BloomConfig.for_capacity(256)
+    f = BlockedBloomFilter(cfg)
+    key = jnp.asarray(keys_from_numpy(np.asarray([42], np.uint64)))
+    f.insert(jnp.tile(key, (8, 1)))
+    assert bool(f.query(key)[0])
+
+
+# --------------------------------------------------------------------------
+# Two-Choice filter
+# --------------------------------------------------------------------------
+
+def test_tcf_roundtrip():
+    rng = np.random.default_rng(2)
+    cfg = TCFConfig.for_capacity(4096, load_factor=0.85)
+    f = TwoChoiceFilter(cfg)
+    raw = raw_keys(rng, int(cfg.num_slots * 0.85))
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ok = np.asarray(f.insert(keys))
+    assert ok.mean() > 0.98
+    assert np.asarray(f.query(keys))[ok].all()
+    del_ok = np.asarray(f.delete(keys[ok]))
+    # Unlike the cuckoo filter (where tag collisions imply the *same* bucket
+    # pair), TCF keys sharing a tag + one block can false-delete each other's
+    # copy and orphan their own (paper §2.1 accepts this "with a small
+    # probability"). Allow a tiny residue; count must equal the residue.
+    assert (~del_ok).sum() <= 3
+    assert int(f.state.count) == int((~del_ok).sum())
+
+
+def test_tcf_stash_overflow_path():
+    # Tiny table so both blocks fill and the stash is exercised.
+    cfg = TCFConfig(num_blocks=2, fp_bits=16, block_size=4, stash_size=16)
+    f = TwoChoiceFilter(cfg)
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(keys_from_numpy(raw_keys(rng, 16)))
+    ok = np.asarray(f.insert(keys))
+    assert ok.sum() >= 8  # 8 block slots + stash room
+    assert np.asarray(f.query(keys))[ok].all()
+    assert np.asarray(f.delete(keys[ok])).all()
+    assert int(f.state.count) == 0
+    assert not np.asarray(f.state.stash).any()
+
+
+# --------------------------------------------------------------------------
+# Quotient filter (Robin Hood analogue)
+# --------------------------------------------------------------------------
+
+def test_gqf_roundtrip():
+    rng = np.random.default_rng(4)
+    cfg = GQFConfig.for_capacity(2048, load_factor=0.9)
+    f = QuotientFilter(cfg)
+    raw = raw_keys(rng, int(cfg.num_slots * 0.9))
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ok = np.asarray(f.insert(keys))
+    assert ok.mean() > 0.97, ok.mean()
+    assert np.asarray(f.query(keys))[ok].all(), "GQF false negative"
+    del_ok = np.asarray(f.delete(keys[ok]))
+    assert del_ok.all()
+    assert int(f.state.count) == 0
+    assert not np.asarray(f.state.table).any()
+
+
+def test_gqf_low_fpr():
+    """Paper Fig. 4: the quotient filter has the lowest FPR of the pack."""
+    rng = np.random.default_rng(5)
+    cfg = GQFConfig.for_capacity(4096, load_factor=0.9, remainder_bits=16)
+    f = QuotientFilter(cfg)
+    f.insert(jnp.asarray(keys_from_numpy(
+        rng.integers(0, 2**32, size=int(cfg.num_slots * 0.9), dtype=np.uint64))))
+    neg = rng.integers(2**32, 2**64, size=1 << 15, dtype=np.uint64)
+    fpr = float(np.asarray(f.query(jnp.asarray(keys_from_numpy(neg)))).mean())
+    assert fpr < 0.005, fpr
+
+
+# --------------------------------------------------------------------------
+# BCHT (exact)
+# --------------------------------------------------------------------------
+
+def test_bcht_exact_membership():
+    rng = np.random.default_rng(6)
+    cfg = BCHTConfig.for_capacity(2048, load_factor=0.85)
+    t = BucketedCuckooHashTable(cfg)
+    raw = raw_keys(rng, int(cfg.num_slots * 0.85))
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ok = np.asarray(t.insert(keys))
+    assert ok.mean() > 0.98
+    assert np.asarray(t.query(keys))[ok].all()
+    # exact: zero false positives, always
+    neg = rng.integers(0, 2**64, size=1 << 14, dtype=np.uint64)
+    neg = np.setdiff1d(neg, raw)
+    got = np.asarray(t.query(jnp.asarray(keys_from_numpy(neg))))
+    assert not got.any(), "BCHT must be exact"
+    del_ok = np.asarray(t.delete(keys[ok]))
+    assert del_ok.all()
+    assert int(t.state.count) == 0
+
+
+# --------------------------------------------------------------------------
+# Differential: JAX filter vs pure-Python reference (same derivation)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hash_kind", ["xxhash64", "fmix32"])
+def test_jax_matches_python_reference_queries(hash_kind):
+    rng = np.random.default_rng(7)
+    cfg = CuckooConfig(num_buckets=128, fp_bits=16, bucket_size=8,
+                       policy="xor", eviction="dfs", hash_kind=hash_kind)
+    jf = CuckooFilter(cfg)
+    pf = PyCuckooFilter(cfg.num_buckets, cfg.fp_bits, cfg.bucket_size,
+                        hash_kind=hash_kind)
+    raw = raw_keys(rng, 512)
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ok_j, _ = jf.insert(keys)
+    ok_p = pf.insert_batch(raw)
+    # same load
+    assert abs(int(jf.state.count) - pf.count) <= int((~np.asarray(ok_j)).sum()) \
+        + int((~ok_p).sum())
+    # every key the python filter stored must be visible to it AND the jax
+    # filter must agree on all successfully-stored keys (identical derivation)
+    probe = raw_keys(np.random.default_rng(8), 2048)
+    got_j = np.asarray(jf.query(jnp.asarray(keys_from_numpy(probe))))
+    got_p = pf.query_batch(probe)
+    # membership universes are identical up to insert-failure differences;
+    # for fully-successful runs demand exact agreement
+    if np.asarray(ok_j).all() and ok_p.all():
+        np.testing.assert_array_equal(got_j, got_p)
+
+
+def test_python_reference_tag_derivation_matches_jax():
+    from repro.core import prepare_keys
+    rng = np.random.default_rng(9)
+    raw = raw_keys(rng, 64)
+    cfg = CuckooConfig(num_buckets=256, fp_bits=16, bucket_size=8,
+                       policy="xor", hash_kind="xxhash64")
+    pf = PyCuckooFilter(256, 16, 8, hash_kind="xxhash64")
+    tag, i1, i2 = prepare_keys(cfg, jnp.asarray(keys_from_numpy(raw)))
+    for k, t, a, b in zip(raw, np.asarray(tag), np.asarray(i1), np.asarray(i2)):
+        pt, pa, pb = pf._prepare(int(k))
+        assert (pt, pa, pb) == (int(t), int(a), int(b))

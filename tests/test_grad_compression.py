@@ -1,0 +1,65 @@
+"""int8 gradient compression with error feedback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.grad_compression import (
+    CompressedGrads,
+    compress,
+    decompress,
+    zero_residual,
+)
+
+
+def _grads(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(64, 33)) * 1e-2, jnp.bfloat16),
+        "b": jnp.asarray(rng.normal(size=(7,)) * 1e-3, jnp.bfloat16),
+    }
+
+
+def test_roundtrip_error_bounded():
+    g = _grads()
+    c, res = compress(g, zero_residual(g))
+    back = decompress(c, g)
+    for k in g:
+        x = np.asarray(g[k], np.float32)
+        y = np.asarray(back[k], np.float32)
+        assert np.max(np.abs(x - y)) <= np.max(np.abs(x)) / 127 + 1e-6
+
+
+def test_payload_is_int8():
+    g = _grads()
+    c, _ = compress(g, zero_residual(g))
+    for q in jax.tree.leaves(c.q):
+        assert q.dtype == jnp.int8
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of decompressed updates converges to the sum of true gradients."""
+    g = _grads()
+    res = zero_residual(g)
+    true_sum = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+    sent_sum = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+    for step in range(20):
+        gs = _grads(step)
+        c, res = compress(gs, res)
+        back = decompress(c, gs)
+        true_sum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                true_sum, gs)
+        sent_sum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                sent_sum, back)
+    # with error feedback, the residual bounds the cumulative discrepancy
+    for k in g:
+        diff = np.abs(np.asarray(true_sum[k] - sent_sum[k]))
+        r = np.abs(np.asarray(res[k])) + 1e-5
+        assert (diff <= r + 1e-4).all(), (k, diff.max(), r.max())
+
+
+def test_compress_under_jit():
+    g = _grads()
+    fn = jax.jit(lambda g, r: compress(g, r))
+    c, res = fn(g, zero_residual(g))
+    assert isinstance(c, CompressedGrads)

@@ -1,0 +1,108 @@
+"""Bit-exactness of the u64 emulation and xxHash64 vs pure-Python oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bits64 as b64
+from repro.core.hashing import (
+    fmix32,
+    fmix32_py,
+    hash_key,
+    keys_from_numpy,
+    xxhash64_py,
+    xxhash64_u64,
+)
+
+u64s = st.integers(min_value=0, max_value=(1 << 64) - 1)
+u32s = st.integers(min_value=0, max_value=(1 << 32) - 1)
+MASK = (1 << 64) - 1
+
+
+def as_u64(x: int):
+    return b64.from_py(x)
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64s, u64s)
+def test_add(a, b):
+    assert b64.to_py(b64.add(as_u64(a), as_u64(b))) == (a + b) & MASK
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64s, u64s)
+def test_mul(a, b):
+    assert b64.to_py(b64.mul(as_u64(a), as_u64(b))) == (a * b) & MASK
+
+
+@settings(max_examples=100, deadline=None)
+@given(u64s, st.integers(min_value=0, max_value=63))
+def test_shifts_and_rot(a, r):
+    assert b64.to_py(b64.shl(as_u64(a), r)) == (a << r) & MASK
+    assert b64.to_py(b64.shr(as_u64(a), r)) == (a >> r) & MASK
+    want = ((a << r) | (a >> (64 - r))) & MASK if r else a
+    assert b64.to_py(b64.rotl(as_u64(a), r)) == want
+
+
+@settings(max_examples=200, deadline=None)
+@given(u32s)
+def test_fmix32(x):
+    got = int(np.asarray(fmix32(jnp.uint32(x))))
+    assert got == fmix32_py(x)
+
+
+@settings(max_examples=100, deadline=None)
+@given(u64s, st.sampled_from([0, 1, 0xDEADBEEF]))
+def test_xxhash64_exact(key, seed):
+    got = b64.to_py(xxhash64_u64(as_u64(key), seed=seed))
+    assert got == xxhash64_py(key, seed)
+
+
+def test_xxhash64_batch():
+    rng = np.random.default_rng(7)
+    raw = rng.integers(0, 2**64, size=256, dtype=np.uint64)
+    hi, lo = hash_key(jnp.asarray(keys_from_numpy(raw)), "xxhash64")
+    got = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo)
+    want = np.array([xxhash64_py(int(k)) for k in raw], np.uint64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_keys_from_numpy_roundtrip():
+    rng = np.random.default_rng(3)
+    raw = rng.integers(0, 2**64, size=100, dtype=np.uint64)
+    k = keys_from_numpy(raw)
+    back = k[..., 0].astype(np.uint64) | (k[..., 1].astype(np.uint64) << np.uint64(32))
+    np.testing.assert_array_equal(back, raw)
+
+
+@pytest.mark.parametrize("kind", ["xxhash64", "fmix32"])
+def test_hash_distribution_rough(kind):
+    """Both hash kinds should look uniform at coarse granularity."""
+    rng = np.random.default_rng(11)
+    raw = rng.integers(0, 2**64, size=1 << 14, dtype=np.uint64)
+    hi, lo = hash_key(jnp.asarray(keys_from_numpy(raw)), kind)
+    for part in (np.asarray(hi), np.asarray(lo)):
+        counts = np.bincount(part % 64, minlength=64)
+        # chi-square-ish sanity: no bucket more than 2x the mean
+        assert counts.max() < 2 * counts.mean()
+        assert counts.min() > 0.5 * counts.mean()
+
+
+def test_fmix32_pair_sensitivity():
+    """Flipping any single input bit should flip ~half the output bits."""
+    from repro.core.hashing import fmix32_pair
+
+    base = (jnp.uint32(0x12345678), jnp.uint32(0x9ABCDEF0))
+    h0, l0 = fmix32_pair(base)
+    flips = []
+    for word in range(2):
+        for bit in range(0, 32, 5):
+            k = [base[0], base[1]]
+            k[word] = k[word] ^ jnp.uint32(1 << bit)
+            h1, l1 = fmix32_pair((k[0], k[1]))
+            x = (int(h0) ^ int(h1), int(l0) ^ int(l1))
+            flips.append(bin(x[0]).count("1") + bin(x[1]).count("1"))
+    flips = np.array(flips)
+    assert flips.mean() > 20 and flips.mean() < 44

@@ -1,0 +1,56 @@
+"""End-to-end integration: train driver, serve driver, dedup-in-training."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, env=env, timeout=timeout, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_train_driver_with_dedup(tmp_path):
+    p = _run(["-m", "repro.launch.train", "--arch", "gemma2_2b", "--reduced",
+              "--steps", "12", "--batch", "4", "--seq", "64",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "6", "--dedup"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "step 10" in p.stdout
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000012"))
+    # resume continues from the checkpoint
+    p2 = _run(["-m", "repro.launch.train", "--arch", "gemma2_2b", "--reduced",
+               "--steps", "14", "--batch", "4", "--seq", "64",
+               "--ckpt-dir", str(tmp_path), "--resume"])
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+    assert "resumed from step 12" in p2.stdout
+
+
+@pytest.mark.slow
+def test_serve_driver():
+    p = _run(["-m", "repro.launch.serve", "--arch", "mamba2_130m",
+              "--reduced", "--batch", "2", "--prompt-len", "16",
+              "--steps", "4", "--requests", "4"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "prefix-cache stats" in p.stdout
+
+
+@pytest.mark.slow
+def test_examples_run():
+    for ex in ("quickstart.py", "kmer_index.py"):
+        p = _run([os.path.join("examples", ex)])
+        assert p.returncode == 0, f"{ex}: {p.stdout + p.stderr}"
+
+
+def test_benchmark_harness_importable():
+    import benchmarks.run as br
+
+    assert set(br.SUITES) == {"fig3", "fig4", "fig5_6", "fig7", "fig8",
+                              "s463", "roofline"}

@@ -1,0 +1,85 @@
+"""SWAR primitives and packed layout vs naive unpack oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import layout as L
+
+u32s = st.integers(min_value=0, max_value=(1 << 32) - 1)
+
+
+@pytest.mark.parametrize("fp_bits", [8, 16, 32])
+@settings(max_examples=200, deadline=None)
+@given(word=u32s)
+def test_swar_zero_mask_matches_naive(word, fp_bits):
+    mask = L.swar_zero_mask(jnp.uint32(word), fp_bits)
+    flags = np.asarray(L.swar_mask_to_bools(mask, fp_bits))
+    tags = np.asarray(L.unpack_words(jnp.asarray([word], jnp.uint32), fp_bits))
+    np.testing.assert_array_equal(flags, tags == 0)
+
+
+@pytest.mark.parametrize("fp_bits", [8, 16, 32])
+@settings(max_examples=200, deadline=None)
+@given(word=u32s, tag=u32s)
+def test_swar_match_mask_matches_naive(word, tag, fp_bits):
+    tag &= (1 << fp_bits) - 1
+    mask = L.swar_match_mask(jnp.uint32(word), jnp.uint32(tag), fp_bits)
+    flags = np.asarray(L.swar_mask_to_bools(mask, fp_bits))
+    tags = np.asarray(L.unpack_words(jnp.asarray([word], jnp.uint32), fp_bits))
+    np.testing.assert_array_equal(flags, tags == tag)
+
+
+@pytest.mark.parametrize("fp_bits", [8, 16, 32])
+def test_pack_unpack_roundtrip(fp_bits):
+    rng = np.random.default_rng(0)
+    tags = rng.integers(0, 1 << fp_bits, size=(5, 32), dtype=np.uint32)
+    packed = L.pack_tags(jnp.asarray(tags), fp_bits)
+    assert packed.shape == (5, 32 // (32 // fp_bits))
+    back = np.asarray(L.unpack_words(packed, fp_bits))
+    np.testing.assert_array_equal(back, tags)
+
+
+@pytest.mark.parametrize("fp_bits", [8, 16, 32])
+@settings(max_examples=100, deadline=None)
+@given(word=u32s, tag=u32s, slot=st.integers(min_value=0, max_value=3))
+def test_extract_replace(word, tag, slot, fp_bits):
+    tpw = 32 // fp_bits
+    slot = slot % tpw
+    tag &= (1 << fp_bits) - 1
+    w = jnp.uint32(word)
+    s = jnp.int32(slot)
+    new = L.replace_tag(w, s, jnp.uint32(tag), fp_bits)
+    assert int(L.extract_tag(new, s, fp_bits)) == tag
+    # other lanes untouched
+    for other in range(tpw):
+        if other != slot:
+            assert int(L.extract_tag(new, jnp.int32(other), fp_bits)) == int(
+                L.extract_tag(w, jnp.int32(other), fp_bits))
+
+
+def test_first_true_circular():
+    flags = jnp.asarray([[False, True, False, True],
+                         [False, False, False, False],
+                         [True, False, False, False]])
+    start = jnp.asarray([2, 0, 3], jnp.int32)
+    found, slot = L.first_true_circular(flags, start)
+    np.testing.assert_array_equal(np.asarray(found), [True, False, True])
+    assert int(slot[0]) == 3          # scan 2,3 -> 3
+    assert int(slot[2]) == 0          # scan 3,0 -> 0
+
+
+def test_broadcast_tag():
+    assert int(L.broadcast_tag(jnp.uint32(0xAB), 8)) == 0xABABABAB
+    assert int(L.broadcast_tag(jnp.uint32(0x1234), 16)) == 0x12341234
+    assert int(L.broadcast_tag(jnp.uint32(0xDEADBEEF), 32)) == 0xDEADBEEF
+
+
+def test_gather_bucket_words():
+    lay = L.BucketLayout(num_buckets=4, bucket_size=4, fp_bits=16)
+    table = jnp.arange(lay.num_words, dtype=jnp.uint32)
+    words = L.gather_bucket_words(table, jnp.asarray([2, 0], jnp.uint32), lay)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  [[4, 5], [0, 1]])

@@ -1,0 +1,72 @@
+"""Placement-policy invariants: involution / choice-bit recovery."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.policies import OffsetPolicy, XorPolicy, make_policy
+
+u32s = st.integers(min_value=0, max_value=(1 << 32) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=u32s, idx=u32s)
+def test_xor_involution(h, idx):
+    pol = XorPolicy(num_buckets=1 << 12, fp_bits=16)
+    tag = pol.make_tag(jnp.uint32(h))
+    i1 = pol.primary_bucket(jnp.uint32(idx))
+    i2 = pol.alt_bucket(i1, tag)
+    back = pol.alt_bucket(i2, tag)
+    assert int(back) == int(i1)
+    assert int(tag) != 0  # EMPTY is reserved
+
+
+def test_xor_requires_power_of_two():
+    with pytest.raises(ValueError):
+        XorPolicy(num_buckets=300, fp_bits=16)
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=u32s, idx=u32s, m=st.sampled_from([3, 100, 257, 4096, 99991]))
+def test_offset_roundtrip(h, idx, m):
+    pol = OffsetPolicy(num_buckets=m, fp_bits=16)
+    tag = pol.make_tag(jnp.uint32(h))
+    i1, i2 = pol.initial_buckets(jnp.uint32(idx), tag)
+    assert int(i1) < m and int(i2) < m
+    if m > 1:
+        assert int(i1) != int(i2)  # offset is never 0
+    # entry placed at primary: choice bit 0; its alt must be i2
+    stored1 = pol.place_tag(tag, jnp.asarray(False))
+    assert int(pol.alt_bucket(i1, stored1)) == int(i2)
+    # entry placed at alternate: choice bit 1; its alt must be i1
+    stored2 = pol.place_tag(tag, jnp.asarray(True))
+    assert int(pol.alt_bucket(i2, stored2)) == int(i1)
+    # relocation flips the choice bit and returns to the other bucket
+    assert int(pol.on_relocate(stored1)) == int(stored2)
+    back = pol.alt_bucket(jnp.uint32(int(i2)), pol.on_relocate(stored1))
+    assert int(back) == int(i1)
+
+
+def test_offset_effective_bits():
+    pol = OffsetPolicy(num_buckets=100, fp_bits=16)
+    assert pol.effective_fp_bits == 15
+    xor = XorPolicy(num_buckets=128, fp_bits=16)
+    assert xor.effective_fp_bits == 16
+
+
+def test_query_match_tags_offset():
+    pol = OffsetPolicy(num_buckets=100, fp_bits=16)
+    tag = pol.make_tag(jnp.uint32(0x1234))
+    t1, t2 = pol.query_match_tags(tag)
+    assert int(t1) & pol.choice_bit == 0
+    assert int(t2) & pol.choice_bit == pol.choice_bit
+    assert (int(t1) & pol.fp_value_mask) == (int(t2) & pol.fp_value_mask)
+
+
+def test_make_policy_dispatch():
+    assert make_policy("xor", 64, 8).kind == "xor"
+    assert make_policy("offset", 65, 8).kind == "offset"
+    with pytest.raises(ValueError):
+        make_policy("nope", 64, 8)
