@@ -5,7 +5,11 @@ On GPU the paper found radix-sorting the batch gives coalesced access but
 conflict-resolution machinery *already* sorts by claim address every round
 (DESIGN.md §2 — the paper's rejected idea is our correctness backbone), so
 this ablation measures the residual locality effect of a bucket-ordered
-input batch.
+input batch — and the ``insert_bulk`` cells measure the real win: sorting
+*once* and committing whole buckets per round (DESIGN.md §6) instead of
+re-running the claim sort every round. The ``*_rounds`` rows make the
+mechanism visible: the bulk path's round count must sit far below the
+round-loop path's on the same batch.
 """
 
 from __future__ import annotations
@@ -39,6 +43,8 @@ def run(fast: bool = False):
 
     us = bench(lambda s=state: jins(s, hot))
     emit("s463_insert_unsorted", us, throughput_m_per_s(BATCH, us))
+    rounds_loop = int(jax.block_until_ready(jins(state, hot))[2].rounds)
+    emit("s463_insert_unsorted_rounds", float(rounds_loop), "rounds")
 
     # pre-sort the hot batch by primary bucket (the paper's CUB radix sort)
     _, i1, _ = prepare_keys(cfg, hot)
@@ -46,3 +52,12 @@ def run(fast: bool = False):
     hot_sorted = hot[order]
     us = bench(lambda s=state: jins(s, hot_sorted))
     emit("s463_insert_presorted", us, throughput_m_per_s(BATCH, us))
+
+    # bulk-build fast path: sort once, commit whole buckets per round
+    jbulk = jax.jit(functools.partial(CF.insert_bulk, cfg))
+    us = bench(lambda s=state: jbulk(s, hot))
+    emit("s463_insert_bulk", us, throughput_m_per_s(BATCH, us))
+    rounds_bulk = int(jax.block_until_ready(jbulk(state, hot))[2].rounds)
+    emit("s463_insert_bulk_rounds", float(rounds_bulk), "rounds")
+    emit("s463_bulk_vs_unsorted_rounds", float(rounds_loop - rounds_bulk),
+         f"bulk_{rounds_bulk}_vs_loop_{rounds_loop}")

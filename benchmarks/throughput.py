@@ -78,6 +78,12 @@ def run(fast: bool = False):
             us = bench(lambda s=state: jins(s, hot))
             emit(f"fig3_insert_{regime}_{name}", us,
                  throughput_m_per_s(BATCH, us))
+            if name == "cuckoo":
+                # bulk-build fast path (DESIGN.md §6) on the same hot batch
+                jbulk = jax.jit(functools.partial(CF.insert_bulk, cfg))
+                us = bench(lambda s=state: jbulk(s, hot))
+                emit(f"fig3_insert_bulk_{regime}_{name}", us,
+                     throughput_m_per_s(BATCH, us))
             out = jins(state, hot)
             state_full = out[0]
 

@@ -4,6 +4,7 @@ Public surface:
 
 * :class:`CuckooConfig` / :class:`CuckooState` — static config + state pytree.
 * :func:`insert` / :func:`query` / :func:`delete` — batch functional ops.
+* :func:`insert_bulk` — bucket-sorted bulk-build insertion fast path.
 * :class:`CuckooFilter` — convenience OO wrapper.
 * ``sharded_filter`` — mesh-partitioned filter (PCF partitioning scheme).
 """
@@ -15,6 +16,7 @@ from .cuckoo_filter import (  # noqa: F401
     InsertStats,
     delete,
     insert,
+    insert_bulk,
     prepare_keys,
     query,
 )

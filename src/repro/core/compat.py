@@ -1,0 +1,41 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the current jax API (``jax.shard_map``, ``AxisType`` mesh
+axis types) but must also run on the 0.4.x line installed in the CI/CPU
+container, where ``shard_map`` still lives in ``jax.experimental`` (with
+``check_rep`` instead of ``check_vma``) and ``jax.make_mesh`` has no
+``axis_types`` parameter. Everything here resolves at import/call time so
+callers stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+# AxisType (explicit-sharding mesh axis annotations) — absent before jax 0.6.
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def auto_axis_types_kw(num_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto,) * n`` where supported, ``{}`` before."""
+    if AxisType is None:
+        return {}
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * num_axes}
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` / ``jax.experimental.shard_map`` dispatch.
+
+    ``check`` maps to ``check_vma`` (new API) or ``check_rep`` (old API) —
+    both gate the same replication/varying-manual-axes verification.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)

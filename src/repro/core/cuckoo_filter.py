@@ -174,6 +174,32 @@ def _masked_write(table, addr, desired, mask, invalid):
     return table.at[a].set(desired, mode="drop")
 
 
+def _batch_dedup(keys: jnp.ndarray, valid: jnp.ndarray):
+    """First-occurrence mask + representative index for duplicated batches.
+
+    Returns (first: bool[n], rep: int32[n]): ``first[i]`` marks the earliest
+    occurrence of key i's 64-bit value among *valid* entries (``rep[i]`` is
+    that occurrence's batch index; ``rep[i] == i`` for firsts). Valid keys
+    sort ahead of invalid ones within a value run, so a padding key can never
+    become the representative of a live duplicate.
+    """
+    n = keys.shape[0]
+    lo, hi = keys[..., 0], keys[..., 1]
+    inv = (~valid).astype(jnp.uint32)
+    order = jnp.lexsort((inv, lo, hi))          # by (hi, lo), valid first
+    lo_s, hi_s = lo[order], hi[order]
+    first_s = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (lo_s[1:] != lo_s[:-1]) | (hi_s[1:] != hi_s[:-1]),
+    ])
+    head_pos = jax.lax.cummax(
+        jnp.where(first_s, jnp.arange(n, dtype=jnp.int32), 0))
+    rep_s = order[head_pos].astype(jnp.int32)
+    first = jnp.zeros((n,), bool).at[order].set(first_s)
+    rep = jnp.zeros((n,), jnp.int32).at[order].set(rep_s)
+    return first, rep
+
+
 # ---------------------------------------------------------------------------
 # Insertion (Alg. 1 + §4.6.1 BFS).
 # ---------------------------------------------------------------------------
@@ -185,12 +211,20 @@ _DIRECT, _EVICT, _RELOC = 0, 1, 2
 def insert(
     config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
     valid: Optional[jnp.ndarray] = None,
+    *, dedup_within_batch: bool = False,
 ) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
     """Insert a batch of keys. Returns (state', ok[n], stats).
 
     ``ok[i]`` False means the table was too full for key i (paper Alg. 1
     "Failure — caller will have to rebuild"). ``valid`` masks padding keys
     (used by the sharded filter's fixed-capacity routing).
+
+    Duplicate semantics: by default the filter is a *multiset* — two equal
+    keys in one batch insert two copies (each needs its own ``delete``),
+    exactly like two sequential single-key inserts. With
+    ``dedup_within_batch=True`` (a static flag) only the first occurrence of
+    each 64-bit key value is inserted; later copies report the first copy's
+    ``ok`` (idempotent set semantics within the batch). See DESIGN.md §4.
     """
     lay = config.layout
     pol = config.placement
@@ -383,6 +417,10 @@ def insert(
         return jnp.any(pending) & (rnd < max_rounds)
 
     pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    valid0 = pending0
+    if dedup_within_batch:
+        first, rep = _batch_dedup(keys, valid0)
+        pending0 = pending0 & first
     carry0 = (
         state.table, state.count,
         base_tag.astype(jnp.uint32),              # cur_tag (evict mode)
@@ -397,7 +435,116 @@ def insert(
     (table, count, _, _, _, pending, success, n_evict, rnd) = out
     # Keys still pending at max_rounds are reported as failures.
     ok = success & ~pending
+    if dedup_within_batch:
+        ok = jnp.where(first, ok, ok[rep] & valid0)
     return CuckooState(table, count), ok, InsertStats(n_evict, rnd)
+
+
+# ---------------------------------------------------------------------------
+# Bulk-build insertion (paper §4.6.3 sorted-insertion, made the fast path;
+# DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+
+def _bulk_place_phase(config: CuckooConfig, tags_flat: jnp.ndarray,
+                      bucket: jnp.ndarray, stored_tag: jnp.ndarray,
+                      pend: jnp.ndarray):
+    """One whole-bucket placement round over the unpacked per-slot table.
+
+    Sorts the pending keys by destination bucket, ranks each key within its
+    bucket segment, and commits the rank-th free slot of every bucket in a
+    single conflict-free scatter (each key owns a distinct slot by
+    construction — no word-claim election needed).
+
+    Returns (tags_flat', placed: bool[n] in original batch order).
+    """
+    lay = config.layout
+    n = bucket.shape[0]
+    b = config.bucket_size
+    nb = config.num_buckets
+
+    # One sort per phase — the whole point: pending keys grouped by bucket,
+    # masked-out keys pushed past every real segment via the nb sentinel.
+    sort_key = jnp.where(pend, bucket.astype(jnp.int32), nb)
+    order = jnp.argsort(sort_key, stable=True)
+    sb = sort_key[order]
+    rank = L.segment_ranks(sb)
+
+    safe_b = jnp.minimum(sb, nb - 1)
+    btags = tags_flat.reshape(nb, b)[safe_b]                  # [n, b]
+    placed_s, slot_s = L.nth_free_slot(btags, rank)
+    placed_s = placed_s & (sb < nb)
+    dest = safe_b * b + slot_s
+    tags_flat = tags_flat.at[
+        jnp.where(placed_s, dest, lay.num_slots)
+    ].set(stored_tag[order], mode="drop")
+
+    placed = jnp.zeros((n,), bool).at[order].set(placed_s)
+    return tags_flat, placed
+
+
+def insert_bulk(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+    *, dedup_within_batch: bool = False,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Bulk-build insertion fast path. Same contract as :func:`insert`.
+
+    Where :func:`insert` re-elects per-word winners with a full stable sort
+    of all claim addresses in *every* round of its while-loop, this entry
+    point sorts the batch by primary bucket **once** and commits whole
+    buckets per round (paper §4.6.3's sorted insertion, promoted from a
+    rejected GPU ablation to the batch-synchronous fast path — DESIGN.md §6):
+
+    1. unpack the table to its per-slot view (a pure bit-shuffle);
+    2. phase 1: place up to ``bucket_size`` keys per *primary* bucket —
+       each key takes the rank-th free slot of its bucket segment;
+    3. phase 2: re-sort the overflow by *alternate* bucket, place again;
+    4. spill the residue (both candidate buckets full — rare below ~0.9
+       load) into the general eviction round loop;
+    5. restore original batch order for ``ok``/stats outputs (the sorted
+       view never escapes).
+
+    ``stats.rounds`` counts the two bulk phases plus the residue loop's
+    rounds, so it is directly comparable with :func:`insert`'s round count.
+    """
+    lay = config.layout
+    pol = config.placement
+    n = keys.shape[0]
+
+    pending = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    valid0 = pending
+    if dedup_within_batch:
+        first, rep = _batch_dedup(keys, valid0)
+        pending = pending & first
+
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((n,), bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones((n,), bool))
+
+    tags_flat = L.unpack_words(state.table, lay.fp_bits)      # per-slot view
+
+    tags_flat, placed1 = _bulk_place_phase(
+        config, tags_flat, i1, tag1, pending)
+    pending = pending & ~placed1
+    tags_flat, placed2 = _bulk_place_phase(
+        config, tags_flat, i2, tag2, pending)
+    pending = pending & ~placed2
+
+    table = L.pack_tags(tags_flat, lay.fp_bits)
+    placed = placed1 | placed2
+    count = state.count + jnp.sum(placed, dtype=jnp.int32)
+
+    # Residue: both candidate buckets full — hand the stragglers to the
+    # eviction-capable round loop against the bulk-updated table.
+    state2, ok_res, res_stats = insert(
+        config, CuckooState(table, count), keys, valid=pending)
+
+    ok = placed | ok_res
+    if dedup_within_batch:
+        ok = jnp.where(first, ok, ok[rep] & valid0)
+    stats = InsertStats(res_stats.evictions, res_stats.rounds + 2)
+    return state2, ok, stats
 
 
 # ---------------------------------------------------------------------------
@@ -486,15 +633,23 @@ def delete(
 class CuckooFilter:
     """Thin OO wrapper with per-config jitted entry points."""
 
-    def __init__(self, config: CuckooConfig, state: Optional[CuckooState] = None):
+    def __init__(self, config: CuckooConfig, state: Optional[CuckooState] = None,
+                 dedup_within_batch: bool = False):
         self.config = config
         self.state = config.init() if state is None else state
-        self._insert = jax.jit(functools.partial(insert, config))
+        dd = dict(dedup_within_batch=dedup_within_batch)
+        self._insert = jax.jit(functools.partial(insert, config, **dd))
+        self._insert_bulk = jax.jit(functools.partial(insert_bulk, config, **dd))
         self._query = jax.jit(functools.partial(query, config))
         self._delete = jax.jit(functools.partial(delete, config))
 
     def insert(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
         self.state, ok, stats = self._insert(self.state, keys)
+        return ok, stats
+
+    def insert_bulk(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
+        """Bucket-sorted bulk-build insert (see :func:`insert_bulk`)."""
+        self.state, ok, stats = self._insert_bulk(self.state, keys)
         return ok, stats
 
     def query(self, keys) -> jnp.ndarray:

@@ -188,6 +188,45 @@ def first_true_circular(flags: jnp.ndarray, start: jnp.ndarray) -> Tuple[jnp.nda
     return found, slot
 
 
+# ---------------------------------------------------------------------------
+# Segmented-scan helpers for the bulk-build insertion path (DESIGN.md §6).
+#
+# ``unpack_words`` applied to the *flat* table is already the per-slot view in
+# global slot order (slot s of bucket b lives at flat index b*bucket_size + s),
+# so a bulk placement round is: unpack table -> scatter one tag per free slot
+# -> pack. The helpers below compute, for a batch sorted by destination
+# bucket, each key's rank within its bucket segment and the bucket's rank-th
+# free slot — which together make whole-bucket commits conflict-free by
+# construction (every key owns a distinct slot).
+# ---------------------------------------------------------------------------
+
+def segment_ranks(sorted_ids: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element within its run of equal values.
+
+    sorted_ids: int32[n] ascending (runs = segments). Returns int32[n] with
+    0, 1, 2, ... restarting at every segment boundary.
+    """
+    n = sorted_ids.shape[0]
+    first = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    return jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+
+
+def nth_free_slot(btags: jnp.ndarray, rank: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Position of the ``rank``-th empty slot in each bucket.
+
+    btags: uint32[..., b] unpacked bucket tags; rank: int32[...] >= 0.
+    Returns (placed: bool[...], slot: int32[...]). ``placed`` is False when
+    the bucket has <= rank free slots (the key spills to the next phase).
+    """
+    free = btags == 0
+    prefix = jnp.cumsum(free, axis=-1, dtype=jnp.int32)      # inclusive count
+    target = rank[..., None] + 1
+    hit = free & (prefix == target)
+    placed = prefix[..., -1] > rank
+    slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return placed, slot
+
+
 def slot_to_word(slot: jnp.ndarray, layout: BucketLayout) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Absolute slot index in bucket -> (word index in bucket, slot within word)."""
     tpw = layout.tags_per_word

@@ -32,9 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
 from .cuckoo_filter import CuckooConfig, CuckooState
 from .cuckoo_filter import delete as _delete
 from .cuckoo_filter import insert as _insert
+from .cuckoo_filter import insert_bulk as _insert_bulk
 from .cuckoo_filter import query as _query
 from .hashing import fmix32
 
@@ -134,6 +136,12 @@ def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int):
         if op == "insert":
             state, ok, _ = _insert(config.shard, state, flat_keys,
                                    valid=flat_valid)
+        elif op == "insert_bulk":
+            # The all-to-all already binned keys by owner shard; the bulk
+            # path's bucket-major sort composes on top of that binning
+            # (DESIGN.md §6) — whole-bucket commits, residue to the loop.
+            state, ok, _ = _insert_bulk(config.shard, state, flat_keys,
+                                        valid=flat_valid)
         elif op == "delete":
             state, ok = _delete(config.shard, state, flat_keys,
                                 valid=flat_valid)
@@ -174,15 +182,15 @@ class ShardedCuckooFilter:
 
         def build(op):
             fn = _make_sharded_op(config, op, local_batch)
-            mapped = jax.shard_map(
+            mapped = compat.shard_map(
                 fn, mesh=mesh,
                 in_specs=(P(ax), P(ax), P(ax)),
                 out_specs=(P(ax), P(ax), P(ax), P(ax)),
-                check_vma=False,
             )
             return jax.jit(mapped)
 
-        self._ops = {op: build(op) for op in ("insert", "query", "delete")}
+        self._ops = {op: build(op)
+                     for op in ("insert", "insert_bulk", "query", "delete")}
         del others
         self.state = jax.device_put(
             config.init(),
@@ -195,9 +203,13 @@ class ShardedCuckooFilter:
             self.state = ShardedCuckooState(table, count)
         return result, routed
 
-    def insert(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """-> (ok, routed): ok[i] requires routed[i]; retry ~routed keys."""
-        return self._run("insert", keys)
+    def insert(self, keys, bulk: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (ok, routed): ok[i] requires routed[i]; retry ~routed keys.
+
+        ``bulk=True`` routes through the bucket-sorted bulk-build fast path
+        (core.cuckoo_filter.insert_bulk) on every shard.
+        """
+        return self._run("insert_bulk" if bulk else "insert", keys)
 
     def query(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self._run("query", keys)

@@ -11,6 +11,7 @@ from .flash_attention import flash_attention_pallas  # noqa: F401
 from .ops import (  # noqa: F401
     bloom_insert,
     bloom_query,
+    cuckoo_insert_bulk,
     cuckoo_insert_direct,
     cuckoo_query,
     hash64,

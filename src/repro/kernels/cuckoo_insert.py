@@ -119,3 +119,124 @@ def cuckoo_insert_pallas(config: CuckooConfig, table: jnp.ndarray,
         interpret=interpret,
         name="cuckoo_insert_direct",
     )(table, keys_lo, keys_hi, valid)
+
+
+# ---------------------------------------------------------------------------
+# Bucket-major tile variant (bulk-build fast path, DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+def _bulk_insert_kernel(config: CuckooConfig, block_keys: int,
+                        table_in_ref, keys_lo_ref, keys_hi_ref, valid_ref,
+                        table_out_ref, ok_ref):
+    """Direct insert for a tile of keys **pre-sorted by primary bucket**.
+
+    Bucket-major order lets the kernel keep the current primary bucket's
+    packed words in registers across the run of keys that target it: the
+    bucket is loaded once per segment and flushed once when the segment
+    ends, instead of a VMEM read-modify-write per key. Same sequential
+    semantics as ``_insert_kernel`` (and ``ref.cuckoo_insert_ref`` on the
+    sorted stream) — only the memory traffic pattern changes.
+    """
+    lay = config.layout
+    pol = config.placement
+    wpb = lay.words_per_bucket
+    warange = jnp.arange(wpb, dtype=jnp.int32)
+
+    keys = jnp.stack([keys_lo_ref[...], keys_hi_ref[...]], axis=-1)
+    hi, lo = hash_key(keys, config.hash_kind, config.seed)
+    base_tag = pol.make_tag(hi)
+    i1, i2 = pol.initial_buckets(lo, base_tag)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((block_keys,), bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones((block_keys,), bool))
+    start = L.scan_start(base_tag, lay)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        table_out_ref[...] = table_in_ref[...]
+
+    # Prime the cache with the first key's primary bucket.
+    b0 = i1[0].astype(jnp.int32)
+    words0 = table_out_ref[pl.ds(b0 * wpb, wpb)]
+
+    def body(i, carry):
+        cur_bucket, cur_words = carry
+        live = valid_ref[i] != 0
+        b1 = i1[i].astype(jnp.int32)
+        seg_end = b1 != cur_bucket
+
+        # Segment boundary: flush the cached bucket, then load the new one.
+        @pl.when(seg_end)
+        def _():
+            table_out_ref[pl.ds(cur_bucket * wpb, wpb)] = cur_words
+
+        fresh = table_out_ref[pl.ds(b1 * wpb, wpb)]
+        wordsA = jnp.where(seg_end, fresh, cur_words)
+
+        lanesA = L.unpack_words(wordsA, lay.fp_bits)
+        foundA, slotA = L.first_true_circular(lanesA == 0, start[i])
+        widxA, swA = L.slot_to_word(slotA, lay)
+        desiredA = L.replace_tag(wordsA[widxA], swA, tag1[i], lay.fp_bits)
+        okA = foundA & live
+        wordsA = jnp.where((warange == widxA) & okA, desiredA, wordsA)
+
+        # Secondary bucket: straight to VMEM, except when it aliases the
+        # cached primary bucket (possible under XOR when H(fp)&mask == 0).
+        b2 = i2[i].astype(jnp.int32)
+        sameB = b2 == b1
+        wordsB = jnp.where(sameB, wordsA,
+                           table_out_ref[pl.ds(b2 * wpb, wpb)])
+        lanesB = L.unpack_words(wordsB, lay.fp_bits)
+        foundB, slotB = L.first_true_circular(lanesB == 0, start[i])
+        widxB, swB = L.slot_to_word(slotB, lay)
+        desiredB = L.replace_tag(wordsB[widxB], swB, tag2[i], lay.fp_bits)
+        okB = foundB & live & ~okA
+
+        cur_words = jnp.where((warange == widxB) & okB & sameB,
+                              desiredB, wordsA)
+        addrB = b2 * wpb + widxB
+        currentB = table_out_ref[pl.ds(addrB, 1)]
+        table_out_ref[pl.ds(addrB, 1)] = jnp.where(okB & ~sameB,
+                                                   desiredB[None], currentB)
+
+        ok_ref[pl.ds(i, 1)] = (okA | okB).astype(jnp.uint32)[None]
+        return b1, cur_words
+
+    final_bucket, final_words = jax.lax.fori_loop(
+        0, block_keys, body, (b0, words0))
+    table_out_ref[pl.ds(final_bucket * wpb, wpb)] = final_words
+
+
+def cuckoo_insert_bulk_pallas(config: CuckooConfig, table: jnp.ndarray,
+                              keys_lo: jnp.ndarray, keys_hi: jnp.ndarray,
+                              valid: jnp.ndarray | None = None,
+                              *, block_keys: int = 256,
+                              interpret: bool = True):
+    """Bucket-major direct insert; callers must pass keys sorted by primary
+    bucket (``prepare_keys``'s ``i1``). Returns (table', ok uint32[n])."""
+    n = keys_lo.shape[0]
+    assert n % block_keys == 0, (n, block_keys)
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint32)
+    grid = (n // block_keys,)
+    kernel = functools.partial(_bulk_insert_kernel, config, block_keys)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+        name="cuckoo_insert_bulk",
+    )(table, keys_lo, keys_hi, valid)

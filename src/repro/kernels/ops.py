@@ -12,10 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.cuckoo_filter import CuckooConfig, CuckooState
+from ..core.cuckoo_filter import CuckooConfig, CuckooState, prepare_keys
 from ..filters.blocked_bloom import BloomConfig, BloomState
 from .bloom import bloom_insert_pallas, bloom_query_pallas
-from .cuckoo_insert import cuckoo_insert_pallas
+from .cuckoo_insert import cuckoo_insert_bulk_pallas, cuckoo_insert_pallas
 from .cuckoo_query import cuckoo_query_pallas
 from .hash64 import hash64_pallas
 from .kmer_pack import kmer_pack_pallas
@@ -62,6 +62,29 @@ def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
                                      interpret=not _on_tpu())
     count = state.count + jnp.sum(ok[:n], dtype=jnp.int32)
     return CuckooState(table, count), ok[:n].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def cuckoo_insert_bulk(config: CuckooConfig, state: CuckooState,
+                       keys: jnp.ndarray, block_keys: int = 256):
+    """Kernel-backed bucket-major direct insert. -> (state', ok bool[n]).
+
+    Sorts the batch by primary bucket once (the bulk-build order, DESIGN.md
+    §6) so the kernel streams whole bucket segments; ``ok`` comes back in
+    the original batch order. Failed keys need the eviction-capable
+    core.cuckoo_filter path.
+    """
+    n0 = keys.shape[0]
+    _, i1, _ = prepare_keys(config, keys)
+    order = jnp.argsort(i1.astype(jnp.int32), stable=True)
+    keys_sorted, _ = _pad_to(keys[order], block_keys, fill=0)
+    valid = (jnp.arange(keys_sorted.shape[0]) < n0).astype(jnp.uint32)
+    table, ok_s = cuckoo_insert_bulk_pallas(
+        config, state.table, keys_sorted[:, 0], keys_sorted[:, 1], valid,
+        block_keys=block_keys, interpret=not _on_tpu())
+    ok = jnp.zeros((n0,), jnp.uint32).at[order].set(ok_s[:n0])
+    count = state.count + jnp.sum(ok, dtype=jnp.int32)
+    return CuckooState(table, count), ok.astype(bool)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))

@@ -1,0 +1,130 @@
+"""Fixed-seed fallback for ``hypothesis`` when it isn't installed.
+
+The property-test modules degrade to deterministic example tests: ``given``
+re-runs the test body for a bounded number of examples drawn from a
+seeded PRNG (seeded by the test's qualified name, so failures reproduce).
+Install the real dependency (``pip install -e .[test]`` — see
+pyproject.toml) to get actual shrinking/coverage-guided search.
+
+Only the surface the test suite uses is implemented: ``given`` (kwargs
+form), ``settings(max_examples, deadline)``, and the ``integers`` /
+``sampled_from`` / ``lists`` / ``data`` strategies.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+# Keep the degraded suite fast: the shim caps requested example counts.
+_MAX_EXAMPLES_CAP = 25
+_DEFAULT_EXAMPLES = 10
+
+
+class Strategy:
+    def __init__(self, draw_fn, label=""):
+        self._draw = draw_fn
+        self._label = label
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"shim.{self._label}"
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: None, "data()")
+
+
+class DataObject:
+    """Shim for the object injected by ``st.data()``."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy):
+        return strategy.example(self._rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2**63 - 1):
+        return Strategy(lambda rng: rng.randint(min_value, max_value),
+                        f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return Strategy(lambda rng: elements[rng.randrange(len(elements))],
+                        "sampled_from")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            out, seen = [], set()
+            attempts = 0
+            while len(out) < size and attempts < 100 * (size + 1):
+                v = elements.example(rng)
+                attempts += 1
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+
+        return Strategy(draw, "lists")
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def given(*strategy_args, **strategy_kwargs):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        if strategy_args:
+            # hypothesis matches positional strategies to the *rightmost*
+            # parameters (leaving self/fixtures on the left untouched).
+            names = list(sig.parameters)[-len(strategy_args):]
+            strategy_kwargs.update(zip(names, strategy_args))
+        passthrough = [p for name, p in sig.parameters.items()
+                       if name not in strategy_kwargs]
+
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            n = min(getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_EXAMPLES_CAP)
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for example in range(n):
+                rng = random.Random(base_seed + example)
+                drawn = {}
+                for name, strat in strategy_kwargs.items():
+                    if isinstance(strat, _DataStrategy):
+                        drawn[name] = DataObject(rng)
+                    else:
+                        drawn[name] = strat.example(rng)
+                fn(*call_args, **call_kwargs, **drawn)
+
+        # pytest must only see the non-strategy parameters (parametrize
+        # marks / fixtures); the strategies are filled in per example.
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        wrapper.is_hypothesis_shim = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -1,0 +1,12 @@
+"""Make ``repro`` importable without an externally-set PYTHONPATH.
+
+Tier-1 runs use ``PYTHONPATH=src python -m pytest``; this keeps plain
+``pytest`` (CI, editors) working from the repo root too.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in (os.path.abspath(p) for p in sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))

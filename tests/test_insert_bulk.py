@@ -1,0 +1,193 @@
+"""Bulk-build insertion fast path (DESIGN.md §6): equivalence with the
+round-loop path, order restoration, duplicate semantics, sharded bulk=True."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CuckooConfig,
+    CuckooFilter,
+    insert,
+    insert_bulk,
+    keys_from_numpy,
+    query,
+)
+from repro.core import delete as cf_delete
+from repro.core import layout as L
+
+
+def make_keys(rng, n):
+    raw = rng.integers(0, 2**64, size=4 * n, dtype=np.uint64)
+    return jnp.asarray(keys_from_numpy(np.unique(raw)[:n]))
+
+
+CONFIGS = [
+    CuckooConfig(num_buckets=256, fp_bits=16, bucket_size=16,
+                 policy="xor", eviction="bfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=300, fp_bits=16, bucket_size=16,
+                 policy="offset", eviction="bfs", hash_kind="fmix32"),
+    CuckooConfig(num_buckets=512, fp_bits=8, bucket_size=8,
+                 policy="xor", eviction="dfs", hash_kind="fmix32"),
+]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS,
+                         ids=lambda c: f"{c.policy}-f{c.fp_bits}b{c.bucket_size}")
+def test_equivalent_to_insert_on_same_batch(cfg):
+    """Same ok count as the round loop, identical query results, fewer rounds."""
+    rng = np.random.default_rng(7)
+    n = int(cfg.num_slots * 0.85)
+    keys = make_keys(rng, n)
+
+    s_loop, ok_loop, st_loop = insert(cfg, cfg.init(), keys)
+    s_bulk, ok_bulk, st_bulk = insert_bulk(cfg, cfg.init(), keys)
+
+    assert int(ok_loop.sum()) == int(ok_bulk.sum())
+    assert int(s_bulk.count) == int(ok_bulk.sum())
+    # identical query results on the batch (both fully succeed at this load)
+    np.testing.assert_array_equal(
+        np.asarray(query(cfg, s_loop, keys)),
+        np.asarray(query(cfg, s_bulk, keys)))
+    assert np.asarray(query(cfg, s_bulk, keys))[np.asarray(ok_bulk)].all()
+    # the single up-front sort beats per-round claim sorting
+    assert int(st_bulk.rounds) < int(st_loop.rounds)
+
+
+def test_order_restoration_with_valid_mask():
+    """ok must come back in original batch order despite the internal sorts:
+    with all-valid keys succeeding at low load, ok == the valid pattern."""
+    cfg = CONFIGS[0]
+    rng = np.random.default_rng(11)
+    keys = make_keys(rng, 512)
+    valid = jnp.asarray(rng.random(512) < 0.6)
+    state, ok, _ = insert_bulk(cfg, cfg.init(), keys, valid=valid)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(valid))
+    assert int(state.count) == int(valid.sum())
+    present = np.asarray(query(cfg, state, keys))
+    assert present[np.asarray(valid)].all()
+
+
+def test_bulk_insert_delete_roundtrip():
+    cfg = CONFIGS[1]
+    rng = np.random.default_rng(3)
+    keys = make_keys(rng, int(cfg.num_slots * 0.8))
+    state, ok, _ = insert_bulk(cfg, cfg.init(), keys)
+    assert np.asarray(ok).all()
+    state, del_ok = cf_delete(cfg, state, keys)
+    assert np.asarray(del_ok).all()
+    assert int(state.count) == 0
+    assert not np.asarray(state.table).any()
+
+
+def test_bulk_jit_and_wrapper():
+    cfg = CONFIGS[0]
+    jbulk = jax.jit(functools.partial(insert_bulk, cfg))
+    keys = make_keys(np.random.default_rng(5), 256)
+    state, ok, _ = jbulk(cfg.init(), keys)
+    assert np.asarray(ok).all()
+    f = CuckooFilter(cfg)
+    ok2, _ = f.insert_bulk(keys)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(ok2))
+    np.testing.assert_array_equal(np.asarray(state.table),
+                                  np.asarray(f.state.table))
+
+
+@pytest.mark.parametrize("fn", [insert, insert_bulk],
+                         ids=["insert", "insert_bulk"])
+def test_dedup_within_batch_roundtrip(fn):
+    """Regression: duplicated batches under dedup are idempotent sets —
+    insert -> delete -> query round-trips leave the filter empty."""
+    cfg = CONFIGS[0]
+    base = make_keys(np.random.default_rng(13), 32)
+    dup = jnp.concatenate([base, base, base[:16]])       # 80 keys, 32 unique
+
+    # multiset default: every copy inserted
+    s_multi, ok_multi, _ = fn(cfg, cfg.init(), dup)
+    assert np.asarray(ok_multi).all()
+    assert int(s_multi.count) == 80
+
+    # dedup: one copy per value; duplicates report the first copy's ok
+    s_set, ok_set, _ = fn(cfg, cfg.init(), dup, dedup_within_batch=True)
+    assert np.asarray(ok_set).all()
+    assert int(s_set.count) == 32
+    assert np.asarray(query(cfg, s_set, dup)).all()
+    # one delete round per value empties the filter (no stranded copies)
+    s_after, del_ok = cf_delete(cfg, s_set, base)
+    assert np.asarray(del_ok).all()
+    assert int(s_after.count) == 0
+    assert not np.asarray(query(cfg, s_after, base)).any()
+
+
+def test_dedup_respects_valid_mask():
+    """A padding (invalid) copy must never become the representative."""
+    cfg = CONFIGS[0]
+    base = make_keys(np.random.default_rng(17), 8)
+    dup = jnp.concatenate([base, base])
+    valid = jnp.concatenate([jnp.zeros((8,), bool), jnp.ones((8,), bool)])
+    state, ok, _ = insert_bulk(cfg, cfg.init(), dup, valid=valid,
+                               dedup_within_batch=True)
+    assert int(state.count) == 8
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(valid))
+
+
+def test_bulk_residue_spills_to_eviction_loop():
+    """At very high load phase 1+2 can't place everything; the residue must
+    still land via the eviction loop."""
+    cfg = CuckooConfig(num_buckets=64, fp_bits=16, bucket_size=16,
+                       policy="xor", eviction="bfs", hash_kind="fmix32")
+    rng = np.random.default_rng(19)
+    n = int(cfg.num_slots * 0.95)
+    keys = make_keys(rng, n)
+    state, ok, stats = insert_bulk(cfg, cfg.init(), keys)
+    assert float(np.asarray(ok).mean()) > 0.98
+    assert int(stats.rounds) > 2          # residue loop actually ran
+    present = np.asarray(query(cfg, state, keys))
+    assert present[np.asarray(ok)].all()
+
+
+def test_sharded_bulk_single_device_mesh():
+    """bulk=True through the all-to-all on a 1-device mesh matches plain."""
+    from repro.core.sharded_filter import (
+        ShardedCuckooConfig,
+        ShardedCuckooFilter,
+    )
+
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = ShardedCuckooConfig.for_capacity(
+        2048, num_shards=1, fp_bits=16, bucket_size=16, hash_kind="fmix32")
+    filt = ShardedCuckooFilter(cfg, mesh, local_batch=1024)
+    rng = np.random.default_rng(23)
+    keys = make_keys(rng, 1024)
+    ok, routed = filt.insert(keys, bulk=True)
+    assert np.asarray(routed).all()
+    assert np.asarray(ok).all()
+    q, _ = filt.query(keys)
+    assert np.asarray(q).all()
+    assert filt.total_count == 1024
+
+
+# ---------------------------------------------------------------------------
+# Segmented-scan helpers (core/layout.py).
+# ---------------------------------------------------------------------------
+
+def test_segment_ranks():
+    ids = jnp.asarray([2, 2, 2, 5, 7, 7, 9], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(L.segment_ranks(ids)), [0, 1, 2, 0, 0, 1, 0])
+
+
+def test_nth_free_slot():
+    btags = jnp.asarray([[0, 3, 0, 0],     # free slots at 0, 2, 3
+                         [1, 2, 3, 4],     # full
+                         [0, 0, 0, 0]], jnp.uint32)
+    rank = jnp.asarray([1, 0, 3], jnp.int32)
+    placed, slot = L.nth_free_slot(btags, rank)
+    np.testing.assert_array_equal(np.asarray(placed), [True, False, True])
+    assert int(slot[0]) == 2              # rank 1 -> second free slot
+    assert int(slot[2]) == 3
+    placed2, _ = L.nth_free_slot(btags, jnp.asarray([3, 0, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(placed2), [False, False, True])

@@ -14,7 +14,10 @@ from repro.filters.blocked_bloom import BloomConfig
 from repro.kernels import ops as K
 from repro.kernels import ref as R
 from repro.kernels.bloom import bloom_insert_pallas, bloom_query_pallas
-from repro.kernels.cuckoo_insert import cuckoo_insert_pallas
+from repro.kernels.cuckoo_insert import (
+    cuckoo_insert_bulk_pallas,
+    cuckoo_insert_pallas,
+)
 from repro.kernels.cuckoo_query import cuckoo_query_pallas
 from repro.kernels.hash64 import hash64_pallas
 from repro.kernels.kmer_pack import kmer_pack_pallas
@@ -65,6 +68,38 @@ def test_cuckoo_insert_kernel_sweep(nb, f, b, pol, hk, n, blk):
     t_want, ok_want = R.cuckoo_insert_ref(cfg, table, keys[:, 0], keys[:, 1])
     np.testing.assert_allclose(np.asarray(t_got), np.asarray(t_want), rtol=0)
     np.testing.assert_allclose(np.asarray(ok_got), np.asarray(ok_want), rtol=0)
+
+
+@pytest.mark.parametrize("nb,f,b,pol,hk,n,blk", CUCKOO_SWEEP)
+def test_cuckoo_insert_bulk_kernel_sweep(nb, f, b, pol, hk, n, blk):
+    """Bucket-major kernel == sequential ref on the bucket-sorted stream."""
+    from repro.core import prepare_keys
+
+    rng = np.random.default_rng(nb * 13 + f)
+    cfg = CuckooConfig(num_buckets=nb, fp_bits=f, bucket_size=b,
+                       policy=pol, hash_kind=hk)
+    table = cfg.layout.empty_table()
+    keys = rand_keys(rng, n)
+    _, i1, _ = prepare_keys(cfg, keys)
+    ks = keys[jnp.argsort(i1.astype(jnp.int32), stable=True)]
+    t_got, ok_got = cuckoo_insert_bulk_pallas(cfg, table, ks[:, 0], ks[:, 1],
+                                              block_keys=blk)
+    t_want, ok_want = R.cuckoo_insert_ref(cfg, table, ks[:, 0], ks[:, 1])
+    np.testing.assert_array_equal(np.asarray(t_got), np.asarray(t_want))
+    np.testing.assert_array_equal(np.asarray(ok_got), np.asarray(ok_want))
+
+
+def test_cuckoo_insert_bulk_ops_wrapper():
+    """ops.cuckoo_insert_bulk sorts, pads, and restores batch order."""
+    cfg = CuckooConfig(num_buckets=128, fp_bits=16, bucket_size=16,
+                       hash_kind="fmix32")
+    rng = np.random.default_rng(2)
+    keys = rand_keys(rng, 1000)  # not a block multiple
+    state, ok = K.cuckoo_insert_bulk(cfg, cfg.init(), keys)
+    assert ok.shape == (1000,)
+    assert int(state.count) == int(np.asarray(ok).sum())
+    got = K.cuckoo_query(cfg, state, keys)
+    assert np.asarray(got)[np.asarray(ok)].all()
 
 
 def test_cuckoo_insert_kernel_respects_valid_mask():

@@ -85,8 +85,10 @@ def test_param_shardings_divisibility_guards():
     from repro.launch.shardings import make_param_shardings
     from repro.models import build_model
 
+    from repro.core import compat
+
     mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **compat.auto_axis_types_kw(2))
     for arch in ("hubert_xlarge", "mamba2_130m", "mixtral_8x22b"):
         cfg = get_config(arch)
         model = build_model(cfg)
