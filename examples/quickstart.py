@@ -1,4 +1,4 @@
-"""Quickstart: the Cuckoo-TPU filter public API in 60 lines.
+"""Quickstart: the unified AMQ API in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,48 +6,65 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CuckooConfig, CuckooFilter, keys_from_numpy
+from repro import amq
+from repro.core import CuckooConfig, keys_from_numpy
 
-# 1. Size a filter for 100k items at 95% load, paper defaults (16-bit
-#    fingerprints, 16-slot buckets, XOR placement, BFS eviction).
-cfg = CuckooConfig.for_capacity(100_000, load_factor=0.95)
-filt = CuckooFilter(cfg)
-print(f"filter: {cfg.num_buckets} buckets x {cfg.bucket_size} slots, "
-      f"{cfg.table_bytes / 1024:.0f} KiB, expected FPR at 95% load: "
-      f"{cfg.expected_fpr(0.95):.5f}")
+# 1. One registry, every filter family. Pick a backend by name and size it
+#    by capacity — paper defaults (16-bit fingerprints, 16-slot buckets,
+#    XOR placement, BFS eviction) apply for "cuckoo".
+filt = amq.make("cuckoo", capacity=100_000, load_factor=0.95)
+print(f"{filt.name}: {filt.table_bytes / 1024:.0f} KiB, expected FPR at "
+      f"95% load: {filt.expected_fpr(0.95):.5f}, caps={filt.capabilities}")
 
 # 2. Insert a batch of 64-bit keys (uint32[n, 2] little-endian pairs).
-#    insert_bulk sorts the batch by bucket once and commits whole buckets
-#    per round (DESIGN.md §6) — the fast path for building a filter.
+#    bulk=True takes the bucket-sorted bulk-build fast path (DESIGN.md §6).
 rng = np.random.default_rng(0)
 raw = rng.integers(0, 2**63, size=95_000, dtype=np.uint64)
 keys = jnp.asarray(keys_from_numpy(raw))
-ok, stats = filt.insert_bulk(keys)
-print(f"inserted {int(ok.sum())}/{len(raw)} "
-      f"(load {filt.load_factor:.2%}, {int(stats.rounds)} rounds, "
-      f"max eviction chain {int(np.max(np.asarray(stats.evictions)))})")
+report = filt.insert(keys, bulk=True)
+print(f"inserted {int(report.ok.sum())}/{len(raw)} "
+      f"(load {filt.load_factor:.2%}, {int(report.rounds)} rounds, "
+      f"max eviction chain {int(np.max(np.asarray(report.evictions)))})")
 
 # 3. Query: no false negatives, bounded false positives.
-assert bool(filt.query(keys).all())
+assert bool(filt.query(keys).hits.all())
 neg = jnp.asarray(keys_from_numpy(
     rng.integers(2**63, 2**64, size=50_000, dtype=np.uint64)))
-print(f"empirical FPR: {float(filt.query(neg).mean()):.5f}")
+print(f"empirical FPR: {float(filt.query(neg).hits.mean()):.5f}")
 
-# 4. Delete — the paper's headline capability vs Bloom filters.
+# 4. Delete — the paper's headline capability vs Bloom filters, and a
+#    capability flag here: handles raise on unsupported ops instead of
+#    silently corrupting (try backend='bloom').
 filt.delete(keys[:10_000])
-print(f"after deleting 10k: count={int(filt.state.count)}")
+print(f"after deleting 10k: count={filt.count()}")
 
-# 5. The offset placement policy sizes tables exactly (no power-of-two
-#    over-provisioning), for one bit of fingerprint (paper §4.6.2).
+# 5. Same program, any backend: iterate the registry and branch on
+#    capabilities, never on names.
+demo = jnp.asarray(keys_from_numpy(
+    rng.integers(0, 2**63, size=4_096, dtype=np.uint64)))
+for name in amq.names():
+    h = amq.make(name, capacity=8_192)
+    caps = h.capabilities
+    h.insert(demo)
+    hits = float(np.asarray(h.query(demo).hits).mean())
+    deleted = bool(caps.supports_delete) and bool(h.delete(demo).ok.any())
+    print(f"  {name:15s} hits={hits:.3f} delete={'yes' if deleted else 'no'} "
+          f"exact={caps.exact} bulk={caps.supports_bulk}")
+
+# 6. The classic config surface still exists (and sizes tables exactly with
+#    the OFFSET policy — no power-of-two over-provisioning, paper §4.6.2);
+#    pre-built configs drop straight into the registry.
 flex = CuckooConfig.for_capacity(100_000, load_factor=0.95, policy="offset")
 print(f"offset policy: {flex.table_bytes / 1024:.0f} KiB vs XOR "
-      f"{cfg.table_bytes / 1024:.0f} KiB")
+      f"{filt.table_bytes / 1024:.0f} KiB")
+exact = amq.make("cuckoo", config=flex)
+print(f"handle from config: {exact.name}, {exact.table_bytes / 1024:.0f} KiB")
 
-# 6. Pallas kernel path (TPU-target; interpret-mode on CPU): batch query
-#    against a VMEM-resident table.
+# 7. Pallas kernel path (TPU-target; interpret-mode on CPU): batch query
+#    against a VMEM-resident table — kernels consume the same config/state.
 from repro.kernels import cuckoo_query
 
 live = keys[10_000:14_096]  # still stored (first 10k were deleted above)
-hits = cuckoo_query(cfg, filt.state, live)
+hits = cuckoo_query(filt.config, filt.state, live)
 print(f"kernel query: {int(hits.sum())}/4096 hits (expect 4096)")
 assert int(hits.sum()) == 4096

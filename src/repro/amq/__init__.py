@@ -1,0 +1,50 @@
+"""Unified AMQ API: one protocol, one registry, every filter family.
+
+    from repro import amq
+
+    amq.names()                          # registered backends
+    h = amq.make("cuckoo", capacity=1_000_000)
+    h.insert(keys, bulk=True)            # -> InsertReport(ok, evictions, ...)
+    h.query(keys).hits                   # -> bool[n]
+    h.delete(keys)                       # capability-gated
+
+See DESIGN.md §7 for the protocol, capability flags, and result types.
+
+Only :mod:`repro.amq.protocol` is imported eagerly (it is dependency-light
+and re-exported by ``repro.core``/``repro.filters``); the registry and its
+adapters — which import the whole filter zoo — load lazily on first use, so
+``import repro.core`` never cycles through this package.
+"""
+
+from .protocol import (  # noqa: F401
+    AMQConfig,
+    Capabilities,
+    DeleteReport,
+    InsertReport,
+    QueryResult,
+    fpr_tolerance,
+    load_factor,
+)
+
+_LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter")
+
+__all__ = list(_LAZY) + [
+    "AMQConfig", "Capabilities", "DeleteReport", "InsertReport",
+    "QueryResult", "fpr_tolerance", "load_factor",
+]
+
+
+def __getattr__(name):
+    if name in ("make", "get", "names", "register"):
+        from . import registry
+
+        return getattr(registry, name)
+    if name == "FilterHandle":
+        from .handle import FilterHandle
+
+        return FilterHandle
+    if name == "AMQAdapter":
+        from .adapters import AMQAdapter
+
+        return AMQAdapter
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,418 @@
+"""Adapters: every filter family of the repo behind the unified AMQ protocol.
+
+One :class:`AMQAdapter` per backend normalizes the family's native surface
+(``CuckooFilter.insert`` returning ``(ok, InsertStats)``, baselines returning
+bare masks, the sharded filter's ``(ok, routed)`` pairs, the Python oracle's
+host-side batches) to the protocol of :mod:`repro.amq.protocol`:
+
+    insert/insert_bulk(config, state, keys, *, valid, dedup_within_batch)
+        -> (state', InsertReport)
+    query(config, state, keys, *, valid) -> (state, QueryResult)
+    delete(config, state, keys, *, valid) -> (state', DeleteReport)
+
+Adapters are *static* objects: all jit-compilation lives in the
+:class:`repro.amq.handle.FilterHandle` (or, for the sharded backend, in a
+shard_map builder cache below), so the functional ops stay composable inside
+larger jitted programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cuckoo_filter as CF
+from ..core import sharded_filter as SF
+from ..core.compat import shard_map as _shard_map
+from ..filters import bcht as HT
+from ..filters import blocked_bloom as BB
+from ..filters import cpu_reference as PYREF
+from ..filters import quotient as QF
+from ..filters import two_choice as TC
+from .protocol import (
+    Capabilities,
+    DeleteReport,
+    InsertReport,
+    QueryResult,
+    all_routed,
+    ensure_valid,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AMQAdapter:
+    """One backend behind the protocol. Fields are plain callables (not
+    bound methods), so ``adapter.insert(config, state, keys)`` works
+    directly and composes with ``functools.partial`` + ``jax.jit``.
+
+    ``jit=False`` marks backends whose ops must not be re-jitted by the
+    handle (the host-side oracle; the sharded backend, which jits its own
+    shard_map'd programs per batch shape).
+    """
+
+    name: str
+    capabilities: Capabilities
+    make_config: Callable[..., Any]      # (capacity, **kw) -> config
+    init: Callable[[Any], Any]           # config -> fresh state
+    insert: Callable[..., Any]
+    query: Callable[..., Any]
+    delete: Optional[Callable[..., Any]] = None
+    insert_bulk: Optional[Callable[..., Any]] = None
+    jit: bool = True
+
+
+def _zero_stats(n):
+    return jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Core cuckoo filter (the paper's contribution).
+# ---------------------------------------------------------------------------
+
+def _cuckoo_insert(config, state, keys, *, valid=None,
+                   dedup_within_batch=False, _fn=CF.insert):
+    state, ok, stats = _fn(config, state, keys, valid,
+                           dedup_within_batch=dedup_within_batch)
+    return state, InsertReport(ok, stats.evictions, stats.rounds,
+                               all_routed(keys))
+
+
+def _cuckoo_query(config, state, keys, *, valid=None):
+    hits = CF.query(config, state, keys) & ensure_valid(keys, valid)
+    return state, QueryResult(hits, all_routed(keys))
+
+
+def _cuckoo_delete(config, state, keys, *, valid=None):
+    state, ok = CF.delete(config, state, keys, valid)
+    return state, DeleteReport(ok, all_routed(keys))
+
+
+def _cuckoo_make_config(capacity, **kw):
+    # Registry default: the vectorized fmix32 pair-hash (the paper's
+    # xxhash64 stays available via hash_kind="xxhash64").
+    kw.setdefault("hash_kind", "fmix32")
+    return CF.CuckooConfig.for_capacity(capacity, **kw)
+
+
+CUCKOO = AMQAdapter(
+    name="cuckoo",
+    capabilities=Capabilities(supports_delete=True, supports_bulk=True,
+                              counting=True),
+    make_config=_cuckoo_make_config,
+    init=lambda cfg: cfg.init(),
+    insert=_cuckoo_insert,
+    insert_bulk=functools.partial(_cuckoo_insert, _fn=CF.insert_bulk),
+    query=_cuckoo_query,
+    delete=_cuckoo_delete,
+)
+
+
+# ---------------------------------------------------------------------------
+# Blocked Bloom (append-only baseline).
+# ---------------------------------------------------------------------------
+
+def _bloom_insert(config, state, keys, *, valid=None,
+                  dedup_within_batch=False):
+    del dedup_within_batch  # idempotent by construction
+    state, ok = BB.insert(config, state, keys, valid)
+    return state, InsertReport(ok, *_zero_stats(keys.shape[0]),
+                               all_routed(keys))
+
+
+def _bloom_query(config, state, keys, *, valid=None):
+    hits = BB.query(config, state, keys) & ensure_valid(keys, valid)
+    return state, QueryResult(hits, all_routed(keys))
+
+
+BLOOM = AMQAdapter(
+    name="bloom",
+    capabilities=Capabilities(supports_delete=False, counting=False),
+    make_config=lambda capacity, **kw: BB.BloomConfig.for_capacity(
+        capacity, **kw),
+    init=lambda cfg: cfg.init(),
+    insert=_bloom_insert,
+    query=_bloom_query,
+)
+
+
+# ---------------------------------------------------------------------------
+# Two-Choice Filter.
+# ---------------------------------------------------------------------------
+
+def _tcf_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
+    if dedup_within_batch:
+        raise NotImplementedError("tcf: dedup_within_batch not supported")
+    state, ok = TC.insert(config, state, keys, valid)
+    return state, InsertReport(ok, *_zero_stats(keys.shape[0]),
+                               all_routed(keys))
+
+
+def _tcf_query(config, state, keys, *, valid=None):
+    hits = TC.query(config, state, keys) & ensure_valid(keys, valid)
+    return state, QueryResult(hits, all_routed(keys))
+
+
+def _tcf_delete(config, state, keys, *, valid=None):
+    state, ok = TC.delete(config, state, keys, valid)
+    return state, DeleteReport(ok, all_routed(keys))
+
+
+TCF = AMQAdapter(
+    name="tcf",
+    capabilities=Capabilities(supports_delete=True, counting=True),
+    make_config=lambda capacity, **kw: TC.TCFConfig.for_capacity(
+        capacity, **kw),
+    init=lambda cfg: cfg.init(),
+    insert=_tcf_insert,
+    query=_tcf_query,
+    delete=_tcf_delete,
+)
+
+
+# ---------------------------------------------------------------------------
+# GPU Quotient Filter analogue (serial Robin Hood).
+# ---------------------------------------------------------------------------
+
+def _gqf_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
+    if dedup_within_batch:
+        raise NotImplementedError("gqf: dedup_within_batch not supported")
+    state, ok = QF.insert(config, state, keys, valid)
+    return state, InsertReport(ok, *_zero_stats(keys.shape[0]),
+                               all_routed(keys))
+
+
+def _gqf_query(config, state, keys, *, valid=None):
+    hits = QF.query(config, state, keys) & ensure_valid(keys, valid)
+    return state, QueryResult(hits, all_routed(keys))
+
+
+def _gqf_delete(config, state, keys, *, valid=None):
+    state, ok = QF.delete(config, state, keys, valid)
+    return state, DeleteReport(ok, all_routed(keys))
+
+
+GQF = AMQAdapter(
+    name="gqf",
+    capabilities=Capabilities(supports_delete=True, counting=True,
+                              serial_insert=True),
+    make_config=lambda capacity, **kw: QF.GQFConfig.for_capacity(
+        capacity, **kw),
+    init=lambda cfg: cfg.init(),
+    insert=_gqf_insert,
+    query=_gqf_query,
+    delete=_gqf_delete,
+)
+
+
+# ---------------------------------------------------------------------------
+# BCHT (exact membership).
+# ---------------------------------------------------------------------------
+
+def _bcht_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
+    if dedup_within_batch:
+        raise NotImplementedError("bcht: dedup_within_batch not supported")
+    state, ok = HT.insert(config, state, keys, valid)
+    return state, InsertReport(ok, *_zero_stats(keys.shape[0]),
+                               all_routed(keys))
+
+
+def _bcht_query(config, state, keys, *, valid=None):
+    hits = HT.query(config, state, keys) & ensure_valid(keys, valid)
+    return state, QueryResult(hits, all_routed(keys))
+
+
+def _bcht_delete(config, state, keys, *, valid=None):
+    state, ok = HT.delete(config, state, keys, valid)
+    return state, DeleteReport(ok, all_routed(keys))
+
+
+BCHT = AMQAdapter(
+    name="bcht",
+    capabilities=Capabilities(supports_delete=True, counting=True,
+                              exact=True),
+    make_config=lambda capacity, **kw: HT.BCHTConfig.for_capacity(
+        capacity, **kw),
+    init=lambda cfg: cfg.init(),
+    insert=_bcht_insert,
+    query=_bcht_query,
+    delete=_bcht_delete,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded cuckoo filter.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedAMQConfig:
+    """Protocol config for the sharded backend: inner config + its mesh.
+
+    Hashable (``jax.sharding.Mesh`` is) so it stays a valid static arg for
+    the shard_map builder cache below.
+    """
+
+    inner: SF.ShardedCuckooConfig
+    mesh: Any  # jax.sharding.Mesh
+
+    @property
+    def num_slots(self) -> int:
+        return self.inner.num_slots
+
+    @property
+    def table_bytes(self) -> int:
+        return self.inner.table_bytes
+
+    def expected_fpr(self, load_factor: float) -> float:
+        return self.inner.expected_fpr(load_factor)
+
+    def init(self) -> SF.ShardedCuckooState:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(
+            self.inner.init(),
+            NamedSharding(self.mesh, P(self.inner.axis_name)))
+
+
+def _default_mesh(axis_name: str, num_shards: Optional[int]):
+    devices = jax.devices()
+    n = num_shards or len(devices)
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis_name,)), n
+
+
+def _sharded_make_config(capacity, *, num_shards=None, mesh=None,
+                         axis_name="data", **kw):
+    if mesh is None:
+        mesh, num_shards = _default_mesh(axis_name, num_shards)
+    elif num_shards is None:
+        num_shards = mesh.shape[axis_name]
+    kw.setdefault("hash_kind", "fmix32")
+    inner = SF.ShardedCuckooConfig.for_capacity(
+        capacity, num_shards, axis_name=axis_name, **kw)
+    return ShardedAMQConfig(inner, mesh)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_fn(config: ShardedAMQConfig, op: str, local_batch: int,
+                dedup: bool):
+    from jax.sharding import PartitionSpec as P
+
+    ax = config.inner.axis_name
+    fn = SF._make_sharded_op(config.inner, op, local_batch,
+                             dedup_within_batch=dedup)
+    mapped = _shard_map(fn, mesh=config.mesh,
+                        in_specs=(P(ax), P(ax), P(ax), P(ax)),
+                        out_specs=(P(ax), P(ax), P(ax), P(ax)))
+    return jax.jit(mapped)
+
+
+def _sharded_run(config, state, keys, op, valid, dedup=False):
+    valid = ensure_valid(keys, valid)
+    # shard_map splits the global batch across the mesh axis; bin capacity
+    # must be sized from the *per-device* slice, not the global batch.
+    num_shards = config.inner.num_shards
+    n = keys.shape[0]
+    if n % num_shards:
+        raise ValueError(
+            f"sharded-cuckoo: batch size {n} not divisible by "
+            f"num_shards={num_shards}")
+    fn = _sharded_fn(config, op, n // num_shards, dedup)
+    table, count, result, routed = fn(state.table, state.count, keys, valid)
+    return SF.ShardedCuckooState(table, count), result, routed
+
+
+def _sharded_insert(config, state, keys, *, valid=None,
+                    dedup_within_batch=False, _op="insert"):
+    state, ok, routed = _sharded_run(config, state, keys, _op, valid,
+                                     dedup_within_batch)
+    n = keys.shape[0]
+    return state, InsertReport(ok, *_zero_stats(n), routed)
+
+
+def _sharded_query(config, state, keys, *, valid=None):
+    state, hits, routed = _sharded_run(config, state, keys, "query", valid)
+    return state, QueryResult(hits, routed)
+
+
+def _sharded_delete(config, state, keys, *, valid=None):
+    state, ok, routed = _sharded_run(config, state, keys, "delete", valid)
+    return state, DeleteReport(ok, routed)
+
+
+SHARDED_CUCKOO = AMQAdapter(
+    name="sharded-cuckoo",
+    capabilities=Capabilities(supports_delete=True, supports_bulk=True,
+                              supports_sharding=True, counting=True),
+    make_config=_sharded_make_config,
+    init=lambda cfg: cfg.init(),
+    insert=_sharded_insert,
+    insert_bulk=functools.partial(_sharded_insert, _op="insert_bulk"),
+    query=_sharded_query,
+    delete=_sharded_delete,
+    jit=False,  # ops are shard_map programs jitted per batch shape above
+)
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python oracle (host-side; the conformance reference).
+# ---------------------------------------------------------------------------
+
+def _py_mask(keys, valid):
+    if valid is None:
+        return np.ones((np.asarray(keys).shape[0],), bool)
+    return np.asarray(valid, bool)
+
+
+def _py_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
+    raw = PYREF.keys_to_u64(keys)
+    v = _py_mask(keys, valid)
+    ok = np.zeros((raw.shape[0],), bool)
+    seen = set()
+    for i, k in enumerate(raw.tolist()):
+        if not v[i]:
+            continue
+        if dedup_within_batch and k in seen:
+            ok[i] = ok[np.flatnonzero((raw == k) & v)[0]]
+            continue
+        seen.add(k)
+        ok[i] = state.insert(k)
+    n = raw.shape[0]
+    return state, InsertReport(ok, np.zeros((n,), np.int32),
+                               np.zeros((), np.int32), np.ones((n,), bool))
+
+
+def _py_query(config, state, keys, *, valid=None):
+    hits = state.query_batch(PYREF.keys_to_u64(keys)) & _py_mask(keys, valid)
+    return state, QueryResult(hits, np.ones((hits.shape[0],), bool))
+
+
+def _py_delete(config, state, keys, *, valid=None):
+    raw = PYREF.keys_to_u64(keys)
+    v = _py_mask(keys, valid)
+    ok = np.array([v[i] and state.delete(int(k))
+                   for i, k in enumerate(raw)], bool)
+    return state, DeleteReport(ok, np.ones((raw.shape[0],), bool))
+
+
+CPU_CUCKOO = AMQAdapter(
+    name="cpu-cuckoo",
+    capabilities=Capabilities(supports_delete=True, counting=True,
+                              serial_insert=True),
+    make_config=lambda capacity, **kw: PYREF.PyCuckooConfig.for_capacity(
+        capacity, **kw),
+    init=lambda cfg: cfg.init(),
+    insert=_py_insert,
+    query=_py_query,
+    delete=_py_delete,
+    jit=False,
+)
+
+
+DEFAULT_ADAPTERS: Dict[str, AMQAdapter] = {
+    a.name: a for a in
+    (CUCKOO, BLOOM, TCF, GQF, BCHT, SHARDED_CUCKOO, CPU_CUCKOO)
+}

@@ -1,0 +1,118 @@
+"""FilterHandle: the one stateful object every consumer programs against.
+
+Wraps (adapter, config, state) with per-op cached jits. State buffers are
+donated to mutating ops on accelerator backends (the handle immediately
+replaces its state, so the old buffers are dead — donation lets XLA update
+the table in place, the batch analogue of the paper's in-place CAS writes);
+on CPU, where XLA does not support donation, the jits are built without it
+to avoid per-compile warnings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from .adapters import AMQAdapter
+from .protocol import (
+    Capabilities,
+    DeleteReport,
+    InsertReport,
+    QueryResult,
+    load_factor as _load_factor,
+)
+
+
+class FilterHandle:
+    """Stateful AMQ handle with capability-driven, uniform ops.
+
+    Obtain via :func:`repro.amq.make`. All ops take ``uint32[n, 2]`` key
+    batches and return the protocol's standardized reports; ``insert`` takes
+    the unified keyword options (``bulk``, ``dedup_within_batch``,
+    ``valid``) and raises on capability violations instead of silently
+    degrading.
+    """
+
+    def __init__(self, adapter: AMQAdapter, config: Any, state: Any = None):
+        self.adapter = adapter
+        self.config = config
+        self.state = adapter.init(config) if state is None else state
+        self._jits = {}
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self.adapter.name
+
+    @property
+    def capabilities(self) -> Capabilities:
+        return self.adapter.capabilities
+
+    @property
+    def load_factor(self) -> float:
+        return _load_factor(self.config, self.state)
+
+    @property
+    def table_bytes(self) -> int:
+        return self.config.table_bytes
+
+    def expected_fpr(self, load_factor: Optional[float] = None) -> float:
+        """Analytic FPR at ``load_factor`` (default: current occupancy)."""
+        lf = self.load_factor if load_factor is None else load_factor
+        return self.config.expected_fpr(lf)
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return (f"FilterHandle({self.adapter.name!r}, "
+                f"slots={self.config.num_slots}, "
+                f"bytes={self.config.table_bytes}, "
+                f"caps={self.adapter.capabilities})")
+
+    # -- ops -----------------------------------------------------------------
+
+    def _fn(self, op: str, **static):
+        key = (op, tuple(sorted(static.items())))
+        if key not in self._jits:
+            raw = functools.partial(getattr(self.adapter, op), self.config,
+                                    **static)
+            if self.adapter.jit:
+                donate = ((0,) if op != "query"
+                          and jax.default_backend() != "cpu" else ())
+                raw = jax.jit(raw, donate_argnums=donate)
+            self._jits[key] = raw
+        return self._jits[key]
+
+    def insert(self, keys, *, bulk: bool = False,
+               dedup_within_batch: bool = False,
+               valid=None) -> InsertReport:
+        """Insert a batch. ``bulk=True`` requires ``supports_bulk``."""
+        op = "insert"
+        if bulk:
+            if not self.adapter.capabilities.supports_bulk:
+                raise NotImplementedError(
+                    f"{self.name}: no bulk-build path "
+                    "(capabilities.supports_bulk is False)")
+            op = "insert_bulk"
+        fn = self._fn(op, dedup_within_batch=dedup_within_batch)
+        self.state, report = fn(self.state, keys, valid=valid)
+        return report
+
+    def query(self, keys, *, valid=None) -> QueryResult:
+        _, result = self._fn("query")(self.state, keys, valid=valid)
+        return result
+
+    def delete(self, keys, *, valid=None) -> DeleteReport:
+        if not self.adapter.capabilities.supports_delete:
+            raise NotImplementedError(
+                f"{self.name}: append-only structure "
+                "(capabilities.supports_delete is False)")
+        self.state, report = self._fn("delete")(self.state, keys, valid=valid)
+        return report
+
+    def count(self) -> int:
+        """Stored-key count (summed across shards where applicable)."""
+        c = getattr(self.state, "count")
+        return int(np.sum(np.asarray(c)))

@@ -1,0 +1,170 @@
+"""The unified AMQ protocol: result types, capability model, config contract.
+
+Every filter family in this repo (the paper's Cuckoo filter, its mesh-sharded
+variant, the four baselines, and the pure-Python oracle) is exposed through
+one functional contract so that consumers — benchmarks, the training-data
+deduper, the serving prefix cache — program against *capabilities* instead of
+concrete classes (DESIGN.md §7):
+
+    insert / insert_bulk :: (config, state, keys, *, opts) -> (state', InsertReport)
+    query                :: (config, state, keys, *, opts) -> (state,  QueryResult)
+    delete               :: (config, state, keys, *, opts) -> (state', DeleteReport)
+
+``keys`` are always ``uint32[n, 2]`` little-endian (lo, hi) pairs of 64-bit
+keys (see :func:`repro.core.hashing.keys_from_numpy`). Results are pytrees of
+arrays so the ops stay jit-compatible with ``config`` static.
+
+This module is dependency-light on purpose (jax/numpy only): both
+``repro.core`` and ``repro.filters`` re-export these types, so it must not
+import either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Capability model.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can do — consumers branch on these, never on names.
+
+    * ``supports_delete`` — keys can be removed (the paper's headline
+      capability vs append-only Bloom filters).
+    * ``supports_bulk`` — has a dedicated bulk-build insertion fast path
+      (``insert(..., bulk=True)`` routes to it).
+    * ``supports_sharding`` — state lives sharded across a device mesh; ops
+      run under ``shard_map`` and report a ``routed`` mask (keys that
+      overflowed their routing bin and must be retried).
+    * ``counting`` — multiset semantics: inserting a key twice stores two
+      copies and each needs its own delete.
+    * ``exact`` — zero false positives (stores full keys, not fingerprints).
+    * ``serial_insert`` — insertion is inherently sequential per key (the
+      GQF's Robin-Hood shifting); benchmark consumers cap its prefill sizes.
+    """
+
+    supports_delete: bool = True
+    supports_bulk: bool = False
+    supports_sharding: bool = False
+    counting: bool = True
+    exact: bool = False
+    serial_insert: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Standardized result types (pytrees — safe jit return values).
+# ---------------------------------------------------------------------------
+
+class InsertReport(NamedTuple):
+    """Uniform insertion result.
+
+    * ``ok`` — bool[n]; False means the structure was too full for that key.
+    * ``evictions`` — int32[n] eviction-chain length (zeros for filters with
+      no eviction machinery).
+    * ``rounds`` — int32[] rounds the batch loop ran (0 for single-pass
+      structures).
+    * ``routed`` — bool[n]; False means the key never reached its owner shard
+      (sharded backends' fixed-capacity bins) and should be retried.
+      All-True for unsharded backends; ``ok`` is only meaningful where
+      ``routed``.
+    """
+
+    ok: jnp.ndarray
+    evictions: jnp.ndarray
+    rounds: jnp.ndarray
+    routed: jnp.ndarray
+
+
+class QueryResult(NamedTuple):
+    """Uniform membership-query result (``hits`` valid where ``routed``)."""
+
+    hits: jnp.ndarray
+    routed: jnp.ndarray
+
+
+class DeleteReport(NamedTuple):
+    """Uniform deletion result (``ok`` = a stored copy was removed)."""
+
+    ok: jnp.ndarray
+    routed: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Config/state contract.
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class AMQConfig(Protocol):
+    """Static, hashable configuration every backend config satisfies.
+
+    Concrete configs are frozen dataclasses usable as jit static arguments;
+    each also provides a ``for_capacity(capacity, **kw)`` constructor
+    (classmethod/staticmethod — not expressible in a Protocol method here).
+    """
+
+    @property
+    def num_slots(self) -> int:
+        """Nominal key capacity of the structure."""
+        ...
+
+    @property
+    def table_bytes(self) -> int:
+        """Device memory footprint of the state."""
+        ...
+
+    def expected_fpr(self, load_factor: float) -> float:
+        """Analytic false-positive rate at a given load (0.0 if exact)."""
+        ...
+
+    def init(self):
+        """Fresh empty state (a pytree of arrays, or a host-side oracle)."""
+        ...
+
+
+def load_factor(config: AMQConfig, state) -> float:
+    """Uniform occupancy: stored keys / nominal capacity.
+
+    Works for any backend whose state carries a ``count`` field (all of
+    ours, including the Python oracle's ``count`` attribute).
+    """
+    count = getattr(state, "count")
+    total = float(jnp.sum(count)) if hasattr(count, "ndim") else float(count)
+    return total / config.num_slots
+
+
+def all_routed(keys: jnp.ndarray) -> jnp.ndarray:
+    """The trivial ``routed`` mask for unsharded backends."""
+    return jnp.ones((keys.shape[0],), bool)
+
+
+def ensure_valid(keys: jnp.ndarray,
+                 valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Normalize an optional validity mask to a concrete bool[n]."""
+    if valid is None:
+        return jnp.ones((keys.shape[0],), bool)
+    return valid.astype(bool)
+
+
+def fpr_tolerance(expected: float, n_probes: int,
+                  factor: float = 5.0) -> tuple:
+    """Acceptance band (lo, hi) for an empirical FPR measured with
+    ``n_probes`` negatives against the analytic ``expected_fpr``.
+
+    The analytic formulas are asymptotic (blocked-Bloom skew, partial
+    buckets), hence the multiplicative ``factor``; the additive slack keeps
+    a few stray hits from failing low-FPR structures, and the lower bound
+    only applies when the model predicts enough hits to rise above counting
+    noise. Shared by benchmarks/fpr.py and the conformance suite so the
+    band cannot drift between them. Exact structures get (0, 0).
+    """
+    if expected == 0.0:
+        return 0.0, 0.0
+    hi = factor * expected + 8.0 / n_probes
+    lo = expected / factor if expected * n_probes >= 30 else 0.0
+    return lo, hi

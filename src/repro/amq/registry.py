@@ -1,0 +1,81 @@
+"""The AMQ registry: name -> adapter, and the ``make`` front door.
+
+    from repro import amq
+
+    handle = amq.make("cuckoo", capacity=1_000_000)
+    report = handle.insert(keys, bulk=True)
+    hits = handle.query(keys).hits
+
+Backends registered by default: ``cuckoo``, ``bloom``, ``tcf``, ``gqf``,
+``bcht``, ``sharded-cuckoo``, plus the host-side conformance oracle
+``cpu-cuckoo``. Register additional backends with :func:`register` — the
+conformance suite (tests/test_amq_api.py) and the benchmark consumers pick
+them up automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+from .adapters import DEFAULT_ADAPTERS, AMQAdapter
+from .handle import FilterHandle
+
+
+def _validate(adapter: AMQAdapter) -> None:
+    """Capability flags must match the ops actually provided, so consumers
+    that branch on a flag get the documented NotImplementedError — never a
+    'NoneType is not callable' deep inside a jit cache."""
+    caps = adapter.capabilities
+    if caps.supports_delete and not callable(adapter.delete):
+        raise ValueError(
+            f"{adapter.name!r}: supports_delete=True but no delete op")
+    if caps.supports_bulk and not callable(adapter.insert_bulk):
+        raise ValueError(
+            f"{adapter.name!r}: supports_bulk=True but no insert_bulk op")
+
+
+def register(adapter: AMQAdapter, *, overwrite: bool = False) -> None:
+    """Add a backend to the registry (``overwrite=True`` to replace)."""
+    _validate(adapter)
+    if adapter.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {adapter.name!r} already registered")
+    _REGISTRY[adapter.name] = adapter
+
+
+_REGISTRY: Dict[str, AMQAdapter] = {}
+for _adapter in DEFAULT_ADAPTERS.values():
+    register(_adapter)
+
+
+def get(name: str) -> AMQAdapter:
+    """Look up a backend adapter by registry name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown AMQ backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> Iterable[str]:
+    """Registered backend names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def make(name: str, capacity: Optional[int] = None, *,
+         config: Any = None, state: Any = None, **kw) -> FilterHandle:
+    """Build a ready-to-use :class:`FilterHandle`.
+
+    Either pass ``capacity`` (+ backend-specific sizing kwargs, forwarded to
+    the adapter's ``make_config``) or a pre-built ``config``. ``state``
+    resumes from an existing state pytree (checkpoint restore).
+    """
+    adapter = get(name)
+    if config is None:
+        if capacity is None:
+            raise TypeError("make() needs capacity=... or config=...")
+        config = adapter.make_config(capacity, **kw)
+    elif capacity is not None or kw:
+        extra = (["capacity"] if capacity is not None else []) + sorted(kw)
+        raise TypeError(f"config= given; conflicting arguments {extra}")
+    return FilterHandle(adapter, config, state)

@@ -7,8 +7,18 @@ Public surface:
 * :func:`insert_bulk` — bucket-sorted bulk-build insertion fast path.
 * :class:`CuckooFilter` — convenience OO wrapper.
 * ``sharded_filter`` — mesh-partitioned filter (PCF partitioning scheme).
+* AMQ protocol types (``Capabilities``, ``InsertReport``, ``QueryResult``,
+  ``DeleteReport``) re-exported from :mod:`repro.amq.protocol` — the unified
+  contract every backend implements (``repro.amq.make`` is the front door).
 """
 
+from ..amq.protocol import (  # noqa: F401
+    AMQConfig,
+    Capabilities,
+    DeleteReport,
+    InsertReport,
+    QueryResult,
+)
 from .cuckoo_filter import (  # noqa: F401
     CuckooConfig,
     CuckooFilter,

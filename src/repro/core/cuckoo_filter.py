@@ -631,32 +631,52 @@ def delete(
 # ---------------------------------------------------------------------------
 
 class CuckooFilter:
-    """Thin OO wrapper with per-config jitted entry points."""
+    """Thin OO wrapper with per-config cached jitted entry points.
+
+    New code should prefer :func:`repro.amq.make`\\ ("cuckoo", ...) — this
+    class is kept as a stable shim and mirrors the unified keyword surface:
+    ``insert(keys, bulk=..., dedup_within_batch=...)`` (matching
+    ``ShardedCuckooFilter.insert``).
+    """
 
     def __init__(self, config: CuckooConfig, state: Optional[CuckooState] = None,
                  dedup_within_batch: bool = False):
         self.config = config
         self.state = config.init() if state is None else state
-        dd = dict(dedup_within_batch=dedup_within_batch)
-        self._insert = jax.jit(functools.partial(insert, config, **dd))
-        self._insert_bulk = jax.jit(functools.partial(insert_bulk, config, **dd))
-        self._query = jax.jit(functools.partial(query, config))
-        self._delete = jax.jit(functools.partial(delete, config))
+        self._default_dedup = dedup_within_batch
+        self._jits = {}
 
-    def insert(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
-        self.state, ok, stats = self._insert(self.state, keys)
+    def _op(self, fn, **static):
+        key = (fn.__name__, tuple(sorted(static.items())))
+        if key not in self._jits:
+            self._jits[key] = jax.jit(
+                functools.partial(fn, self.config, **static))
+        return self._jits[key]
+
+    def insert(self, keys, *, bulk: bool = False,
+               dedup_within_batch: Optional[bool] = None
+               ) -> Tuple[jnp.ndarray, InsertStats]:
+        """Insert a batch; ``bulk=True`` takes the bucket-sorted fast path."""
+        dd = (self._default_dedup if dedup_within_batch is None
+              else dedup_within_batch)
+        fn = self._op(insert_bulk if bulk else insert, dedup_within_batch=dd)
+        self.state, ok, stats = fn(self.state, keys)
         return ok, stats
 
     def insert_bulk(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
-        """Bucket-sorted bulk-build insert (see :func:`insert_bulk`)."""
-        self.state, ok, stats = self._insert_bulk(self.state, keys)
-        return ok, stats
+        """Deprecated alias for ``insert(keys, bulk=True)``."""
+        import warnings
+
+        warnings.warn("CuckooFilter.insert_bulk is deprecated; use "
+                      "insert(keys, bulk=True)", DeprecationWarning,
+                      stacklevel=2)
+        return self.insert(keys, bulk=True)
 
     def query(self, keys) -> jnp.ndarray:
-        return self._query(self.state, keys)
+        return self._op(query)(self.state, keys)
 
     def delete(self, keys) -> jnp.ndarray:
-        self.state, ok = self._delete(self.state, keys)
+        self.state, ok = self._op(delete)(self.state, keys)
         return ok
 
     @property

@@ -70,6 +70,19 @@ class ShardedCuckooConfig:
     def total_slots(self) -> int:
         return self.num_shards * self.shard.num_slots
 
+    # -- AMQ protocol surface (repro.amq.protocol.AMQConfig) ----------------
+    @property
+    def num_slots(self) -> int:
+        return self.total_slots
+
+    @property
+    def table_bytes(self) -> int:
+        return self.num_shards * self.shard.table_bytes
+
+    def expected_fpr(self, load_factor: float) -> float:
+        """Shards are independent same-config filters: FPR is the shard's."""
+        return self.shard.expected_fpr(load_factor)
+
     @staticmethod
     def for_capacity(capacity: int, num_shards: int, load_factor: float = 0.95,
                      axis_name: str = "data", **kw) -> "ShardedCuckooConfig":
@@ -86,8 +99,13 @@ def shard_of(config: ShardedCuckooConfig, keys: jnp.ndarray) -> jnp.ndarray:
     return (mix % _U32(config.num_shards)).astype(jnp.int32)
 
 
-def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int):
+def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int,
+           valid: Optional[jnp.ndarray] = None):
     """Local routing: sort keys into [num_shards, cap] bins.
+
+    ``valid`` masks caller-side padding keys: they are given the ``S``
+    sentinel destination, sort past every real shard group, and never claim
+    a bin slot (so they cannot crowd out live keys).
 
     Returns (bins uint32[S, cap, 2], bin_valid bool[S, cap],
              order, dest_sorted, idx_in_group, routed_sorted).
@@ -95,12 +113,14 @@ def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int):
     S = config.num_shards
     n = keys.shape[0]
     dest = shard_of(config, keys)
+    if valid is not None:
+        dest = jnp.where(valid.astype(bool), dest, S)
     order = jnp.argsort(dest, stable=True)
     dest_s = dest[order]
     keys_s = keys[order]
     first_of_group = jnp.searchsorted(dest_s, dest_s, side="left")
     idx_in_group = jnp.arange(n, dtype=jnp.int32) - first_of_group
-    routed = idx_in_group < cap
+    routed = (idx_in_group < cap) & (dest_s < S)
     slot = jnp.where(routed, dest_s * cap + idx_in_group, S * cap)
     bins = jnp.zeros((S * cap, 2), jnp.uint32).at[slot].set(keys_s, mode="drop")
     bin_valid = jnp.zeros((S * cap,), bool).at[slot].set(routed, mode="drop")
@@ -116,16 +136,22 @@ def _unroute(order, dest_s, idx_in_group, routed, back, fill=False):
     return jnp.zeros((n,), back.dtype).at[order].set(got)
 
 
-def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int):
-    """Build the per-device function for one op (runs under shard_map)."""
+def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int,
+                     dedup_within_batch: bool = False):
+    """Build the per-device function for one op (runs under shard_map).
+
+    ``dedup_within_batch`` is globally correct because duplicates of a key
+    hash to the same owner shard: per-shard first-occurrence dedup IS
+    whole-batch dedup.
+    """
     cap = config.bin_capacity(local_batch)
     ax = config.axis_name
 
-    def fn(table, count, keys):
+    def fn(table, count, keys, valid):
         # table: [1, num_words] local shard; keys: [local_batch, 2]
         state = CuckooState(table[0], count[0])
         bins, bin_valid, order, dest_s, idxg, routed = _route(
-            config, keys, cap)
+            config, keys, cap, valid)
         recv = jax.lax.all_to_all(bins, ax, split_axis=0, concat_axis=0,
                                   tiled=False)
         recv_valid = jax.lax.all_to_all(bin_valid, ax, split_axis=0,
@@ -135,13 +161,15 @@ def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int):
 
         if op == "insert":
             state, ok, _ = _insert(config.shard, state, flat_keys,
-                                   valid=flat_valid)
+                                   valid=flat_valid,
+                                   dedup_within_batch=dedup_within_batch)
         elif op == "insert_bulk":
             # The all-to-all already binned keys by owner shard; the bulk
             # path's bucket-major sort composes on top of that binning
             # (DESIGN.md §6) — whole-bucket commits, residue to the loop.
             state, ok, _ = _insert_bulk(config.shard, state, flat_keys,
-                                        valid=flat_valid)
+                                        valid=flat_valid,
+                                        dedup_within_batch=dedup_within_batch)
         elif op == "delete":
             state, ok = _delete(config.shard, state, flat_keys,
                                 valid=flat_valid)
@@ -177,45 +205,54 @@ class ShardedCuckooFilter:
         self.config = config
         self.mesh = mesh
         self.local_batch = local_batch
-        ax = config.axis_name
-        others = [a for a in mesh.axis_names if a != ax]
-
-        def build(op):
-            fn = _make_sharded_op(config, op, local_batch)
-            mapped = compat.shard_map(
-                fn, mesh=mesh,
-                in_specs=(P(ax), P(ax), P(ax)),
-                out_specs=(P(ax), P(ax), P(ax), P(ax)),
-            )
-            return jax.jit(mapped)
-
-        self._ops = {op: build(op)
-                     for op in ("insert", "insert_bulk", "query", "delete")}
-        del others
+        self._ops = {}  # (op, dedup) -> jitted shard_map — built lazily
         self.state = jax.device_put(
             config.init(),
-            NamedSharding(mesh, P(ax)))
+            NamedSharding(mesh, P(config.axis_name)))
 
-    def _run(self, op, keys):
-        table, count, result, routed = self._ops[op](
-            self.state.table, self.state.count, keys)
+    def _op(self, op: str, dedup: bool = False):
+        key = (op, dedup)
+        if key not in self._ops:
+            ax = self.config.axis_name
+            fn = _make_sharded_op(self.config, op, self.local_batch,
+                                  dedup_within_batch=dedup)
+            mapped = compat.shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(P(ax), P(ax), P(ax), P(ax)),
+                out_specs=(P(ax), P(ax), P(ax), P(ax)),
+            )
+            self._ops[key] = jax.jit(mapped)
+        return self._ops[key]
+
+    def _run(self, op, keys, valid=None, dedup=False):
+        if valid is None:
+            valid = jnp.ones((keys.shape[0],), bool)
+        table, count, result, routed = self._op(op, dedup)(
+            self.state.table, self.state.count, keys, valid)
         if op != "query":
             self.state = ShardedCuckooState(table, count)
         return result, routed
 
-    def insert(self, keys, bulk: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def insert(self, keys, bulk: bool = False, *,
+               dedup_within_batch: bool = False,
+               valid: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """-> (ok, routed): ok[i] requires routed[i]; retry ~routed keys.
 
         ``bulk=True`` routes through the bucket-sorted bulk-build fast path
-        (core.cuckoo_filter.insert_bulk) on every shard.
+        (core.cuckoo_filter.insert_bulk) on every shard. ``valid`` masks
+        caller padding (masked keys report ``routed=False``).
         """
-        return self._run("insert_bulk" if bulk else "insert", keys)
+        return self._run("insert_bulk" if bulk else "insert", keys,
+                         valid, dedup_within_batch)
 
-    def query(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return self._run("query", keys)
+    def query(self, keys, valid: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._run("query", keys, valid)
 
-    def delete(self, keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return self._run("delete", keys)
+    def delete(self, keys, valid: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._run("delete", keys, valid)
 
     @property
     def total_count(self) -> int:

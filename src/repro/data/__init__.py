@@ -1,4 +1,10 @@
 """Data substrate: synthetic pipelines, filter-backed dedup, k-mer tooling."""
 
-from .dedup import DedupConfig, dedup_batch, forget_keys, sequence_keys  # noqa: F401
+from .dedup import (  # noqa: F401
+    DedupConfig,
+    dedup_batch,
+    forget_keys,
+    make_dedup,
+    sequence_keys,
+)
 from .pipeline import DataConfig, data_iterator, make_batch, make_frames_batch  # noqa: F401

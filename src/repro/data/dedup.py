@@ -1,33 +1,47 @@
-"""Streaming training-data dedup backed by the Cuckoo filter.
+"""Streaming training-data dedup backed by any registered AMQ backend.
 
 The paper's AMQ as a first-class framework feature: every incoming sequence
-is hashed to a 64-bit key; a query+insert against the (optionally
-mesh-sharded) filter decides whether the sequence was seen before. Duplicate
-sequences get their loss mask zeroed (shape-static — no dynamic batch
-filtering, per the straggler discipline). Deletion support matters here:
-time-windowed dedup (``forget``) removes expired epochs' keys, which a Bloom
-filter cannot do — the paper's core argument for dynamic AMQs.
+is hashed to a 64-bit key; a query+insert against the filter decides whether
+the sequence was seen before. Duplicate sequences get their loss mask zeroed
+(shape-static — no dynamic batch filtering, per the straggler discipline).
+
+The filter is addressed through the unified AMQ protocol (``repro.amq``), so
+dedup runs unchanged on every backend — the default Cuckoo filter, the
+mesh-sharded variant, or any baseline. Deletion support still matters:
+time-windowed dedup (``forget``) removes expired epochs' keys, which an
+append-only Bloom filter cannot do (``forget_keys`` is capability-gated) —
+the paper's core argument for dynamic AMQs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import CuckooConfig, CuckooState
-from ..core import insert as cuckoo_insert
-from ..core import query as cuckoo_query
+from .. import amq
+from ..core import CuckooConfig
 from ..core.hashing import fmix32
 
 
 @dataclasses.dataclass(frozen=True)
 class DedupConfig:
-    filter: CuckooConfig
+    """Static dedup config: an AMQ backend name + that backend's config.
+
+    ``filter`` remains the first field so existing
+    ``DedupConfig(CuckooConfig...)`` call sites keep working; ``backend``
+    selects the adapter from the AMQ registry.
+    """
+
+    filter: Any                   # the backend's static config
     ngram: Optional[int] = None   # None = whole-sequence keys
+    backend: str = "cuckoo"
+
+    @property
+    def adapter(self):
+        return amq.get(self.backend)
 
 
 def sequence_keys(tokens: jnp.ndarray) -> jnp.ndarray:
@@ -41,41 +55,67 @@ def sequence_keys(tokens: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([lo, hi], axis=-1)
 
 
-def dedup_batch(cfg: DedupConfig, state: CuckooState,
+def dedup_batch(cfg: DedupConfig, state: Any,
                 batch: Dict[str, jnp.ndarray]
-                ) -> Tuple[CuckooState, Dict[str, jnp.ndarray], Dict]:
+                ) -> Tuple[Any, Dict[str, jnp.ndarray], Dict]:
     """Mask duplicate sequences; insert fresh ones into the filter.
 
     Returns (filter_state', batch + {"mask"}, stats). jit-compatible with
-    cfg static.
+    cfg static (the adapter's functional ops trace like any other op).
     """
+    ad = cfg.adapter
     tokens = batch["tokens"]
     keys = sequence_keys(tokens)
-    seen = cuckoo_query(cfg.filter, state, keys)
-    # Intra-batch duplicates: the insert pass is sequential per conflict
-    # round, but two identical keys in one batch both "succeed" — detect
-    # intra-batch dupes by first-occurrence on sorted keys.
-    flat = keys[:, 0].astype(jnp.uint64) | (keys[:, 1].astype(jnp.uint64) << 32) \
-        if False else keys[:, 0] ^ (keys[:, 1] * np.uint32(0x85EBCA6B))
-    order = jnp.argsort(flat, stable=True)
-    sf = flat[order]
-    dup_sorted = jnp.concatenate([jnp.zeros((1,), bool), sf[1:] == sf[:-1]])
+    _, qres = ad.query(cfg.filter, state, keys)
+    seen = qres.hits
+    # Intra-batch duplicates: first-occurrence detection on the full 64-bit
+    # key values (backend-independent, so set semantics hold even for
+    # counting filters; no 32-bit mixing — a mix collision would silently
+    # drop a live sequence).
+    lo, hi = keys[:, 0], keys[:, 1]
+    order = jnp.lexsort((lo, hi))
+    lo_s, hi_s = lo[order], hi[order]
+    dup_sorted = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (lo_s[1:] == lo_s[:-1]) & (hi_s[1:] == hi_s[:-1]),
+    ])
     intra_dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
 
     fresh = ~seen & ~intra_dup
-    state, ok, _ = cuckoo_insert(cfg.filter, state, keys, valid=fresh)
+    state, report = ad.insert(cfg.filter, state, keys, valid=fresh)
     mask = fresh  # duplicates (cross- or intra-batch) contribute no loss
     out = dict(batch)
     out["mask"] = mask
-    stats = {"duplicates": jnp.sum(~mask), "insert_failures": jnp.sum(fresh & ~ok)}
+    stats = {"duplicates": jnp.sum(~mask),
+             "insert_failures": jnp.sum(fresh & ~report.ok & report.routed),
+             "unrouted": jnp.sum(fresh & ~report.routed)}
     return state, out, stats
 
 
-def forget_keys(cfg: DedupConfig, state: CuckooState,
-                keys: jnp.ndarray) -> CuckooState:
+def make_dedup(capacity: int, backend: str = "cuckoo",
+               **kw) -> Tuple[DedupConfig, Any]:
+    """Convenience: size a dedup filter on any backend via the registry.
+
+    Returns (cfg, fresh_state) ready for :func:`dedup_batch`.
+    """
+    ad = amq.get(backend)
+    fcfg = ad.make_config(capacity, **kw)
+    return DedupConfig(fcfg, backend=backend), ad.init(fcfg)
+
+
+def forget_keys(cfg: DedupConfig, state: Any,
+                keys: jnp.ndarray) -> Any:
     """Expire keys from the dedup window (needs deletion support — the
     capability Bloom filters lack, paper §1)."""
-    from ..core import delete as cuckoo_delete
-
-    state, _ = cuckoo_delete(cfg.filter, state, keys)
+    ad = cfg.adapter
+    if not ad.capabilities.supports_delete:
+        raise NotImplementedError(
+            f"{cfg.backend}: append-only backend cannot forget keys "
+            "(capabilities.supports_delete is False)")
+    state, _ = ad.delete(cfg.filter, state, keys)
     return state
+
+
+# Backwards-compat convenience mirroring the original module surface.
+def default_config(capacity: int, **kw) -> DedupConfig:
+    return DedupConfig(CuckooConfig.for_capacity(capacity, **kw))

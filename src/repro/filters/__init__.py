@@ -1,12 +1,37 @@
 """Baseline AMQ structures evaluated by the paper (§5.1).
 
 Each module provides ``*Config`` (static, hashable), a state NamedTuple,
-functional ``insert/query[/delete]`` and an OO wrapper. The registry maps the
-benchmark names used in benchmarks/throughput.py to constructors.
+functional ``insert/query[/delete]`` and an OO wrapper. All of them are also
+registered behind the unified AMQ protocol: ``repro.amq.make("bloom"|"tcf"|
+"gqf"|"bcht", capacity=...)`` returns a uniform FilterHandle, and
+``repro.amq.names()`` enumerates every backend (this is the registry
+benchmarks/throughput.py iterates — no per-filter special cases).
+
+The registry itself lives in :mod:`repro.amq`; it is re-exported here
+lazily (``repro.filters.amq`` / ``repro.filters.make``) so importing this
+package never cycles through the adapters, which import these modules.
 """
 
+from ..amq.protocol import (  # noqa: F401
+    Capabilities,
+    DeleteReport,
+    InsertReport,
+    QueryResult,
+)
 from .bcht import BCHTConfig, BucketedCuckooHashTable  # noqa: F401
 from .blocked_bloom import BlockedBloomFilter, BloomConfig  # noqa: F401
-from .cpu_reference import PyCuckooFilter  # noqa: F401
+from .cpu_reference import PyCuckooConfig, PyCuckooFilter  # noqa: F401
 from .quotient import GQFConfig, QuotientFilter  # noqa: F401
 from .two_choice import TCFConfig, TwoChoiceFilter  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "amq":
+        from .. import amq
+
+        return amq
+    if name in ("make", "get", "names", "register"):
+        from ..amq import registry
+
+        return getattr(registry, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,12 @@ class BCHTConfig:
     def table_bytes(self) -> int:
         return self.num_slots * 9  # 8B key + 1b used (rounded up)
 
+    def expected_fpr(self, load_factor: float) -> float:
+        """Exact membership (full 64-bit keys stored): zero false positives
+        — the "order-of-magnitude more memory" trade (paper §5.2)."""
+        del load_factor
+        return 0.0
+
     def init(self) -> BCHTState:
         shape = (self.num_buckets, self.bucket_size)
         return BCHTState(jnp.zeros(shape, jnp.uint32),
@@ -87,13 +93,15 @@ def _alt(config: BCHTConfig, bucket, lo, hi):
     return bucket ^ delta
 
 
-def insert(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray
+def insert(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[BCHTState, jnp.ndarray]:
     n = keys.shape[0]
     b = config.bucket_size
     invalid = config.num_slots
     klo, khi = keys[..., 0].astype(jnp.uint32), keys[..., 1].astype(jnp.uint32)
     i1, i2, _ = _buckets(config, klo, khi)
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
 
     def round_fn(carry):
         (key_lo, key_hi, used, count, cur_lo, cur_hi, cur_bucket,
@@ -161,7 +169,7 @@ def insert(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray
         return jnp.any(carry[8]) & (carry[11] < config.max_rounds)
 
     carry0 = (state.key_lo, state.key_hi, state.used, state.count,
-              klo, khi, i1, jnp.zeros((n,), bool), jnp.ones((n,), bool),
+              klo, khi, i1, jnp.zeros((n,), bool), pending0,
               jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32),
               jnp.zeros((), jnp.int32))
     out = jax.lax.while_loop(cond_fn, round_fn, carry0)
@@ -183,13 +191,15 @@ def query(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray) -> jnp.ndarra
     return hit(i1) | hit(i2)
 
 
-def delete(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray
+def delete(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[BCHTState, jnp.ndarray]:
     n = keys.shape[0]
     b = config.bucket_size
     invalid = config.num_slots
     klo, khi = keys[..., 0].astype(jnp.uint32), keys[..., 1].astype(jnp.uint32)
     i1, i2, _ = _buckets(config, klo, khi)
+    pending_init = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
     max_rounds = b + 2
 
     def round_fn(carry):
@@ -222,7 +232,7 @@ def delete(config: BCHTConfig, state: BCHTState, keys: jnp.ndarray
         return jnp.any(carry[4]) & (carry[6] < max_rounds)
 
     carry0 = (state.key_lo, state.key_hi, state.used, state.count,
-              jnp.ones((n,), bool), jnp.zeros((n,), bool),
+              pending_init, jnp.zeros((n,), bool),
               jnp.zeros((), jnp.int32))
     key_lo, key_hi, used, count, _, success, _ = jax.lax.while_loop(
         cond_fn, round_fn, carry0)

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+import math
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ class BloomConfig:
     k: int = 8                  # bits set per key
     hash_kind: str = "fmix32"
     seed: int = 0
+    bits_per_key: int = 16      # nominal budget (defines num_slots/FPR math)
 
     @property
     def block_bits(self) -> int:
@@ -52,6 +54,20 @@ class BloomConfig:
     def table_bytes(self) -> int:
         return self.num_words * 4
 
+    @property
+    def num_slots(self) -> int:
+        """Nominal key capacity: total bits / the per-key bit budget."""
+        return max(1, (self.num_blocks * self.block_bits) // self.bits_per_key)
+
+    def expected_fpr(self, load_factor: float) -> float:
+        """Standard Bloom estimate at ``load_factor`` of nominal capacity:
+        eps ~= (1 - e^(-k * alpha / bits_per_key * ... ))^k with
+        n/m = alpha / bits_per_key. Blocking adds a small penalty (skewed
+        per-block occupancy) absorbed by benchmark tolerances.
+        """
+        ratio = self.k * load_factor / self.bits_per_key
+        return (1.0 - math.exp(-ratio)) ** self.k
+
     def init(self) -> BloomState:
         return BloomState(jnp.zeros((self.num_words,), jnp.uint32),
                           jnp.zeros((), jnp.int32))
@@ -61,7 +77,8 @@ class BloomConfig:
         words_per_block = kw.pop("words_per_block", 16)
         total_bits = capacity * bits_per_key
         blocks = max(1, int(np.ceil(total_bits / (words_per_block * 32))))
-        return BloomConfig(num_blocks=blocks, words_per_block=words_per_block, **kw)
+        return BloomConfig(num_blocks=blocks, words_per_block=words_per_block,
+                           bits_per_key=bits_per_key, **kw)
 
 
 def _bit_positions(config: BloomConfig, keys: jnp.ndarray):
@@ -84,14 +101,17 @@ def _bit_positions(config: BloomConfig, keys: jnp.ndarray):
     return block, word, mask
 
 
-def insert(config: BloomConfig, state: BloomState, keys: jnp.ndarray
+def insert(config: BloomConfig, state: BloomState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[BloomState, jnp.ndarray]:
     block, word, mask = _bit_positions(config, keys)
     addr = (block[:, None] * config.words_per_block + word).reshape(-1)
-    table = scatter_or(state.table, addr, mask.reshape(-1))
     n = keys.shape[0]
-    ok = jnp.ones((n,), bool)  # append-only: never fails
-    return BloomState(table, state.count + n), ok
+    ok = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    vmask = None if valid is None else jnp.repeat(ok, config.k)
+    table = scatter_or(state.table, addr, mask.reshape(-1), vmask)
+    # append-only: every valid key succeeds
+    return BloomState(table, state.count + jnp.sum(ok, dtype=jnp.int32)), ok
 
 
 def query(config: BloomConfig, state: BloomState, keys: jnp.ndarray) -> jnp.ndarray:

@@ -9,6 +9,7 @@ serves as the CPU reference point for the benchmark speedup numbers.
 
 from __future__ import annotations
 
+import dataclasses
 import random
 from typing import List
 
@@ -17,6 +18,52 @@ import numpy as np
 from ..core.hashing import fmix32_py, xxhash64_py
 
 _M32 = 0xFFFFFFFF
+
+
+def keys_to_u64(keys) -> np.ndarray:
+    """uint32[n, 2] (lo, hi) pairs -> uint64[n] (inverse of keys_from_numpy)."""
+    arr = np.asarray(keys, np.uint32)
+    return (arr[..., 0].astype(np.uint64)
+            | (arr[..., 1].astype(np.uint64) << np.uint64(32)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PyCuckooConfig:
+    """AMQ-protocol config for the sequential oracle (mirrors CuckooConfig)."""
+
+    num_buckets: int
+    fp_bits: int = 16
+    bucket_size: int = 16
+    hash_kind: str = "xxhash64"
+    max_evictions: int = 64
+    seed: int = 0
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_buckets * self.bucket_size
+
+    @property
+    def table_bytes(self) -> int:
+        return (self.num_slots * self.fp_bits + 7) // 8
+
+    def expected_fpr(self, load_factor: float) -> float:
+        """Same partial-key analysis as CuckooConfig (paper Eq. 4)."""
+        f = self.fp_bits
+        return 1.0 - (1.0 - 2.0 ** -f) ** (2 * self.bucket_size * load_factor)
+
+    def init(self) -> "PyCuckooFilter":
+        return PyCuckooFilter(self.num_buckets, self.fp_bits,
+                              self.bucket_size, self.hash_kind,
+                              self.max_evictions, self.seed)
+
+    @staticmethod
+    def for_capacity(capacity: int, load_factor: float = 0.95,
+                     fp_bits: int = 16, bucket_size: int = 16,
+                     **kw) -> "PyCuckooConfig":
+        buckets = max(2, int(np.ceil(capacity / (load_factor * bucket_size))))
+        buckets = 1 << int(np.ceil(np.log2(buckets)))  # xor placement
+        return PyCuckooConfig(num_buckets=buckets, fp_bits=fp_bits,
+                              bucket_size=bucket_size, **kw)
 
 
 class PyCuckooFilter:

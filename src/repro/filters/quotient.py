@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +60,13 @@ class GQFConfig:
     def table_bytes(self) -> int:
         return self.num_slots * 4
 
+    def expected_fpr(self, load_factor: float) -> float:
+        """Quotient-filter estimate: a negative key collides iff some stored
+        key shares its home slot *and* its r-bit remainder; the expected run
+        length at its home slot is alpha, so eps ~= 1 - (1 - 2^-r)^alpha
+        ~= alpha * 2^-r — the lowest of the pack (paper Fig. 4)."""
+        return 1.0 - (1.0 - 2.0 ** -self.remainder_bits) ** load_factor
+
     def init(self) -> GQFState:
         return GQFState(jnp.zeros((self.num_slots,), jnp.uint32),
                         jnp.zeros((), jnp.int32))
@@ -87,12 +94,14 @@ def _pack(config: GQFConfig, rem: jnp.ndarray, dist: jnp.ndarray) -> jnp.ndarray
     return (dist.astype(jnp.uint32) << _U32(config.remainder_bits)) | rem
 
 
-def insert(config: GQFConfig, state: GQFState, keys: jnp.ndarray
+def insert(config: GQFConfig, state: GQFState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[GQFState, jnp.ndarray]:
     """Sequential Robin Hood insertion (the GQF's serial shifting)."""
     n = keys.shape[0]
     m = config.num_slots
     rem, home = _prepare(config, keys)
+    valid0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
 
     def insert_one(i, carry):
         table, count, ok = carry
@@ -123,7 +132,7 @@ def insert(config: GQFConfig, state: GQFState, keys: jnp.ndarray
         table, _, _, _, _, placed = jax.lax.while_loop(
             probe_cond, probe,
             (table, home[i], rem[i], jnp.zeros((), jnp.uint32),
-             jnp.ones((), bool), jnp.zeros((), bool)))
+             valid0[i], jnp.zeros((), bool)))
         count = count + placed.astype(jnp.int32)
         ok = ok.at[i].set(placed)
         return table, count, ok
@@ -151,12 +160,14 @@ def query(config: GQFConfig, state: GQFState, keys: jnp.ndarray) -> jnp.ndarray:
     return jnp.any(match & (alive > 0), axis=-1)
 
 
-def delete(config: GQFConfig, state: GQFState, keys: jnp.ndarray
+def delete(config: GQFConfig, state: GQFState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[GQFState, jnp.ndarray]:
     """Sequential delete + backward-shift compaction."""
     n = keys.shape[0]
     m = config.num_slots
     rem, home = _prepare(config, keys)
+    valid0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
     w = config.max_probe
 
     def delete_one(i, carry):
@@ -167,7 +178,7 @@ def delete(config: GQFConfig, state: GQFState, keys: jnp.ndarray
         d = jnp.arange(w, dtype=jnp.uint32)
         match = ((window & _U32(config.rmask)) == rem[i]) & \
                 (_dist(config, window) == d)
-        found = jnp.any(match)
+        found = jnp.any(match) & valid0[i]
         at = jnp.argmax(match).astype(jnp.int32)
         pos = (home[i] + at) % m
 

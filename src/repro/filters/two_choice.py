@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +57,14 @@ class TCFConfig:
     def table_bytes(self) -> int:
         return self.layout.table_bytes + self.stash_size * 4
 
+    def expected_fpr(self, load_factor: float) -> float:
+        """Two candidate blocks of ``block_size`` tags each scanned per
+        query: eps ~= 1 - (1 - 2^-f)^(2 b alpha) — same form as the cuckoo
+        filter's Eq. (4) but with the TCF's larger blocks (the paper's
+        Fig. 4 point: load balancing needs big blocks, costing FPR)."""
+        f = self.fp_bits
+        return 1.0 - (1.0 - 2.0 ** -f) ** (2 * self.block_size * load_factor)
+
     def init(self) -> TCFState:
         return TCFState(self.layout.empty_table(),
                         jnp.zeros((self.stash_size,), jnp.uint32),
@@ -84,12 +92,14 @@ def _stash_entry(config: TCFConfig, block: jnp.ndarray, tag: jnp.ndarray):
             | tag.astype(jnp.uint32)) | _U32(1 << 31)  # bit31 = occupied
 
 
-def insert(config: TCFConfig, state: TCFState, keys: jnp.ndarray
+def insert(config: TCFConfig, state: TCFState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[TCFState, jnp.ndarray]:
     lay = config.layout
     n = keys.shape[0]
     invalid = lay.num_words + config.stash_size
     tag, b1, b2 = _prepare(config, keys)
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
 
     def round_fn(carry):
         table, stash, count, pending, success, rnd = carry
@@ -143,7 +153,7 @@ def insert(config: TCFConfig, state: TCFState, keys: jnp.ndarray
     def cond_fn(carry):
         return jnp.any(carry[3]) & (carry[5] < config.max_rounds)
 
-    carry0 = (state.table, state.stash, state.count, jnp.ones((n,), bool),
+    carry0 = (state.table, state.stash, state.count, pending0,
               jnp.zeros((n,), bool), jnp.zeros((), jnp.int32))
     table, stash, count, pending, success, _ = jax.lax.while_loop(
         cond_fn, round_fn, carry0)
@@ -163,12 +173,14 @@ def query(config: TCFConfig, state: TCFState, keys: jnp.ndarray) -> jnp.ndarray:
     return hit1 | hit2 | hs
 
 
-def delete(config: TCFConfig, state: TCFState, keys: jnp.ndarray
+def delete(config: TCFConfig, state: TCFState, keys: jnp.ndarray,
+           valid: Optional[jnp.ndarray] = None
            ) -> Tuple[TCFState, jnp.ndarray]:
     lay = config.layout
     n = keys.shape[0]
     invalid = lay.num_words + config.stash_size
     tag, b1, b2 = _prepare(config, keys)
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
     max_rounds = 2 * config.block_size + 2
 
     def round_fn(carry):
@@ -220,7 +232,7 @@ def delete(config: TCFConfig, state: TCFState, keys: jnp.ndarray
     def cond_fn(carry):
         return jnp.any(carry[3]) & (carry[5] < max_rounds)
 
-    carry0 = (state.table, state.stash, state.count, jnp.ones((n,), bool),
+    carry0 = (state.table, state.stash, state.count, pending0,
               jnp.zeros((n,), bool), jnp.zeros((), jnp.int32))
     table, stash, count, _, success, _ = jax.lax.while_loop(
         cond_fn, round_fn, carry0)
