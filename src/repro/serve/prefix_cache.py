@@ -1,23 +1,28 @@
-"""Prefix-cache admission guarded by the Cuckoo filter.
+"""Prefix-cache admission guarded by an AMQ filter (any registry backend).
 
 Serving-side integration of the paper's technique: the KV prefix cache is
-expensive to probe (sharded, host-sized), so a per-host Cuckoo filter sits in
-front of it as an AMQ: a negative lookup ("this prefix hash was never
-cached") skips the probe entirely. Crucially, cache *eviction* must remove
-the key from the filter too — deletion support, the paper's headline
-capability vs Bloom filters, is what keeps the filter in sync with an LRU
-cache instead of rotting toward 100% false positives.
+expensive to probe (sharded, host-sized), so a per-host filter sits in front
+of it as an AMQ: a negative lookup ("this prefix hash was never cached")
+skips the probe entirely. Crucially, cache *eviction* must remove the key
+from the filter too — deletion support, the paper's headline capability vs
+Bloom filters, is what keeps the filter in sync with an LRU cache instead of
+rotting toward 100% false positives.
+
+The filter is any :class:`repro.amq.FilterHandle`. On backends without
+deletion (``supports_delete`` False, e.g. ``bloom``) the cache still works
+but evicted keys go stale in the filter — tracked in ``stats["stale"]`` so
+operators can see the rot the paper warns about.
 """
 
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import CuckooConfig, CuckooFilter
+from .. import amq
 from ..core.hashing import fmix32_py
 
 
@@ -31,16 +36,25 @@ def prefix_key(tokens) -> int:
 
 
 class PrefixCache:
-    """LRU prefix->cache-entry store with filter-guarded lookups."""
+    """LRU prefix->cache-entry store with filter-guarded lookups.
 
-    def __init__(self, capacity_entries: int, filter_capacity: int = 0):
+    ``backend`` picks any AMQ registry backend for the guard filter;
+    alternatively pass a ready-made ``filter_handle`` (sized by the caller).
+    """
+
+    def __init__(self, capacity_entries: int, filter_capacity: int = 0,
+                 backend: str = "cuckoo",
+                 filter_handle: Optional["amq.FilterHandle"] = None,
+                 **filter_kw):
         self.capacity = capacity_entries
         self.entries: "collections.OrderedDict[int, Any]" = \
             collections.OrderedDict()
-        fcap = filter_capacity or capacity_entries * 4
-        self.filter = CuckooFilter(CuckooConfig.for_capacity(
-            fcap, load_factor=0.8, hash_kind="fmix32"))
-        self.stats = {"hits": 0, "misses": 0, "filtered": 0, "evictions": 0}
+        if filter_handle is None:
+            fcap = filter_capacity or capacity_entries * 4
+            filter_handle = amq.make(backend, capacity=fcap, **filter_kw)
+        self.filter = filter_handle
+        self.stats = {"hits": 0, "misses": 0, "filtered": 0,
+                      "evictions": 0, "stale": 0}
 
     def _fkey(self, key: int):
         return jnp.asarray(
@@ -49,12 +63,12 @@ class PrefixCache:
     def lookup(self, tokens) -> Optional[Any]:
         key = prefix_key(tokens)
         # AMQ front door: definite-negative skips the (expensive) probe.
-        if not bool(self.filter.query(self._fkey(key))[0]):
+        if not bool(np.asarray(self.filter.query(self._fkey(key)).hits)[0]):
             self.stats["filtered"] += 1
             return None
         entry = self.entries.get(key)
         if entry is None:
-            self.stats["misses"] += 1  # filter false positive
+            self.stats["misses"] += 1  # filter false positive (or stale key)
             return None
         self.entries.move_to_end(key)
         self.stats["hits"] += 1
@@ -68,7 +82,10 @@ class PrefixCache:
             return
         while len(self.entries) >= self.capacity:
             old_key, _ = self.entries.popitem(last=False)   # LRU eviction
-            self.filter.delete(self._fkey(old_key))          # keep AMQ in sync
+            if self.filter.capabilities.supports_delete:
+                self.filter.delete(self._fkey(old_key))      # keep AMQ in sync
+            else:
+                self.stats["stale"] += 1  # append-only backend: key rots
             self.stats["evictions"] += 1
         self.entries[key] = entry
         self.filter.insert(self._fkey(key))
