@@ -1,0 +1,96 @@
+"""Auto-expanding cascade vs right-sized static filters (DESIGN.md §8).
+
+Streams keys into `amq.make(..., auto_expand=True)` from 1x to 16x the
+initial capacity and, at each power-of-two occupancy milestone, compares
+against a *right-sized* static filter built with hindsight:
+
+* cumulative insert throughput (cascade pays growth + retry rounds),
+* query throughput (cascade fans over all levels in one fused pass),
+* measured FPR vs the cascade's declared budget (the split-budget claim),
+* zero false negatives over everything inserted so far.
+
+Acceptance (ISSUE 3): sustained inserts to >=8x with no false negatives,
+measured FPR within budget, and cascade query throughput within 3x of the
+static filter at the 8x milestone.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import amq
+
+from .common import bench, emit, rand_keys, throughput_m_per_s
+
+MILESTONES = (1, 2, 4, 8, 16)
+
+
+def _build_static(backend: str, n_keys: int, keys):
+    """A static filter sized (with hindsight) to exactly the streamed load."""
+    handle = amq.make(backend, capacity=int(np.ceil(n_keys / 0.85)))
+    handle.insert(keys, bulk=True)
+    return handle
+
+
+def run(fast: bool = False, backend: str = "cuckoo") -> None:
+    initial = 1 << 12 if fast else 1 << 15
+    batch = initial // 4
+    n_neg = 1 << 14
+    keys = rand_keys(MILESTONES[-1] * initial, seed=3)
+    neg = rand_keys(n_neg, seed=9, lo=2**63, hi=2**64)
+    probe = keys[:batch]
+
+    cascade = amq.make(backend, capacity=initial, auto_expand=True)
+    budget = cascade.fpr_budget
+    inserted = 0
+    t_insert = 0.0
+    for multiple in MILESTONES:
+        target = multiple * initial
+        while inserted < target:
+            chunk = keys[inserted:inserted + batch]
+            t0 = time.perf_counter()
+            report = cascade.insert(chunk, bulk=True)
+            # A chunk that crosses a growth boundary touches two levels —
+            # barrier on every level's state so no async work leaks out of
+            # the timed region.
+            jax.block_until_ready([lvl.state for lvl in cascade.levels])
+            t_insert += time.perf_counter() - t0
+            if not np.asarray(report.ok).all():
+                emit(f"expansion_insert_refused_{multiple}x", 0.0,
+                     f"{int((~np.asarray(report.ok)).sum())}_keys")
+            inserted += batch
+
+        levels = len(cascade.levels)
+        us_cum = t_insert * 1e6
+        emit(f"expansion_insert_cascade_{multiple}x", us_cum / inserted * batch,
+             f"{throughput_m_per_s(inserted, us_cum)};levels={levels}")
+
+        # No false negatives over everything streamed so far (checked in
+        # per-batch windows to keep query shapes bounded).
+        false_negs = 0
+        for start in range(0, inserted, 4 * batch):
+            window = keys[start:start + 4 * batch]
+            false_negs += int((~np.asarray(cascade.query(window).hits)).sum())
+        fpr_c = float(np.asarray(cascade.query(neg).hits).mean())
+        us_cq = bench(lambda: cascade.query(probe))
+
+        static = _build_static(backend, inserted, keys[:inserted])
+        us_sq = bench(lambda: static.query(probe))
+        fpr_s = float(np.asarray(static.query(neg).hits).mean())
+
+        ratio = us_cq / us_sq
+        emit(f"expansion_query_cascade_{multiple}x", us_cq,
+             f"{throughput_m_per_s(batch, us_cq)};{ratio:.2f}x_static"
+             f";false_negatives={false_negs}")
+        emit(f"expansion_query_static_{multiple}x", us_sq,
+             throughput_m_per_s(batch, us_sq))
+        emit(f"expansion_fpr_{multiple}x", 0.0,
+             f"cascade={fpr_c:.2e};budget={budget:.2e};static={fpr_s:.2e}"
+             f";bytes_ratio={cascade.table_bytes / static.table_bytes:.2f}")
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -14,6 +14,7 @@ import time
 from . import (
     bucket_policy,
     eviction,
+    expansion,
     fpr,
     kmer_case_study,
     roofline,
@@ -30,6 +31,7 @@ SUITES = {
     "fig7": bucket_policy.run,
     "fig8": kmer_case_study.run,
     "s463": sorted_insertion.run,
+    "expansion": expansion.run,
     "roofline": roofline.run,
 }
 

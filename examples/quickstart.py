@@ -51,7 +51,24 @@ for name in amq.names():
     print(f"  {name:15s} hits={hits:.3f} delete={'yes' if deleted else 'no'} "
           f"exact={caps.exact} bulk={caps.supports_bulk}")
 
-# 6. The classic config surface still exists (and sizes tables exactly with
+# 6. Auto-expansion: streaming workloads need no a-priori sizing. Start at
+#    1e5 and stream 1e6 keys — the handle grows as a geometric cascade of
+#    levels (DESIGN.md §8): inserts land in the newest level, queries fan
+#    over all of them in one fused pass, and the FPR budget is split across
+#    levels so the aggregate stays bounded however far it grows.
+stream = amq.make("cuckoo", capacity=100_000, auto_expand=True)
+total = 1_000_000
+chunk = 1 << 17
+streamed = jnp.asarray(keys_from_numpy(
+    rng.integers(0, 2**63, size=total, dtype=np.uint64)))
+for start in range(0, total, chunk):
+    stream.insert(streamed[start:start + chunk], bulk=True)
+print(f"streamed {total} keys into an initial-1e5 cascade: "
+      f"{len(stream.levels)} levels, aggregate load "
+      f"{stream.load_factor:.2%}, fpr budget {stream.fpr_budget:.1e}")
+assert bool(stream.query(streamed[:chunk]).hits.all())  # no false negatives
+
+# 7. The classic config surface still exists (and sizes tables exactly with
 #    the OFFSET policy — no power-of-two over-provisioning, paper §4.6.2);
 #    pre-built configs drop straight into the registry.
 flex = CuckooConfig.for_capacity(100_000, load_factor=0.95, policy="offset")
@@ -60,7 +77,7 @@ print(f"offset policy: {flex.table_bytes / 1024:.0f} KiB vs XOR "
 exact = amq.make("cuckoo", config=flex)
 print(f"handle from config: {exact.name}, {exact.table_bytes / 1024:.0f} KiB")
 
-# 7. Pallas kernel path (TPU-target; interpret-mode on CPU): batch query
+# 8. Pallas kernel path (TPU-target; interpret-mode on CPU): batch query
 #    against a VMEM-resident table — kernels consume the same config/state.
 from repro.kernels import cuckoo_query
 

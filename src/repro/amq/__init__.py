@@ -19,22 +19,28 @@ adapters — which import the whole filter zoo — load lazily on first use, so
 from .protocol import (  # noqa: F401
     AMQConfig,
     Capabilities,
+    CascadeReport,
     DeleteReport,
     InsertReport,
+    LevelStats,
     QueryResult,
+    fpr_share,
     fpr_tolerance,
     load_factor,
 )
 
-_LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter")
+_LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
+         "CascadeHandle")
 
 __all__ = list(_LAZY) + [
-    "AMQConfig", "Capabilities", "DeleteReport", "InsertReport",
-    "QueryResult", "fpr_tolerance", "load_factor",
+    "AMQConfig", "Capabilities", "CascadeReport", "DeleteReport",
+    "InsertReport", "LevelStats", "QueryResult", "fpr_share",
+    "fpr_tolerance", "load_factor",
 ]
 
 
 def __getattr__(name):
+    """Resolve the registry/handle surface lazily (see module docstring)."""
     if name in ("make", "get", "names", "register"):
         from . import registry
 
@@ -43,6 +49,10 @@ def __getattr__(name):
         from .handle import FilterHandle
 
         return FilterHandle
+    if name == "CascadeHandle":
+        from .cascade import CascadeHandle
+
+        return CascadeHandle
     if name == "AMQAdapter":
         from .adapters import AMQAdapter
 

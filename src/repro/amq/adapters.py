@@ -46,13 +46,29 @@ from .protocol import (
 
 @dataclasses.dataclass(frozen=True)
 class AMQAdapter:
-    """One backend behind the protocol. Fields are plain callables (not
-    bound methods), so ``adapter.insert(config, state, keys)`` works
-    directly and composes with ``functools.partial`` + ``jax.jit``.
+    """One backend behind the unified AMQ protocol.
+
+    Fields are plain callables (not bound methods), so
+    ``adapter.insert(config, state, keys)`` works directly and composes
+    with ``functools.partial`` + ``jax.jit``.
 
     ``jit=False`` marks backends whose ops must not be re-jitted by the
     handle (the host-side oracle; the sharded backend, which jits its own
     shard_map'd programs per batch shape).
+
+    ``growth_sizings`` is the backend's growth hook for the auto-expanding
+    cascade (DESIGN.md §8): an ordered tuple of sizing-kwarg overlays, from
+    loosest/cheapest to tightest. When the cascade allocates a level it
+    merges each overlay over the caller's base kwargs in turn and picks the
+    first whose config meets the level's FPR share; ``({},)`` means the
+    backend needs no per-level tightening (exact structures). Required when
+    ``capabilities.supports_expand`` is True.
+
+    ``grow_config`` optionally derives level ``i+1``'s config from level
+    ``i``'s — ``(prev_config, factor, **overlay) -> config`` — instead of
+    re-running ``make_config`` from scratch. Backends whose configs carry
+    placement state use it to pin that state across levels (the sharded
+    backend keeps one mesh for the whole cascade).
     """
 
     name: str
@@ -64,10 +80,31 @@ class AMQAdapter:
     delete: Optional[Callable[..., Any]] = None
     insert_bulk: Optional[Callable[..., Any]] = None
     jit: bool = True
+    growth_sizings: Optional[tuple] = None
+    grow_config: Optional[Callable[..., Any]] = None
 
 
 def _zero_stats(n):
     return jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Growth hooks (cascade level sizing, DESIGN.md §8): ordered loosest->tightest
+# sizing overlays; the cascade picks the first that meets a level's FPR share.
+# ---------------------------------------------------------------------------
+
+# The packed bucket layout quantizes tag widths to 32-bit-word fractions
+# (core.layout), so the cuckoo ladder is the three hardware-friendly widths.
+_CUCKOO_SIZINGS = tuple({"fp_bits": f} for f in (8, 16, 32))
+
+# Blocked Bloom tightens by raising the per-key bit budget with the
+# matching near-optimal hash count k ~= bits_per_key * ln 2.
+_BLOOM_SIZINGS = tuple(
+    {"bits_per_key": b, "k": max(1, round(b * 0.693))}
+    for b in (8, 12, 16, 20, 24, 32, 40))
+
+# The GQF's remainder is an arbitrary bit slice of a uint32 slot word.
+_GQF_SIZINGS = tuple({"remainder_bits": r} for r in (8, 12, 16, 20, 24, 28))
 
 
 # ---------------------------------------------------------------------------
@@ -102,13 +139,14 @@ def _cuckoo_make_config(capacity, **kw):
 CUCKOO = AMQAdapter(
     name="cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
-                              counting=True),
+                              counting=True, supports_expand=True),
     make_config=_cuckoo_make_config,
     init=lambda cfg: cfg.init(),
     insert=_cuckoo_insert,
     insert_bulk=functools.partial(_cuckoo_insert, _fn=CF.insert_bulk),
     query=_cuckoo_query,
     delete=_cuckoo_delete,
+    growth_sizings=_CUCKOO_SIZINGS,
 )
 
 
@@ -131,12 +169,14 @@ def _bloom_query(config, state, keys, *, valid=None):
 
 BLOOM = AMQAdapter(
     name="bloom",
-    capabilities=Capabilities(supports_delete=False, counting=False),
+    capabilities=Capabilities(supports_delete=False, counting=False,
+                              supports_expand=True),
     make_config=lambda capacity, **kw: BB.BloomConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_bloom_insert,
     query=_bloom_query,
+    growth_sizings=_BLOOM_SIZINGS,
 )
 
 
@@ -199,13 +239,14 @@ def _gqf_delete(config, state, keys, *, valid=None):
 GQF = AMQAdapter(
     name="gqf",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              serial_insert=True),
+                              serial_insert=True, supports_expand=True),
     make_config=lambda capacity, **kw: QF.GQFConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_gqf_insert,
     query=_gqf_query,
     delete=_gqf_delete,
+    growth_sizings=_GQF_SIZINGS,
 )
 
 
@@ -234,13 +275,14 @@ def _bcht_delete(config, state, keys, *, valid=None):
 BCHT = AMQAdapter(
     name="bcht",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              exact=True),
+                              exact=True, supports_expand=True),
     make_config=lambda capacity, **kw: HT.BCHTConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_bcht_insert,
     query=_bcht_query,
     delete=_bcht_delete,
+    growth_sizings=({},),  # exact: any level trivially meets its FPR share
 )
 
 
@@ -261,16 +303,20 @@ class ShardedAMQConfig:
 
     @property
     def num_slots(self) -> int:
+        """Aggregate nominal capacity across all shards."""
         return self.inner.num_slots
 
     @property
     def table_bytes(self) -> int:
+        """Aggregate device memory footprint across all shards."""
         return self.inner.table_bytes
 
     def expected_fpr(self, load_factor: float) -> float:
+        """Aggregate FPR equals the per-shard filter's (paper Eq. 4), because shards are independent same-config cuckoo filters."""
         return self.inner.expected_fpr(load_factor)
 
     def init(self) -> SF.ShardedCuckooState:
+        """Fresh empty sharded state, placed along the mesh axis."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         return jax.device_put(
@@ -343,10 +389,24 @@ def _sharded_delete(config, state, keys, *, valid=None):
     return state, DeleteReport(ok, routed)
 
 
+def _sharded_grow_config(prev: ShardedAMQConfig, factor: float,
+                         **overlay) -> ShardedAMQConfig:
+    """Next cascade level: grow the per-shard filter, keep the *same* mesh.
+
+    Carrying ``prev.mesh`` over (rather than re-deriving a default mesh per
+    level) pins the cascade's placement: every level exchanges keys over
+    one all-to-all pattern (DESIGN.md §8 "cascade of shards").
+    """
+    return ShardedAMQConfig(
+        prev.inner.grown(factor, fp_bits=overlay.pop("fp_bits", None)),
+        prev.mesh)
+
+
 SHARDED_CUCKOO = AMQAdapter(
     name="sharded-cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
-                              supports_sharding=True, counting=True),
+                              supports_sharding=True, counting=True,
+                              supports_expand=True),
     make_config=_sharded_make_config,
     init=lambda cfg: cfg.init(),
     insert=_sharded_insert,
@@ -354,6 +414,8 @@ SHARDED_CUCKOO = AMQAdapter(
     query=_sharded_query,
     delete=_sharded_delete,
     jit=False,  # ops are shard_map programs jitted per batch shape above
+    growth_sizings=_CUCKOO_SIZINGS,  # fp_bits flows to the per-shard config
+    grow_config=_sharded_grow_config,
 )
 
 
@@ -401,7 +463,7 @@ def _py_delete(config, state, keys, *, valid=None):
 CPU_CUCKOO = AMQAdapter(
     name="cpu-cuckoo",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              serial_insert=True),
+                              serial_insert=True, supports_expand=True),
     make_config=lambda capacity, **kw: PYREF.PyCuckooConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
@@ -409,6 +471,7 @@ CPU_CUCKOO = AMQAdapter(
     query=_py_query,
     delete=_py_delete,
     jit=False,
+    growth_sizings=_CUCKOO_SIZINGS,
 )
 
 

@@ -1,0 +1,417 @@
+"""Auto-expanding AMQ cascades: unbounded inserts over any registry backend.
+
+Every static filter in the registry is frozen at its ``make(capacity=...)``
+size — an insert burst past capacity simply fails. The source paper's
+partial-key Cuckoo filter cannot rehash its way out: stored tags are
+fingerprints, not keys, so a bigger table cannot be rebuilt from a full one
+(the bucket index needs hash bits the table never stored). The classic
+escape is the *cascade filter* of Bender et al. ("Don't Thrash: How to
+Cache Your Hash on Flash", §3) and the expandable AMQs of Maier et al.
+(arXiv:1911.08374): keep a geometric sequence of levels, insert into the
+newest, query them all, and split the false-positive budget across levels
+so the aggregate FPR stays bounded however far the structure grows.
+
+:class:`CascadeHandle` implements that scheme over *any* backend whose
+adapter advertises ``supports_expand`` (DESIGN.md §8):
+
+* **Levels** grow geometrically (``growth`` factor g, default 2): level
+  ``i`` holds ``capacity * g**i`` keys. A new level is allocated when the
+  active one reaches the ``watermark`` load factor or rejects keys.
+* **Inserts** land in the active (newest) level, throttled to the level's
+  remaining watermark headroom so no level is ever driven past its design
+  load (which would blow its FPR share and, for cuckoo structures, its
+  insert success guarantee).
+* **Queries** fan across all levels in one batched pass — a single jitted
+  program per level-set, so XLA shares the key hashing between levels and
+  fuses the per-level probes.
+* **Deletes** are routed to the level that holds the key (newest first), a
+  query-then-delete pass per level, capability-gated like static handles.
+* **``compact()``** reclaims drained levels. Stored tags cannot migrate
+  between levels (the same partial-key constraint that forces the cascade
+  in the first place), so compaction frees empty levels rather than
+  merging live ones; a fully drained cascade resets to one fresh
+  base-capacity level.
+
+Example::
+
+    from repro import amq
+
+    h = amq.make("cuckoo", capacity=100_000, auto_expand=True)
+    h.insert(keys_1m)                 # grows to ~4 levels, never refuses
+    assert bool(h.query(keys_1m).hits.all())
+    print(len(h.levels), h.load_factor, h.report().expected_fpr)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adapters import AMQAdapter
+from .handle import FilterHandle
+from .protocol import (
+    CascadeReport,
+    DeleteReport,
+    InsertReport,
+    LevelStats,
+    QueryResult,
+    fpr_share,
+)
+
+# Per-level FPR shares are enforced at the structure's design load: a level
+# is never filled past ``watermark``, so its analytic FPR at full load upper
+# bounds anything it will exhibit in service.
+_REF_LOAD = 1.0
+
+# An insert batch provokes at most ~log_g(batch / capacity) growths; this
+# backstop only trips if a backend keeps rejecting keys into fresh levels.
+_MAX_GROW_ROUNDS = 64
+
+
+def _mask(keys, valid) -> np.ndarray:
+    """Normalize an optional validity mask to a host-side bool[n] copy."""
+    n = int(keys.shape[0])
+    if valid is None:
+        return np.ones((n,), bool)
+    return np.array(np.asarray(valid), bool)
+
+
+class CascadeHandle:
+    """Auto-expanding filter handle: a geometric cascade of level handles.
+
+    Obtain via ``amq.make(name, capacity=..., auto_expand=True)``. The
+    surface mirrors :class:`repro.amq.handle.FilterHandle` (``insert`` /
+    ``query`` / ``delete`` / ``count`` / ``load_factor`` / ...) so
+    consumers swap static handles for cascades without code changes.
+
+    Example::
+
+        >>> h = amq.make("cuckoo", capacity=1000, auto_expand=True)
+        >>> _ = h.insert(keys)            # any number of keys
+        >>> len(h.levels) >= 1            # doctest: +SKIP
+        True
+
+    Extra keyword arguments are the backend's sizing kwargs (forwarded to
+    every level's ``make_config``); per-level FPR tightening overlays them
+    with the adapter's ``growth_sizings`` ladder (DESIGN.md §8).
+    """
+
+    def __init__(self, adapter: AMQAdapter, capacity: int, *,
+                 growth: float = 2.0, watermark: float = 0.85,
+                 fpr_budget: Optional[float] = None,
+                 split_ratio: float = 0.5,
+                 max_levels: Optional[int] = None,
+                 **base_kwargs: Any):
+        """Build the cascade with a single fresh base-capacity level."""
+        if not adapter.capabilities.supports_expand:
+            raise NotImplementedError(
+                f"{adapter.name}: backend cannot auto-expand "
+                "(capabilities.supports_expand is False)")
+        if not adapter.growth_sizings:
+            raise ValueError(f"{adapter.name}: no growth_sizings hook")
+        if growth <= 1.0:
+            raise ValueError(f"growth factor must be > 1, got {growth}")
+        if not 0.0 < watermark <= 1.0:
+            raise ValueError(f"watermark must be in (0, 1], got {watermark}")
+        if not 0.0 < split_ratio < 1.0:
+            raise ValueError(
+                f"split_ratio must be in (0, 1), got {split_ratio}")
+        self.adapter = adapter
+        self.base_capacity = int(capacity)
+        self.growth = float(growth)
+        self.watermark = float(watermark)
+        self.split_ratio = float(split_ratio)
+        self.max_levels = max_levels
+        self.base_kwargs = dict(base_kwargs)
+        if fpr_budget is None:
+            # Declared budget: twice the base config's design FPR for level
+            # 0, decaying geometrically — the level-0 share then admits the
+            # backend's default sizing and the infinite-sum stays bounded.
+            probe = adapter.make_config(self.base_capacity,
+                                        **self.base_kwargs)
+            fpr_budget = (2.0 * probe.expected_fpr(_REF_LOAD)
+                          / (1.0 - self.split_ratio))
+        self.fpr_budget = float(fpr_budget)
+        self.levels: list = []
+        self._shares: list = []
+        self._allocated = 0     # monotonic: shares keep decaying past churn
+        self._query_fn = None   # (configs tuple, jitted fan) for the live set
+        self._grow()
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        """Registry name of the wrapped backend."""
+        return self.adapter.name
+
+    @property
+    def capabilities(self):
+        """The wrapped backend's capability flags."""
+        return self.adapter.capabilities
+
+    @property
+    def config(self):
+        """The *active* (newest) level's static config."""
+        return self.levels[-1].config
+
+    @property
+    def state(self):
+        """The *active* (newest) level's state pytree."""
+        return self.levels[-1].state
+
+    @property
+    def num_slots(self) -> int:
+        """Aggregate nominal capacity across live levels."""
+        return sum(lvl.config.num_slots for lvl in self.levels)
+
+    @property
+    def table_bytes(self) -> int:
+        """Aggregate device memory footprint across live levels."""
+        return sum(lvl.config.table_bytes for lvl in self.levels)
+
+    @property
+    def load_factor(self) -> float:
+        """Aggregate occupancy: total stored keys / total slots."""
+        return self.count() / self.num_slots
+
+    def count(self) -> int:
+        """Total stored-key count across all levels."""
+        return sum(lvl.count() for lvl in self.levels)
+
+    def expected_fpr(self, load_factor: Optional[float] = None) -> float:
+        """Aggregate analytic FPR: ``1 - prod(1 - eps_i)`` over levels.
+
+        ``load_factor=None`` evaluates each level at its current occupancy;
+        a float evaluates every level at that load (an upper bound).
+        """
+        miss = 1.0
+        for lvl in self.levels:
+            lf = lvl.load_factor if load_factor is None else load_factor
+            miss *= 1.0 - lvl.config.expected_fpr(lf)
+        return 1.0 - miss
+
+    def report(self) -> CascadeReport:
+        """Per-level and aggregate statistics (a :class:`CascadeReport`)."""
+        stats, miss = [], 1.0
+        slots = bytes_ = total = 0
+        for i, (lvl, share) in enumerate(zip(self.levels, self._shares)):
+            c, lf = lvl.count(), lvl.load_factor
+            eps = lvl.config.expected_fpr(lf)
+            stats.append(LevelStats(i, lvl.config.num_slots, c, lf,
+                                    lvl.config.table_bytes, eps, share))
+            slots += lvl.config.num_slots
+            bytes_ += lvl.config.table_bytes
+            total += c
+            miss *= 1.0 - eps
+        return CascadeReport(tuple(stats), slots, bytes_, total,
+                             total / slots if slots else 0.0,
+                             1.0 - miss, self.fpr_budget)
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        """Summarize backend, level count, and aggregate size."""
+        return (f"CascadeHandle({self.adapter.name!r}, "
+                f"levels={len(self.levels)}, slots={self.num_slots}, "
+                f"bytes={self.table_bytes}, budget={self.fpr_budget:.2e})")
+
+    # -- growth --------------------------------------------------------------
+
+    def _config_for(self, capacity: int, share: float, prev=None):
+        """Cheapest sizing on the adapter's ladder meeting ``share``.
+
+        Falls back to the tightest available sizing when the ladder tops
+        out (visible in ``report()``: that level's ``expected_fpr`` exceeds
+        its ``fpr_share``). When the adapter has a ``grow_config`` hook and
+        a previous level exists, the level is derived from it — backends
+        use this to pin placement state (the sharded backend's mesh)
+        across the whole cascade.
+        """
+        cfg = None
+        for overlay in self.adapter.growth_sizings:
+            if prev is not None and self.adapter.grow_config is not None:
+                cfg = self.adapter.grow_config(prev, self.growth, **overlay)
+            else:
+                cfg = self.adapter.make_config(
+                    capacity, **{**self.base_kwargs, **overlay})
+            if cfg.expected_fpr(_REF_LOAD) <= share:
+                break
+        return cfg
+
+    def _grow(self) -> bool:
+        """Allocate the next level; False if ``max_levels`` forbids it."""
+        if self.max_levels is not None and len(self.levels) >= self.max_levels:
+            return False
+        i = self._allocated
+        capacity = max(1, int(round(self.base_capacity * self.growth ** i)))
+        share = fpr_share(self.fpr_budget, i, self.split_ratio)
+        prev = self.levels[-1].config if self.levels else None
+        handle = FilterHandle(self.adapter,
+                              self._config_for(capacity, share, prev))
+        self.levels.append(handle)
+        self._shares.append(share)
+        self._allocated += 1
+        return True
+
+    # -- ops -----------------------------------------------------------------
+
+    def insert(self, keys, *, bulk: bool = False,
+               dedup_within_batch: bool = False,
+               valid=None) -> InsertReport:
+        """Insert a batch, growing the cascade as needed.
+
+        Keys land in the active level, throttled to its watermark headroom;
+        rejected or overflowing keys trigger allocation of the next
+        (``growth``-times larger) level and are retried there. ``ok`` is
+        False only when growth is exhausted — ``max_levels`` reached, or a
+        pathological backend kept rejecting keys into fresh levels until
+        the internal round backstop tripped. ``routed`` is all-True:
+        unrouted keys of sharded levels are retried internally.
+
+        Example::
+
+            >>> report = h.insert(keys, bulk=True)
+            >>> bool(report.ok.all())      # doctest: +SKIP
+            True
+        """
+        n = int(keys.shape[0])
+        pending = _mask(keys, valid)
+        ok = np.zeros((n,), bool)
+        evictions = np.zeros((n,), np.int32)
+        rounds = 0
+        for _ in range(_MAX_GROW_ROUNDS):
+            if not pending.any():
+                break
+            level = self.levels[-1]
+            headroom = (int(self.watermark * level.config.num_slots)
+                        - level.count())
+            if headroom <= 0:
+                if not self._grow():
+                    break
+                continue
+            # Throttle to headroom so the level never exceeds its
+            # watermark (keeps every level's FPR share honest even for
+            # backends like Bloom whose inserts never fail).
+            take = pending & (np.cumsum(pending) <= headroom)
+            rep = level.insert(keys, bulk=bulk,
+                               dedup_within_batch=dedup_within_batch,
+                               valid=take)
+            landed = take & np.asarray(rep.ok) & np.asarray(rep.routed)
+            ok |= landed
+            evictions = np.where(landed, np.asarray(rep.evictions),
+                                 evictions)
+            rounds += int(np.asarray(rep.rounds))
+            pending &= ~landed
+            if (take & ~landed).any():
+                # The level rejected routed keys (or could not route them):
+                # it is effectively full for this workload — move on.
+                if not self._grow():
+                    break
+        return InsertReport(ok, evictions, np.int32(rounds),
+                            np.ones((n,), bool))
+
+    def query(self, keys, *, valid=None) -> QueryResult:
+        """Membership across all levels in one batched pass.
+
+        For jit-able backends the whole fan is a single jitted program per
+        level-set, so key hashing is shared between levels and the
+        per-level probes fuse.
+
+        Example::
+
+            >>> hits = h.query(keys).hits
+        """
+        if self.adapter.jit:
+            configs = tuple(lvl.config for lvl in self.levels)
+            states = tuple(lvl.state for lvl in self.levels)
+            vm = (jnp.ones((keys.shape[0],), bool) if valid is None
+                  else jnp.asarray(valid, bool))
+            return self._fused_query(configs)(states, keys, vm)
+        hits = np.zeros((int(keys.shape[0]),), bool)
+        routed = np.ones_like(hits)
+        for lvl in self.levels:
+            qr = lvl.query(keys, valid=valid)
+            hits |= np.asarray(qr.hits) & np.asarray(qr.routed)
+            routed &= np.asarray(qr.routed)
+        return QueryResult(hits, routed)
+
+    def _fused_query(self, configs: tuple):
+        """Build the one-pass multi-level query jit for a level-set.
+
+        Only the *live* level-set's program is cached (growth/compaction
+        churn would otherwise pin one dead XLA executable per historical
+        level-set for the handle's lifetime).
+        """
+        if self._query_fn is None or self._query_fn[0] != configs:
+            adapter = self.adapter
+
+            def fan(states, keys, vm):
+                """OR per-level hits; one trace so XLA shares the hashing."""
+                hits = jnp.zeros((keys.shape[0],), bool)
+                routed = jnp.ones((keys.shape[0],), bool)
+                for cfg, st in zip(configs, states):
+                    _, qr = adapter.query(cfg, st, keys, valid=vm)
+                    hits = hits | (qr.hits & qr.routed)
+                    routed = routed & qr.routed
+                return QueryResult(hits, routed)
+
+            self._query_fn = (configs, jax.jit(fan))
+        return self._query_fn[1]
+
+    def delete(self, keys, *, valid=None) -> DeleteReport:
+        """Delete one stored copy per key, routed to the level holding it.
+
+        Levels are probed newest-first with a query; the delete is applied
+        only where that level reports a hit, so aliasing false-deletes are
+        bounded by the per-level FPR shares. Capability-gated exactly like
+        static handles.
+
+        Example::
+
+            >>> report = h.delete(keys)    # raises on append-only backends
+        """
+        if not self.adapter.capabilities.supports_delete:
+            raise NotImplementedError(
+                f"{self.name}: append-only structure "
+                "(capabilities.supports_delete is False)")
+        n = int(keys.shape[0])
+        pending = _mask(keys, valid)
+        ok = np.zeros((n,), bool)
+        for lvl in reversed(self.levels):
+            if not pending.any():
+                break
+            qr = lvl.query(keys, valid=pending)
+            target = pending & np.asarray(qr.hits) & np.asarray(qr.routed)
+            if not target.any():
+                continue
+            dr = lvl.delete(keys, valid=target)
+            done = target & np.asarray(dr.ok) & np.asarray(dr.routed)
+            ok |= done
+            pending &= ~done
+        return DeleteReport(ok, np.ones((n,), bool))
+
+    def compact(self) -> CascadeReport:
+        """Reclaim drained levels; returns the post-compaction report.
+
+        Stored tags cannot be rehashed into another level (partial-key
+        constraint — the reason the cascade exists), so compaction frees
+        levels whose count reached zero instead of merging live ones. A
+        fully drained cascade resets to a single fresh base-capacity level
+        and reclaims its whole FPR budget.
+
+        Example::
+
+            >>> h.delete(keys)             # drain a level ...
+            >>> report = h.compact()       # ... and free it
+        """
+        live = [(lvl, share) for lvl, share in zip(self.levels, self._shares)
+                if lvl.count() > 0]
+        if live:
+            self.levels = [lvl for lvl, _ in live]
+            self._shares = [share for _, share in live]
+        else:
+            self.levels, self._shares, self._allocated = [], [], 0
+            self._grow()
+        return self.report()

@@ -37,6 +37,7 @@ class FilterHandle:
     """
 
     def __init__(self, adapter: AMQAdapter, config: Any, state: Any = None):
+        """Wrap (adapter, config, state); a fresh state is built if None."""
         self.adapter = adapter
         self.config = config
         self.state = adapter.init(config) if state is None else state
@@ -46,26 +47,43 @@ class FilterHandle:
 
     @property
     def name(self) -> str:
+        """Registry name of the wrapped backend (e.g. ``"cuckoo"``)."""
         return self.adapter.name
 
     @property
     def capabilities(self) -> Capabilities:
+        """The backend's capability flags — branch on these, not on names.
+
+        Example::
+
+            >>> if handle.capabilities.supports_delete:
+            ...     handle.delete(expired_keys)
+        """
         return self.adapter.capabilities
 
     @property
     def load_factor(self) -> float:
+        """Current occupancy: stored keys / nominal capacity."""
         return _load_factor(self.config, self.state)
 
     @property
     def table_bytes(self) -> int:
+        """Device memory footprint of the filter state."""
         return self.config.table_bytes
 
     def expected_fpr(self, load_factor: Optional[float] = None) -> float:
-        """Analytic FPR at ``load_factor`` (default: current occupancy)."""
+        """Analytic FPR at ``load_factor`` (default: current occupancy).
+
+        Example::
+
+            >>> amq.make("cuckoo", capacity=1000).expected_fpr(0.95)
+            0.000463...
+        """
         lf = self.load_factor if load_factor is None else load_factor
         return self.config.expected_fpr(lf)
 
     def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        """Summarize backend, size, and capabilities."""
         return (f"FilterHandle({self.adapter.name!r}, "
                 f"slots={self.config.num_slots}, "
                 f"bytes={self.config.table_bytes}, "
@@ -88,7 +106,18 @@ class FilterHandle:
     def insert(self, keys, *, bulk: bool = False,
                dedup_within_batch: bool = False,
                valid=None) -> InsertReport:
-        """Insert a batch. ``bulk=True`` requires ``supports_bulk``."""
+        """Insert a batch of ``uint32[n, 2]`` keys.
+
+        ``bulk=True`` takes the bucket-sorted bulk-build fast path
+        (requires ``supports_bulk``); ``dedup_within_batch`` degrades the
+        batch to set semantics; ``valid`` masks caller padding.
+
+        Example::
+
+            >>> report = handle.insert(keys, bulk=True)
+            >>> bool(report.ok.all())          # everything landed
+            True
+        """
         op = "insert"
         if bulk:
             if not self.adapter.capabilities.supports_bulk:
@@ -101,10 +130,24 @@ class FilterHandle:
         return report
 
     def query(self, keys, *, valid=None) -> QueryResult:
+        """Batch membership: no false negatives, FPR-bounded positives.
+
+        Example::
+
+            >>> hits = handle.query(keys).hits  # bool[n]
+        """
         _, result = self._fn("query")(self.state, keys, valid=valid)
         return result
 
     def delete(self, keys, *, valid=None) -> DeleteReport:
+        """Remove one stored copy per key (requires ``supports_delete``).
+
+        Example::
+
+            >>> report = handle.delete(keys)    # raises on e.g. "bloom"
+            >>> bool(report.ok.all())
+            True
+        """
         if not self.adapter.capabilities.supports_delete:
             raise NotImplementedError(
                 f"{self.name}: append-only structure "

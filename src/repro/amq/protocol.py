@@ -47,6 +47,10 @@ class Capabilities:
     * ``exact`` — zero false positives (stores full keys, not fingerprints).
     * ``serial_insert`` — insertion is inherently sequential per key (the
       GQF's Robin-Hood shifting); benchmark consumers cap its prefill sizes.
+    * ``supports_expand`` — the backend can be stacked into an auto-expanding
+      cascade (:mod:`repro.amq.cascade`): its sizing knobs can tighten the
+      per-level FPR geometrically (DESIGN.md §8). False for structures whose
+      packing caps the fingerprint width (the TCF's uint32 stash words).
     """
 
     supports_delete: bool = True
@@ -55,6 +59,7 @@ class Capabilities:
     counting: bool = True
     exact: bool = False
     serial_insert: bool = False
+    supports_expand: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +98,80 @@ class DeleteReport(NamedTuple):
 
     ok: jnp.ndarray
     routed: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Cascade (auto-expansion) reporting — host-side introspection types.
+# ---------------------------------------------------------------------------
+
+class LevelStats(NamedTuple):
+    """Snapshot of one cascade level (host-side plain Python values).
+
+    Example::
+
+        >>> report = handle.report()          # handle: a CascadeHandle
+        >>> report.levels[0].load_factor      # doctest: +SKIP
+        0.85
+
+    ``fpr_share`` is the slice of the cascade's FPR budget this level was
+    sized against (DESIGN.md §8); ``expected_fpr`` is the level's analytic
+    FPR at its *current* load, so ``expected_fpr <= fpr_share`` holds for
+    every level whose backend could meet its share.
+    """
+
+    level: int
+    num_slots: int
+    count: int
+    load_factor: float
+    table_bytes: int
+    expected_fpr: float
+    fpr_share: float
+
+
+class CascadeReport(NamedTuple):
+    """Aggregate view of an auto-expanding cascade (DESIGN.md §8).
+
+    Example::
+
+        >>> h = amq.make("cuckoo", capacity=1000, auto_expand=True)
+        >>> h.report().num_levels             # doctest: +SKIP
+        1
+
+    ``expected_fpr`` is the aggregate analytic false-positive rate
+    ``1 - prod(1 - eps_i)`` over live levels; the cascade keeps it under
+    ``fpr_budget`` whenever every level met its share.
+    """
+
+    levels: tuple
+    num_slots: int
+    table_bytes: int
+    count: int
+    load_factor: float
+    expected_fpr: float
+    fpr_budget: float
+
+    @property
+    def num_levels(self) -> int:
+        """Number of live levels in the cascade."""
+        return len(self.levels)
+
+
+def fpr_share(budget: float, level: int, ratio: float = 0.5) -> float:
+    """Geometric FPR-budget split: level ``i`` gets ``budget*(1-r)*r^i``.
+
+    The shares of an infinite cascade sum to exactly ``budget`` (classic
+    cascade-filter accounting, Bender et al. §3), so however many levels an
+    insert stream provokes, the aggregate analytic FPR stays under target::
+
+        >>> sum(fpr_share(0.01, i) for i in range(50))  # -> ~0.01
+        0.00999...
+
+    ``ratio`` is the per-level decay (0.5 halves each level's share, which
+    for fingerprint filters costs ~1 extra tag bit per level).
+    """
+    if not 0.0 < ratio < 1.0:
+        raise ValueError(f"fpr split ratio must be in (0, 1), got {ratio}")
+    return budget * (1.0 - ratio) * ratio ** level
 
 
 # ---------------------------------------------------------------------------
@@ -153,8 +232,13 @@ def ensure_valid(keys: jnp.ndarray,
 
 def fpr_tolerance(expected: float, n_probes: int,
                   factor: float = 5.0) -> tuple:
-    """Acceptance band (lo, hi) for an empirical FPR measured with
-    ``n_probes`` negatives against the analytic ``expected_fpr``.
+    """Acceptance band ``(lo, hi)`` for an empirically measured FPR.
+
+    Example::
+
+        >>> lo, hi = fpr_tolerance(expected=1e-3, n_probes=1 << 14)
+        >>> lo <= 1e-3 <= hi
+        True
 
     The analytic formulas are asymptotic (blocked-Bloom skew, partial
     buckets), hence the multiplicative ``factor``; the additive slack keeps

@@ -32,6 +32,10 @@ def _validate(adapter: AMQAdapter) -> None:
     if caps.supports_bulk and not callable(adapter.insert_bulk):
         raise ValueError(
             f"{adapter.name!r}: supports_bulk=True but no insert_bulk op")
+    if caps.supports_expand and not adapter.growth_sizings:
+        raise ValueError(
+            f"{adapter.name!r}: supports_expand=True but no growth_sizings "
+            "hook (the cascade cannot size levels to their FPR shares)")
 
 
 def register(adapter: AMQAdapter, *, overwrite: bool = False) -> None:
@@ -63,14 +67,45 @@ def names() -> Iterable[str]:
 
 
 def make(name: str, capacity: Optional[int] = None, *,
-         config: Any = None, state: Any = None, **kw) -> FilterHandle:
-    """Build a ready-to-use :class:`FilterHandle`.
+         config: Any = None, state: Any = None,
+         auto_expand=False, **kw):
+    """Build a ready-to-use filter handle.
 
     Either pass ``capacity`` (+ backend-specific sizing kwargs, forwarded to
     the adapter's ``make_config``) or a pre-built ``config``. ``state``
     resumes from an existing state pytree (checkpoint restore).
+
+    ``auto_expand=True`` returns a :class:`repro.amq.cascade.CascadeHandle`
+    instead of a static :class:`FilterHandle`: ``capacity`` becomes the
+    *initial* level size and the filter grows online as a geometric cascade
+    (DESIGN.md §8), so streaming workloads need no a-priori sizing. Cascade
+    tuning knobs (``growth``, ``watermark``, ``fpr_budget``,
+    ``split_ratio``, ``max_levels``) ride along in ``**kw`` next to the
+    backend's sizing kwargs. Requires ``capabilities.supports_expand``;
+    ``auto_expand="auto"`` expands when the backend supports it and falls
+    back to a static handle otherwise (the consumer-friendly default for
+    backend-generic callers).
+
+    Example::
+
+        >>> h = amq.make("cuckoo", capacity=100_000, auto_expand=True)
+        >>> h.insert(keys)                # any volume; levels allocate lazily
+        >>> len(h.levels)                 # doctest: +SKIP
+        4
     """
     adapter = get(name)
+    if auto_expand == "auto":
+        auto_expand = adapter.capabilities.supports_expand
+    if auto_expand:
+        if config is not None or state is not None:
+            raise TypeError(
+                "auto_expand=True sizes and allocates levels itself; pass "
+                "capacity=..., not config=/state=")
+        if capacity is None:
+            raise TypeError("make(auto_expand=True) needs capacity=...")
+        from .cascade import CascadeHandle
+
+        return CascadeHandle(adapter, capacity, **kw)
     if config is None:
         if capacity is None:
             raise TypeError("make() needs capacity=... or config=...")

@@ -15,8 +15,10 @@ Public surface:
 from ..amq.protocol import (  # noqa: F401
     AMQConfig,
     Capabilities,
+    CascadeReport,
     DeleteReport,
     InsertReport,
+    LevelStats,
     QueryResult,
 )
 from .cuckoo_filter import (  # noqa: F401

@@ -19,6 +19,15 @@ retry them next step (they are never silently dropped).
 All ops run inside ``shard_map`` over the chosen axis and are jit-compatible;
 the sharded state is an ordinary pytree (stacked per-shard tables), so it
 checkpoints/restores like model state.
+
+The sharded filter also composes with the auto-expanding cascade
+(``repro.amq.cascade``, DESIGN.md §8) as a *cascade of shards*: each
+cascade level is an independently mesh-sharded filter, so aggregate
+capacity grows geometrically while every level keeps the linear
+n-devices-× bandwidth scaling above. :meth:`ShardedCuckooConfig.grown`
+is the growth hook — it scales per-shard capacity while pinning the mesh
+topology (shard count, axis, routing overprovision) so all levels of one
+cascade exchange keys over the same all-to-all pattern.
 """
 
 from __future__ import annotations
@@ -91,6 +100,30 @@ class ShardedCuckooConfig:
         return ShardedCuckooConfig(
             CuckooConfig.for_capacity(per_shard, load_factor, **kw),
             num_shards, axis_name, cf)
+
+    def grown(self, factor: float, *, fp_bits: Optional[int] = None
+              ) -> "ShardedCuckooConfig":
+        """Next cascade level's config: ``factor``-times the capacity.
+
+        Scales the per-shard filter while keeping the mesh topology
+        (``num_shards``, ``axis_name``, ``capacity_factor``) fixed, so all
+        levels of a cascade share one all-to-all routing pattern.
+        ``fp_bits`` optionally tightens the level's fingerprints to meet a
+        smaller FPR share (DESIGN.md §8).
+        """
+        return ShardedCuckooConfig(
+            CuckooConfig.for_capacity(
+                int(np.ceil(self.shard.num_slots * factor)),
+                load_factor=1.0,  # num_slots is already post-load sizing
+                fp_bits=self.shard.fp_bits if fp_bits is None else fp_bits,
+                bucket_size=self.shard.bucket_size,
+                policy=self.shard.policy,
+                hash_kind=self.shard.hash_kind,
+                eviction=self.shard.eviction,
+                max_evictions=self.shard.max_evictions,
+                max_rounds=self.shard.max_rounds,
+                seed=self.shard.seed),
+            self.num_shards, self.axis_name, self.capacity_factor)
 
 
 def shard_of(config: ShardedCuckooConfig, keys: jnp.ndarray) -> jnp.ndarray:

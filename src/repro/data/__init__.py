@@ -2,9 +2,11 @@
 
 from .dedup import (  # noqa: F401
     DedupConfig,
+    StreamingDeduper,
     dedup_batch,
     forget_keys,
     make_dedup,
+    make_deduper,
     sequence_keys,
 )
 from .pipeline import DataConfig, data_iterator, make_batch, make_frames_batch  # noqa: F401

@@ -11,6 +11,14 @@ mesh-sharded variant, or any baseline. Deletion support still matters:
 time-windowed dedup (``forget``) removes expired epochs' keys, which an
 append-only Bloom filter cannot do (``forget_keys`` is capability-gated) —
 the paper's core argument for dynamic AMQs.
+
+Two surfaces:
+
+* :func:`dedup_batch` — functional, jit-fusable, static filter config (the
+  in-pipeline fast path).
+* :class:`StreamingDeduper` (via :func:`make_deduper`) — handle-based and
+  auto-expanding by default (DESIGN.md §8), for streams whose total volume
+  is unknown a priori.
 """
 
 from __future__ import annotations
@@ -55,6 +63,24 @@ def sequence_keys(tokens: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([lo, hi], axis=-1)
 
 
+def intra_batch_duplicates(keys: jnp.ndarray) -> jnp.ndarray:
+    """Mask non-first occurrences of each 64-bit key within a batch.
+
+    First-occurrence detection runs on the full 64-bit key values
+    (backend-independent, so set semantics hold even for counting filters;
+    no 32-bit mixing — a mix collision would silently drop a live
+    sequence).
+    """
+    lo, hi = keys[:, 0], keys[:, 1]
+    order = jnp.lexsort((lo, hi))
+    lo_s, hi_s = lo[order], hi[order]
+    dup_sorted = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (lo_s[1:] == lo_s[:-1]) & (hi_s[1:] == hi_s[:-1]),
+    ])
+    return jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+
+
 def dedup_batch(cfg: DedupConfig, state: Any,
                 batch: Dict[str, jnp.ndarray]
                 ) -> Tuple[Any, Dict[str, jnp.ndarray], Dict]:
@@ -68,18 +94,7 @@ def dedup_batch(cfg: DedupConfig, state: Any,
     keys = sequence_keys(tokens)
     _, qres = ad.query(cfg.filter, state, keys)
     seen = qres.hits
-    # Intra-batch duplicates: first-occurrence detection on the full 64-bit
-    # key values (backend-independent, so set semantics hold even for
-    # counting filters; no 32-bit mixing — a mix collision would silently
-    # drop a live sequence).
-    lo, hi = keys[:, 0], keys[:, 1]
-    order = jnp.lexsort((lo, hi))
-    lo_s, hi_s = lo[order], hi[order]
-    dup_sorted = jnp.concatenate([
-        jnp.zeros((1,), bool),
-        (lo_s[1:] == lo_s[:-1]) & (hi_s[1:] == hi_s[:-1]),
-    ])
-    intra_dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    intra_dup = intra_batch_duplicates(keys)
 
     fresh = ~seen & ~intra_dup
     state, report = ad.insert(cfg.filter, state, keys, valid=fresh)
@@ -114,6 +129,62 @@ def forget_keys(cfg: DedupConfig, state: Any,
             "(capabilities.supports_delete is False)")
     state, _ = ad.delete(cfg.filter, state, keys)
     return state
+
+
+class StreamingDeduper:
+    """Handle-based dedup for unbounded streams (no a-priori sizing).
+
+    Wraps any ``amq`` handle — by default an auto-expanding cascade
+    (DESIGN.md §8) — so the dedup window grows with the stream instead of
+    saturating at a guessed capacity. Host-driven (the cascade allocates
+    levels between batches), unlike :func:`dedup_batch` which stays fully
+    jit-fusable over a static filter.
+    """
+
+    def __init__(self, handle):
+        self.handle = handle
+        self.stats = {"duplicates": 0, "insert_failures": 0}
+
+    def dedup(self, batch: Dict[str, jnp.ndarray]
+              ) -> Tuple[Dict[str, jnp.ndarray], Dict]:
+        """Mask duplicates in ``batch`` and insert fresh sequence keys.
+
+        Returns ``(batch + {"mask"}, per_batch_stats)`` and accumulates
+        totals in ``self.stats``.
+        """
+        keys = sequence_keys(batch["tokens"])
+        seen = self.handle.query(keys).hits
+        fresh = np.asarray(~seen) & ~np.asarray(intra_batch_duplicates(keys))
+        report = self.handle.insert(keys, valid=jnp.asarray(fresh))
+        ok = np.asarray(report.ok)
+        out = dict(batch)
+        out["mask"] = jnp.asarray(fresh)
+        stats = {"duplicates": int((~fresh).sum()),
+                 "insert_failures": int((fresh & ~ok).sum())}
+        for k, v in stats.items():
+            self.stats[k] += v
+        return out, stats
+
+    def forget(self, keys: jnp.ndarray) -> None:
+        """Expire keys from the window (capability-gated, like forget_keys)."""
+        if not self.handle.capabilities.supports_delete:
+            raise NotImplementedError(
+                f"{self.handle.name}: append-only backend cannot forget keys "
+                "(capabilities.supports_delete is False)")
+        self.handle.delete(keys)
+
+
+def make_deduper(capacity: int, backend: str = "cuckoo", *,
+                 auto_expand: bool = True, **kw) -> StreamingDeduper:
+    """Build a :class:`StreamingDeduper` on any registry backend.
+
+    ``capacity`` is the initial window size; with ``auto_expand`` (the
+    default, where the backend supports it) the filter grows online, so
+    streaming jobs no longer need to guess their dedup volume up front.
+    """
+    return StreamingDeduper(
+        amq.make(backend, capacity=capacity,
+                 auto_expand="auto" if auto_expand else False, **kw))
 
 
 # Backwards-compat convenience mirroring the original module surface.

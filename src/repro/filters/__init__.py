@@ -14,8 +14,10 @@ package never cycles through the adapters, which import these modules.
 
 from ..amq.protocol import (  # noqa: F401
     Capabilities,
+    CascadeReport,
     DeleteReport,
     InsertReport,
+    LevelStats,
     QueryResult,
 )
 from .bcht import BCHTConfig, BucketedCuckooHashTable  # noqa: F401

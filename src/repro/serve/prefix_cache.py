@@ -8,10 +8,15 @@ from the filter too — deletion support, the paper's headline capability vs
 Bloom filters, is what keeps the filter in sync with an LRU cache instead of
 rotting toward 100% false positives.
 
-The filter is any :class:`repro.amq.FilterHandle`. On backends without
-deletion (``supports_delete`` False, e.g. ``bloom``) the cache still works
-but evicted keys go stale in the filter — tracked in ``stats["stale"]`` so
-operators can see the rot the paper warns about.
+The filter is any ``repro.amq`` handle — by default an auto-expanding
+cascade (DESIGN.md §8), so serving fleets no longer size the guard filter
+for peak traffic up front: the filter starts small and grows with the
+working set. On backends without deletion (``supports_delete`` False,
+e.g. ``bloom``) the cache still works but evicted keys go stale in the
+filter — tracked in ``stats["stale"]`` so operators can see the rot the
+paper warns about; with auto-expansion those stale keys also keep
+*occupying* the cascade, which is exactly why the delete-capable default
+backend matters.
 """
 
 from __future__ import annotations
@@ -40,18 +45,24 @@ class PrefixCache:
 
     ``backend`` picks any AMQ registry backend for the guard filter;
     alternatively pass a ready-made ``filter_handle`` (sized by the caller).
+    ``auto_expand`` (default True, where the backend supports it) makes the
+    guard an auto-expanding cascade, so ``filter_capacity`` is only an
+    initial size, not a ceiling.
     """
 
     def __init__(self, capacity_entries: int, filter_capacity: int = 0,
                  backend: str = "cuckoo",
                  filter_handle: Optional["amq.FilterHandle"] = None,
+                 auto_expand: bool = True,
                  **filter_kw):
         self.capacity = capacity_entries
         self.entries: "collections.OrderedDict[int, Any]" = \
             collections.OrderedDict()
         if filter_handle is None:
             fcap = filter_capacity or capacity_entries * 4
-            filter_handle = amq.make(backend, capacity=fcap, **filter_kw)
+            filter_handle = amq.make(
+                backend, capacity=fcap,
+                auto_expand="auto" if auto_expand else False, **filter_kw)
         self.filter = filter_handle
         self.stats = {"hits": 0, "misses": 0, "filtered": 0,
                       "evictions": 0, "stale": 0}

@@ -1,0 +1,238 @@
+"""Conformance suite for auto-expanding cascades (DESIGN.md §8).
+
+Every ``supports_expand`` backend runs the same insert-past-capacity ->
+query -> FPR -> delete -> compact scenario through
+``amq.make(..., auto_expand=True)`` — no backend gets a bespoke path.
+Also pins the consumer integrations: streaming dedup without a-priori
+sizing, and the prefix cache's stale-key accounting on append-only
+backends.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import amq
+from repro.core import keys_from_numpy
+
+CAPACITY = 256          # initial level size
+N_PAST = 2048           # streamed keys: 8x the initial capacity
+N_NEG = 1 << 13
+CHUNK = 512
+
+EXPANDABLE = [n for n in amq.names()
+              if amq.get(n).capabilities.supports_expand]
+NON_EXPANDABLE = [n for n in amq.names()
+                  if not amq.get(n).capabilities.supports_expand]
+
+
+def _keys(seed, n, lo=0, hi=2**32):
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(lo, hi, size=3 * n, dtype=np.uint64))[:n]
+    assert raw.shape[0] == n
+    return jnp.asarray(keys_from_numpy(raw))
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def _stream(handle, keys, **opts):
+    oks = []
+    for start in range(0, keys.shape[0], CHUNK):
+        oks.append(_np(handle.insert(keys[start:start + CHUNK], **opts).ok))
+    return np.concatenate(oks)
+
+
+@pytest.fixture(params=EXPANDABLE)
+def backend(request):
+    return request.param
+
+
+def test_non_expandable_set_is_explicit():
+    # TCF's uint32 stash packing caps its fingerprint width — the flag
+    # exists so cascades refuse it instead of silently blowing the budget.
+    assert NON_EXPANDABLE == ["tcf"]
+
+
+def test_auto_expand_gating_and_arg_errors():
+    for name in NON_EXPANDABLE:
+        with pytest.raises(NotImplementedError, match="supports_expand"):
+            amq.make(name, capacity=64, auto_expand=True)
+    with pytest.raises(TypeError, match="capacity"):
+        amq.make("cuckoo", auto_expand=True)
+    with pytest.raises(TypeError, match="config"):
+        amq.make("cuckoo", auto_expand=True,
+                 config=amq.get("cuckoo").make_config(64))
+
+
+def test_insert_past_capacity_no_false_negatives(backend):
+    h = amq.make(backend, capacity=CAPACITY, auto_expand=True)
+    pos = _keys(0, N_PAST)
+    ok = _stream(h, pos)
+    assert ok.all(), f"{backend}: cascade refused keys at 8x capacity"
+    assert len(h.levels) > 1, f"{backend}: never grew past level 0"
+    assert h.count() == int(ok.sum())
+    # Geometric level sizing, and no level driven past its watermark.
+    report = h.report()
+    for prev, cur in zip(report.levels, report.levels[1:]):
+        assert cur.num_slots >= prev.num_slots
+    for level in report.levels:
+        slack = 2.0 / level.num_slots
+        assert level.load_factor <= h.watermark + slack, \
+            f"{backend}: level {level.level} past watermark: {level}"
+    hits = _np(h.query(pos).hits)
+    assert hits.all(), f"{backend}: false negative after expansion"
+
+
+def test_bulk_insert_streams_through_cascade(backend):
+    caps = amq.get(backend).capabilities
+    h = amq.make(backend, capacity=CAPACITY, auto_expand=True)
+    pos = _keys(1, N_PAST)
+    if not caps.supports_bulk:
+        with pytest.raises(NotImplementedError):
+            h.insert(pos[:CHUNK], bulk=True)
+        return
+    ok = _stream(h, pos, bulk=True)
+    assert ok.all()
+    assert _np(h.query(pos).hits).all()
+
+
+def test_fpr_within_split_budget(backend):
+    h = amq.make(backend, capacity=CAPACITY, auto_expand=True)
+    pos = _keys(2, N_PAST)
+    assert _stream(h, pos).all()
+    report = h.report()
+    # Analytic: every level met its share, and the aggregate respects the
+    # declared budget (the sum-of-levels claim the split exists for).
+    for level in report.levels:
+        assert level.expected_fpr <= level.fpr_share * (1 + 1e-9), \
+            f"{backend}: level {level.level} exceeds its FPR share"
+    assert report.expected_fpr <= report.fpr_budget * (1 + 1e-9)
+    # Empirical: measured FPR within the tolerance band of the budget.
+    neg = _keys(3, N_NEG, lo=2**32, hi=2**64)
+    fpr = float(_np(h.query(neg).hits).mean())
+    _, hi = amq.fpr_tolerance(report.fpr_budget, N_NEG)
+    if amq.get(backend).capabilities.exact:
+        assert fpr == 0.0
+    else:
+        assert fpr <= hi, (f"{backend}: measured fpr {fpr} vs budget "
+                           f"{report.fpr_budget}")
+
+
+def test_delete_routes_to_owning_level_and_compact(backend):
+    caps = amq.get(backend).capabilities
+    h = amq.make(backend, capacity=CAPACITY, auto_expand=True)
+    pos = _keys(4, N_PAST)
+    ok = _stream(h, pos)
+    if not caps.supports_delete:
+        with pytest.raises(NotImplementedError):
+            h.delete(pos)
+        return
+    assert ok.all()
+    levels_before = len(h.levels)
+    dok = _np(h.delete(pos).ok)
+    assert dok.mean() > 0.99, f"{backend}: cross-level delete failed"
+    residue = N_PAST - int(dok.sum())
+    assert h.count() == residue
+    if residue == 0:
+        assert not _np(h.query(pos).hits).any(), \
+            f"{backend}: deleted keys still visible after full wipe"
+        # Fully drained: compaction resets to one fresh base level.
+        report = h.compact()
+        assert report.num_levels == 1
+        assert report.count == 0
+        assert len(h.levels) < levels_before
+        # ... and the reset cascade still works.
+        assert _np(h.insert(pos[:CHUNK]).ok).all()
+        assert _np(h.query(pos[:CHUNK]).hits).all()
+
+
+def test_partial_drain_compacts_only_empty_levels():
+    h = amq.make("cuckoo", capacity=CAPACITY, auto_expand=True)
+    pos = _keys(5, N_PAST)
+    assert _stream(h, pos).all()
+    n_levels = len(h.levels)
+    per_level = [lvl.count() for lvl in h.levels]
+    # Drain exactly the keys the cascade put in level 0.
+    lvl0_hits = _np(h.levels[0].query(pos).hits)
+    h.delete(pos, valid=jnp.asarray(lvl0_hits))
+    report = h.compact()
+    assert report.num_levels in (n_levels - 1, n_levels)  # aliasing slack
+    assert h.count() == sum(per_level) - int(lvl0_hits.sum())
+
+
+def test_cascade_of_shards_pins_mesh_across_levels():
+    """Sharded levels must share one mesh/topology (DESIGN.md §8)."""
+    h = amq.make("sharded-cuckoo", capacity=CAPACITY, auto_expand=True)
+    pos = _keys(8, 1024)
+    assert _stream(h, pos).all()
+    assert len(h.levels) > 1
+    assert len({id(lvl.config.mesh) for lvl in h.levels}) == 1
+    assert len({(lvl.config.inner.num_shards, lvl.config.inner.axis_name,
+                 lvl.config.inner.capacity_factor)
+                for lvl in h.levels}) == 1
+    # Levels still grow geometrically through the grow_config hook.
+    slots = [lvl.config.num_slots for lvl in h.levels]
+    assert slots == sorted(slots) and slots[-1] > slots[0]
+    assert _np(h.query(pos).hits).all()
+
+
+def test_cascade_valid_mask():
+    h = amq.make("cuckoo", capacity=CAPACITY, auto_expand=True)
+    pos = _keys(6, N_PAST)
+    valid = np.arange(N_PAST) % 2 == 0
+    report = h.insert(pos, valid=jnp.asarray(valid))
+    ok = _np(report.ok)
+    assert not ok[~valid].any(), "masked key entered the cascade"
+    assert h.count() == int(ok.sum()) <= valid.sum()
+
+
+def test_streaming_deduper_needs_no_apriori_sizing(backend):
+    from repro.data import make_deduper
+
+    dedup = make_deduper(64, backend=backend)
+    tokens = jnp.arange(64 * 32, dtype=jnp.int32).reshape(64, 32)
+    seen_batches = []
+    for step in range(4):  # 256 distinct sequences through a 64-key window
+        batch = {"tokens": tokens + 10_000 * step}
+        out, stats = dedup.dedup(batch)
+        seen_batches.append(batch)
+        assert stats["duplicates"] == 0, f"{backend}: fresh batch masked"
+        assert stats["insert_failures"] == 0, \
+            f"{backend}: streaming deduper hit a capacity wall"
+        assert int(_np(out["mask"]).sum()) == 64
+    out, stats = dedup.dedup(seen_batches[0])  # replay the oldest batch
+    assert stats["duplicates"] == 64
+    assert int(_np(out["mask"]).sum()) == 0
+    assert dedup.stats["duplicates"] == 64
+
+
+def test_prefix_cache_stale_accounting_regression():
+    """Append-only guard filters count stale keys — also under auto-expand.
+
+    Regression pin: the cache must (a) use a cascade by default so the
+    guard never saturates, (b) keep true-deletion semantics on
+    delete-capable backends (stale == 0), and (c) keep counting rot on
+    append-only ones (stale == evictions), exactly as with static handles.
+    """
+    from repro.amq.cascade import CascadeHandle
+    from repro.serve.prefix_cache import PrefixCache
+
+    for backend, expect_stale in (("cuckoo", 0), ("bloom", 2)):
+        pc = PrefixCache(2, backend=backend)
+        assert isinstance(pc.filter, CascadeHandle)
+        for i in range(4):
+            pc.insert([i, i + 1, i + 2], entry=f"e{i}")
+        assert pc.stats["evictions"] == 2
+        assert pc.stats["stale"] == expect_stale
+        assert pc.lookup([3, 4, 5]) == "e3"
+        assert pc.lookup([0, 1, 2]) is None
+    # Opting out returns the classic fixed-size handle.
+    from repro.amq.handle import FilterHandle
+
+    pc = PrefixCache(2, backend="cuckoo", auto_expand=False)
+    assert isinstance(pc.filter, FilterHandle)
+    # TCF cannot expand: the cache silently falls back to a static guard.
+    pc = PrefixCache(2, backend="tcf")
+    assert isinstance(pc.filter, FilterHandle)

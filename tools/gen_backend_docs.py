@@ -1,0 +1,169 @@
+"""Generate docs/backends.md from the live AMQ registry.
+
+The backend reference is *derived*, never hand-written: every row comes
+from the registered adapters (capability flags, growth ladders) and their
+probed configs (analytic-FPR formula docstrings, sizing-kwarg signatures),
+so the docs cannot drift from the code. CI's ``docs-sync`` job re-runs
+this script with ``--check`` and fails the build on any diff.
+
+    PYTHONPATH=src python tools/gen_backend_docs.py          # rewrite
+    PYTHONPATH=src python tools/gen_backend_docs.py --check  # verify only
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import inspect
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro import amq  # noqa: E402
+from repro.amq.protocol import Capabilities  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "docs" / "backends.md"
+
+_PROBE_CAPACITY = 4096
+
+HEADER = """\
+# AMQ backend reference
+
+> **Generated** by `tools/gen_backend_docs.py` from the live registry —
+> do not edit by hand. CI's `docs-sync` job regenerates this file and
+> fails on any diff, so it always matches the code.
+
+Every backend is reached through one front door:
+
+```python
+from repro import amq
+handle = amq.make(name, capacity=..., **sizing_kwargs)
+cascade = amq.make(name, capacity=..., auto_expand=True)   # needs `expand`
+```
+
+Consumers branch on the capability flags below — never on backend names
+(DESIGN.md §7); `auto_expand` wraps a backend as a growing cascade of
+levels (DESIGN.md §8).
+"""
+
+
+def _flag(value: bool) -> str:
+    return "yes" if value else "—"
+
+
+def _first_doc_sentence(obj) -> str:
+    doc = " ".join((inspect.getdoc(obj) or "").split())
+    if not doc:
+        return "(undocumented)"
+    # Sentence boundary = period before a capitalized word ("Eq. (4)" and
+    # formula periods don't qualify), so formulas survive intact.
+    head = re.split(r"(?<=\.)\s+(?=[A-Z])", doc)[0]
+    return head if head.endswith(".") else head + "."
+
+
+def _sizing_signature(adapter, config) -> str:
+    """Sizing kwargs of ``make(name, capacity, ...)``, from live signatures.
+
+    Prefers the adapter's ``make_config`` when it names parameters beyond
+    ``capacity``; otherwise falls back to the probed config class's
+    ``for_capacity`` constructor (the lambda-adapter case).
+    """
+    for fn in (adapter.make_config, getattr(type(config), "for_capacity",
+                                            None)):
+        if fn is None:
+            continue
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.name != "capacity"]
+        named = [p for p in params
+                 if p.kind not in (inspect.Parameter.VAR_KEYWORD,
+                                   inspect.Parameter.VAR_POSITIONAL)]
+        if not named:
+            continue
+        parts = []
+        for p in named:
+            if p.default is inspect.Parameter.empty:
+                parts.append(p.name)
+            else:
+                parts.append(f"{p.name}={p.default!r}")
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+            parts.append("...")
+        return ", ".join(parts)
+    return "(capacity only)"
+
+
+def _growth_ladder(adapter) -> str:
+    if not adapter.growth_sizings:
+        return "—"
+    steps = []
+    for overlay in adapter.growth_sizings:
+        if not overlay:
+            steps.append("(exact — no tightening needed)")
+        else:
+            steps.append(" ".join(f"{k}={v}" for k, v in overlay.items()))
+    return " → ".join(steps)
+
+
+def render() -> str:
+    cap_fields = [f.name for f in dataclasses.fields(Capabilities)]
+    lines = [HEADER]
+
+    lines.append("## Capability matrix\n")
+    short = {"supports_delete": "delete", "supports_bulk": "bulk",
+             "supports_sharding": "sharding", "counting": "counting",
+             "exact": "exact", "serial_insert": "serial insert",
+             "supports_expand": "expand"}
+    lines.append("| backend | " + " | ".join(short[f] for f in cap_fields)
+                 + " |")
+    lines.append("|---" * (len(cap_fields) + 1) + "|")
+    for name in amq.names():
+        caps = amq.get(name).capabilities
+        cells = " | ".join(_flag(getattr(caps, f)) for f in cap_fields)
+        lines.append(f"| `{name}` | {cells} |")
+    lines.append("")
+    lines.append("Flag semantics are documented on "
+                 "`repro.amq.protocol.Capabilities`; handles raise "
+                 "`NotImplementedError` on capability violations instead "
+                 "of degrading silently.\n")
+
+    lines.append("## Per-backend sizing and FPR\n")
+    for name in amq.names():
+        adapter = amq.get(name)
+        config = adapter.make_config(_PROBE_CAPACITY)
+        lines.append(f"### `{name}`\n")
+        lines.append(f"- **config**: `{type(config).__module__}."
+                     f"{type(config).__qualname__}`")
+        lines.append(f"- **expected FPR**: "
+                     f"{_first_doc_sentence(type(config).expected_fpr)}")
+        lines.append(f"- **sizing kwargs**: "
+                     f"`{_sizing_signature(adapter, config)}`")
+        lines.append(f"- **cascade growth ladder**: "
+                     f"{_growth_ladder(adapter)}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify docs/backends.md is current; do not write")
+    args = ap.parse_args()
+    text = render()
+    if args.check:
+        current = OUT.read_text() if OUT.exists() else ""
+        if current != text:
+            sys.stderr.write(
+                f"{OUT} is stale — regenerate with "
+                "`PYTHONPATH=src python tools/gen_backend_docs.py`\n")
+            return 2
+        print(f"{OUT} is in sync with the registry")
+        return 0
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(text)
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
