@@ -19,6 +19,15 @@ from repro.core.hashing import keys_from_numpy
 
 ROWS: List[str] = []
 
+# Machine-readable payloads keyed by suite name; benchmarks attach records
+# with emit_json and run.py writes them out as BENCH_<suite>.json artifacts.
+JSON_RECORDS: dict = {}
+
+
+def emit_json(suite: str, record: dict) -> None:
+    """Merge ``record`` into the suite's BENCH_<suite>.json payload."""
+    JSON_RECORDS.setdefault(suite, {}).update(record)
+
 
 def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time per call in microseconds (blocks on results)."""

@@ -1,0 +1,99 @@
+"""YCSB-style mixed workloads: fused apply_ops vs naive per-op dispatch.
+
+The serving-traffic benchmark behind DESIGN.md §9: an interleaved stream of
+queries, inserts, and deletes (read-mostly and write-heavy mixes modelled on
+the YCSB workload suite) executed two ways against the same filter state —
+
+* **fused**: one ``apply_ops`` dispatch over the whole :class:`OpBatch`
+  (hashing shared across ops, one pass over the table, net-effect
+  mutations);
+* **naive split**: the pre-§9 execution model — partition the batch by op
+  code and dispatch ``query`` / ``delete`` / ``insert`` as three separate
+  jitted calls (three host round-trips, three hashing passes). The op
+  masks are precomputed *outside* the timed region, so the split pays only
+  its genuine dispatch/hashing tax.
+
+Emits a `speedup` column (naive_us / fused_us) per mix plus a
+machine-readable record for BENCH_mixed.json (op mix, Mops/s, load factor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import amq
+from repro.amq.protocol import OP_DELETE, OP_INSERT, OP_QUERY
+
+from .common import bench, emit, emit_json, rand_keys, throughput_m_per_s
+
+# (query, insert, delete) fractions.
+MIXES = {
+    "ycsb_50_40_10": (0.50, 0.40, 0.10),
+    "read_heavy_95_5": (0.95, 0.05, 0.00),
+}
+LOAD_PREFILL = 0.5
+
+
+def _stream(n: int, mix, present: np.ndarray, seed: int):
+    """Build an op stream: queries/deletes hit stored keys, inserts fresh."""
+    rng = np.random.default_rng(seed)
+    ops = rng.choice(np.asarray([OP_QUERY, OP_INSERT, OP_DELETE], np.int32),
+                     size=n, p=np.asarray(mix) / np.sum(mix))
+    keys = present[rng.integers(0, present.shape[0], size=n)]
+    fresh = np.asarray(rand_keys(n, seed=seed + 1, lo=2**63, hi=2**64))
+    keys = np.where((ops == OP_INSERT)[:, None], fresh, keys)
+    return jnp.asarray(keys, jnp.uint32), jnp.asarray(ops, jnp.int32)
+
+
+def run(fast: bool = False):
+    slots = 1 << 14 if fast else 1 << 16
+    batch = 1 << 12 if fast else 1 << 13
+    capacity = int(slots * 0.95)
+    handle = amq.make("cuckoo", capacity=capacity)
+    prefill = rand_keys(int(capacity * LOAD_PREFILL), seed=1)
+    handle.insert(prefill)
+    cfg, state = handle.config, handle.state
+    ad = amq.get("cuckoo")
+
+    fused = jax.jit(functools.partial(ad.apply_ops, cfg))
+    jq = jax.jit(functools.partial(ad.query, cfg))
+    ji = jax.jit(functools.partial(ad.insert, cfg))
+    jd = jax.jit(functools.partial(ad.delete, cfg))
+
+    for mix_name, mix in MIXES.items():
+        keys, ops = _stream(batch, mix, np.asarray(prefill), seed=7)
+        # Precomputed op masks: the naive split's only fair head start.
+        qm = jnp.asarray(np.asarray(ops) == OP_QUERY)
+        im = jnp.asarray(np.asarray(ops) == OP_INSERT)
+        dm = jnp.asarray(np.asarray(ops) == OP_DELETE)
+
+        def run_fused(s=state, k=keys, o=ops):
+            return fused(s, k, o)
+
+        def run_naive(s=state, k=keys, q=qm, i=im, d=dm):
+            _, qr = jq(s, k, valid=q)             # dispatch 1
+            s, dr = jd(s, k, valid=d)             # dispatch 2
+            s, ir = ji(s, k, valid=i)             # dispatch 3
+            return s, qr, dr, ir
+
+        us_f = bench(run_fused)
+        us_n = bench(run_naive)
+        speedup = us_n / us_f if us_f else float("inf")
+        emit(f"mixed_{mix_name}_fused", us_f, throughput_m_per_s(batch, us_f))
+        emit(f"mixed_{mix_name}_naive_split", us_n,
+             throughput_m_per_s(batch, us_n))
+        emit(f"mixed_{mix_name}_speedup", 0.0, f"{speedup:.2f}x_fused_vs_split")
+        emit_json("mixed", {mix_name: {
+            "op_mix": {"query": mix[0], "insert": mix[1], "delete": mix[2]},
+            "batch": batch,
+            "load_factor": float(handle.load_factor),
+            "fused_us_per_call": us_f,
+            "naive_split_us_per_call": us_n,
+            "fused_mops_per_s": batch / us_f,
+            "naive_split_mops_per_s": batch / us_n,
+            "speedup_fused_vs_split": speedup,
+        }})

@@ -17,12 +17,17 @@ adapters — which import the whole filter zoo — load lazily on first use, so
 """
 
 from .protocol import (  # noqa: F401
+    OP_DELETE,
+    OP_INSERT,
+    OP_QUERY,
     AMQConfig,
     Capabilities,
     CascadeReport,
     DeleteReport,
     InsertReport,
     LevelStats,
+    MixedReport,
+    OpBatch,
     QueryResult,
     fpr_share,
     fpr_tolerance,
@@ -30,11 +35,12 @@ from .protocol import (  # noqa: F401
 )
 
 _LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
-         "CascadeHandle")
+         "CascadeHandle", "FilterService", "Ticket")
 
 __all__ = list(_LAZY) + [
     "AMQConfig", "Capabilities", "CascadeReport", "DeleteReport",
-    "InsertReport", "LevelStats", "QueryResult", "fpr_share",
+    "InsertReport", "LevelStats", "MixedReport", "OpBatch", "OP_QUERY",
+    "OP_INSERT", "OP_DELETE", "QueryResult", "fpr_share",
     "fpr_tolerance", "load_factor",
 ]
 
@@ -53,6 +59,10 @@ def __getattr__(name):
         from .cascade import CascadeHandle
 
         return CascadeHandle
+    if name in ("FilterService", "Ticket"):
+        from . import service
+
+        return getattr(service, name)
     if name == "AMQAdapter":
         from .adapters import AMQAdapter
 

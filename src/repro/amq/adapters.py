@@ -29,15 +29,21 @@ import numpy as np
 from ..core import cuckoo_filter as CF
 from ..core import sharded_filter as SF
 from ..core.compat import shard_map as _shard_map
+from ..core.hashing import keys_to_numpy
 from ..filters import bcht as HT
 from ..filters import blocked_bloom as BB
 from ..filters import cpu_reference as PYREF
 from ..filters import quotient as QF
 from ..filters import two_choice as TC
 from .protocol import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_QUERY,
     Capabilities,
     DeleteReport,
     InsertReport,
+    MixedReport,
+    OpBatch,
     QueryResult,
     all_routed,
     ensure_valid,
@@ -69,6 +75,12 @@ class AMQAdapter:
     re-running ``make_config`` from scratch. Backends whose configs carry
     placement state use it to pin that state across levels (the sharded
     backend keeps one mesh for the whole cascade).
+
+    ``apply_ops`` is the native fused mixed-batch path (DESIGN.md §9):
+    ``(config, state, keys, ops, *, valid) -> (state', MixedReport)``
+    executing an interleaved query/insert/delete stream in one program.
+    Required when ``capabilities.supports_mixed`` is True; backends
+    without it are served by :func:`segmented_apply_ops`.
     """
 
     name: str
@@ -79,6 +91,7 @@ class AMQAdapter:
     query: Callable[..., Any]
     delete: Optional[Callable[..., Any]] = None
     insert_bulk: Optional[Callable[..., Any]] = None
+    apply_ops: Optional[Callable[..., Any]] = None
     jit: bool = True
     growth_sizings: Optional[tuple] = None
     grow_config: Optional[Callable[..., Any]] = None
@@ -86,6 +99,69 @@ class AMQAdapter:
 
 def _zero_stats(n):
     return jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-batch execution: the generic segmented fallback (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+def segmented_apply_ops(target, batch: OpBatch) -> MixedReport:
+    """Execute an :class:`OpBatch` on any handle by segmenting it.
+
+    The universal fallback behind ``FilterHandle.apply_ops`` for backends
+    without a native fused path: the batch is split into **maximal
+    same-op runs** (host-side — run boundaries are data-dependent) and
+    each run replays the existing per-op entry point as one full-width,
+    ``valid``-masked call. Shapes never vary, so each op compiles once;
+    the cost is one dispatch per run — which is exactly the per-op
+    round-trip tax the fused paths erase (benchmarks/mixed_workload.py).
+
+    Correctness is inherited: runs execute in batch order, duplicates
+    within a same-op run already serialise inside the batch ops, so
+    same-key operations resolve in batch order exactly like the native
+    paths. ``target`` is anything with the handle op surface
+    (:class:`~repro.amq.handle.FilterHandle`, a cascade, ...).
+    """
+    ops = np.asarray(batch.ops)
+    v = np.asarray(batch.valid, bool)
+    n = ops.shape[0]
+    ok = np.zeros((n,), bool)
+    routed = np.ones((n,), bool)
+    evictions = np.zeros((n,), np.int32)
+    rounds = 0
+
+    live = np.flatnonzero(v)
+    if live.size == 0:  # all-padding batch (e.g. a forced flush): no-op
+        return MixedReport(ok, routed, evictions, np.int32(rounds))
+    if ((ops[live] == OP_DELETE).any()
+            and not target.capabilities.supports_delete):
+        raise NotImplementedError(
+            f"{target.name}: mixed batch contains deletes but the backend "
+            "is append-only (capabilities.supports_delete is False)")
+
+    o = ops[live]
+    bounds = np.flatnonzero(np.diff(o) != 0) + 1
+    starts = np.concatenate([[0], bounds])
+    ends = np.concatenate([bounds, [o.size]])
+    for s, e in zip(starts, ends):
+        mask = np.zeros((n,), bool)
+        mask[live[s:e]] = True
+        vmask = jnp.asarray(mask)
+        code = o[s]
+        if code == OP_QUERY:
+            r = target.query(batch.keys, valid=vmask)
+            r_ok, r_routed = r.hits, r.routed
+        elif code == OP_INSERT:
+            r = target.insert(batch.keys, valid=vmask)
+            r_ok, r_routed = r.ok, r.routed
+            evictions = np.where(mask, np.asarray(r.evictions), evictions)
+            rounds += int(np.asarray(r.rounds))
+        else:
+            r = target.delete(batch.keys, valid=vmask)
+            r_ok, r_routed = r.ok, r.routed
+        ok = np.where(mask, np.asarray(r_ok, bool), ok)
+        routed = np.where(mask, np.asarray(r_routed, bool), routed)
+    return MixedReport(ok, routed, evictions, np.int32(rounds))
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +205,12 @@ def _cuckoo_delete(config, state, keys, *, valid=None):
     return state, DeleteReport(ok, all_routed(keys))
 
 
+def _cuckoo_apply_ops(config, state, keys, ops, *, valid=None):
+    state, ok, stats = CF.apply_ops(config, state, keys, ops, valid)
+    return state, MixedReport(ok, all_routed(keys), stats.evictions,
+                              stats.rounds)
+
+
 def _cuckoo_make_config(capacity, **kw):
     # Registry default: the vectorized fmix32 pair-hash (the paper's
     # xxhash64 stays available via hash_kind="xxhash64").
@@ -139,13 +221,15 @@ def _cuckoo_make_config(capacity, **kw):
 CUCKOO = AMQAdapter(
     name="cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
-                              counting=True, supports_expand=True),
+                              counting=True, supports_expand=True,
+                              supports_mixed=True),
     make_config=_cuckoo_make_config,
     init=lambda cfg: cfg.init(),
     insert=_cuckoo_insert,
     insert_bulk=functools.partial(_cuckoo_insert, _fn=CF.insert_bulk),
     query=_cuckoo_query,
     delete=_cuckoo_delete,
+    apply_ops=_cuckoo_apply_ops,
     growth_sizings=_CUCKOO_SIZINGS,
 )
 
@@ -350,13 +434,14 @@ def _sharded_fn(config: ShardedAMQConfig, op: str, local_batch: int,
     ax = config.inner.axis_name
     fn = SF._make_sharded_op(config.inner, op, local_batch,
                              dedup_within_batch=dedup)
+    n_in = 5 if op == "apply_ops" else 4
     mapped = _shard_map(fn, mesh=config.mesh,
-                        in_specs=(P(ax), P(ax), P(ax), P(ax)),
+                        in_specs=(P(ax),) * n_in,
                         out_specs=(P(ax), P(ax), P(ax), P(ax)))
     return jax.jit(mapped)
 
 
-def _sharded_run(config, state, keys, op, valid, dedup=False):
+def _sharded_run(config, state, keys, op, valid, dedup=False, ops=None):
     valid = ensure_valid(keys, valid)
     # shard_map splits the global batch across the mesh axis; bin capacity
     # must be sized from the *per-device* slice, not the global batch.
@@ -367,7 +452,10 @@ def _sharded_run(config, state, keys, op, valid, dedup=False):
             f"sharded-cuckoo: batch size {n} not divisible by "
             f"num_shards={num_shards}")
     fn = _sharded_fn(config, op, n // num_shards, dedup)
-    table, count, result, routed = fn(state.table, state.count, keys, valid)
+    args = (state.table, state.count, keys, valid)
+    if op == "apply_ops":
+        args += (jnp.asarray(ops, jnp.int32),)
+    table, count, result, routed = fn(*args)
     return SF.ShardedCuckooState(table, count), result, routed
 
 
@@ -389,6 +477,13 @@ def _sharded_delete(config, state, keys, *, valid=None):
     return state, DeleteReport(ok, routed)
 
 
+def _sharded_apply_ops(config, state, keys, ops, *, valid=None):
+    state, ok, routed = _sharded_run(config, state, keys, "apply_ops",
+                                     valid, ops=ops)
+    n = keys.shape[0]
+    return state, MixedReport(ok, routed, *_zero_stats(n))
+
+
 def _sharded_grow_config(prev: ShardedAMQConfig, factor: float,
                          **overlay) -> ShardedAMQConfig:
     """Next cascade level: grow the per-shard filter, keep the *same* mesh.
@@ -406,13 +501,14 @@ SHARDED_CUCKOO = AMQAdapter(
     name="sharded-cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
                               supports_sharding=True, counting=True,
-                              supports_expand=True),
+                              supports_expand=True, supports_mixed=True),
     make_config=_sharded_make_config,
     init=lambda cfg: cfg.init(),
     insert=_sharded_insert,
     insert_bulk=functools.partial(_sharded_insert, _op="insert_bulk"),
     query=_sharded_query,
     delete=_sharded_delete,
+    apply_ops=_sharded_apply_ops,
     jit=False,  # ops are shard_map programs jitted per batch shape above
     growth_sizings=_CUCKOO_SIZINGS,  # fp_bits flows to the per-shard config
     grow_config=_sharded_grow_config,
@@ -430,7 +526,7 @@ def _py_mask(keys, valid):
 
 
 def _py_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
-    raw = PYREF.keys_to_u64(keys)
+    raw = keys_to_numpy(keys)
     v = _py_mask(keys, valid)
     ok = np.zeros((raw.shape[0],), bool)
     seen = set()
@@ -448,28 +544,57 @@ def _py_insert(config, state, keys, *, valid=None, dedup_within_batch=False):
 
 
 def _py_query(config, state, keys, *, valid=None):
-    hits = state.query_batch(PYREF.keys_to_u64(keys)) & _py_mask(keys, valid)
+    hits = state.query_batch(keys_to_numpy(keys)) & _py_mask(keys, valid)
     return state, QueryResult(hits, np.ones((hits.shape[0],), bool))
 
 
 def _py_delete(config, state, keys, *, valid=None):
-    raw = PYREF.keys_to_u64(keys)
+    raw = keys_to_numpy(keys)
     v = _py_mask(keys, valid)
     ok = np.array([v[i] and state.delete(int(k))
                    for i, k in enumerate(raw)], bool)
     return state, DeleteReport(ok, np.ones((raw.shape[0],), bool))
 
 
+def _py_apply_ops(config, state, keys, ops, *, valid=None):
+    """The mixed-batch *definition*: a literal sequential replay.
+
+    One op at a time, in batch order — this is the oracle the fused paths
+    are differentially tested against (tests/test_mixed_ops.py).
+    """
+    raw = keys_to_numpy(keys)
+    ops = np.asarray(ops)
+    v = _py_mask(keys, valid)
+    n = raw.shape[0]
+    ok = np.zeros((n,), bool)
+    for i in range(n):
+        if not v[i]:
+            continue
+        k = int(raw[i])
+        if ops[i] == OP_QUERY:
+            ok[i] = state.query(k)
+        elif ops[i] == OP_INSERT:
+            ok[i] = state.insert(k)
+        elif ops[i] == OP_DELETE:
+            ok[i] = state.delete(k)
+        else:
+            raise ValueError(f"unknown op code {ops[i]} at slot {i}")
+    return state, MixedReport(ok, np.ones((n,), bool),
+                              np.zeros((n,), np.int32), np.zeros((), np.int32))
+
+
 CPU_CUCKOO = AMQAdapter(
     name="cpu-cuckoo",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              serial_insert=True, supports_expand=True),
+                              serial_insert=True, supports_expand=True,
+                              supports_mixed=True),
     make_config=lambda capacity, **kw: PYREF.PyCuckooConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_py_insert,
     query=_py_query,
     delete=_py_delete,
+    apply_ops=_py_apply_ops,
     jit=False,
     growth_sizings=_CUCKOO_SIZINGS,
 )

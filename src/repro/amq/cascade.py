@@ -50,13 +50,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .adapters import AMQAdapter
+from .adapters import AMQAdapter, segmented_apply_ops
 from .handle import FilterHandle
 from .protocol import (
+    OP_INSERT,
     CascadeReport,
     DeleteReport,
     InsertReport,
     LevelStats,
+    MixedReport,
+    OpBatch,
     QueryResult,
     fpr_share,
 )
@@ -391,6 +394,50 @@ class CascadeHandle:
             ok |= done
             pending &= ~done
         return DeleteReport(ok, np.ones((n,), bool))
+
+    def apply_ops(self, batch: OpBatch) -> MixedReport:
+        """Execute a mixed op stream against the cascade (DESIGN.md §9).
+
+        Fast path: while the cascade is a *single* level with enough
+        watermark headroom for every insert slot in the batch (the common
+        steady state), the whole batch runs as that level's one fused
+        program; inserts the level still rejected are retried through the
+        growing :meth:`insert` path. Otherwise the batch falls back to
+        maximal same-op runs replayed against the cascade ops, which
+        preserve per-level routing (queries fan all levels, deletes route
+        newest-first).
+
+        Example::
+
+            >>> report = h.apply_ops(batch)   # never refuses inserts
+        """
+        if len(self.levels) == 1 and self.adapter.apply_ops is not None:
+            # Host sync on the op codes only on this branch — the
+            # multi-level fallback never needs the insert count.
+            n_ins = int(np.asarray(batch.valid
+                                   & (batch.ops == OP_INSERT)).sum())
+            level = self.levels[0]
+            headroom = (int(self.watermark * level.config.num_slots)
+                        - level.count())
+            if n_ins <= headroom:
+                report = level.apply_ops(batch)
+                failed = (np.asarray(batch.valid)
+                          & np.asarray(batch.ops == OP_INSERT)
+                          & ~(np.asarray(report.ok)
+                              & np.asarray(report.routed)))
+                if not failed.any():
+                    return report
+                retry = self.insert(batch.keys, valid=jnp.asarray(failed))
+                ok = np.asarray(report.ok) | (failed & np.asarray(retry.ok))
+                # Only the retried insert slots become routed (the growing
+                # insert path handles routing internally); unrouted query/
+                # delete slots keep their level report's routed=False so
+                # callers still see them as unanswered, never as misses.
+                routed = np.asarray(report.routed) | failed
+                return MixedReport(ok, routed,
+                                   np.asarray(report.evictions),
+                                   np.asarray(report.rounds))
+        return segmented_apply_ops(self, batch)
 
     def compact(self) -> CascadeReport:
         """Reclaim drained levels; returns the post-compaction report.

@@ -16,11 +16,13 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from .adapters import AMQAdapter
+from .adapters import AMQAdapter, segmented_apply_ops
 from .protocol import (
     Capabilities,
     DeleteReport,
     InsertReport,
+    MixedReport,
+    OpBatch,
     QueryResult,
     load_factor as _load_factor,
 )
@@ -153,6 +155,29 @@ class FilterHandle:
                 f"{self.name}: append-only structure "
                 "(capabilities.supports_delete is False)")
         self.state, report = self._fn("delete")(self.state, keys, valid=valid)
+        return report
+
+    def apply_ops(self, batch: OpBatch) -> MixedReport:
+        """Execute an interleaved query/insert/delete stream (one OpBatch).
+
+        Backends with ``capabilities.supports_mixed`` run the batch as one
+        fused program (one dispatch, one pass over the table); every other
+        backend is served by :func:`repro.amq.adapters.segmented_apply_ops`
+        (one dispatch per maximal same-op run). Same-key operations resolve
+        in batch order either way (DESIGN.md §9).
+
+        Example::
+
+            >>> from repro.amq import OpBatch, OP_INSERT, OP_QUERY
+            >>> batch = OpBatch.make(keys, [OP_INSERT, OP_QUERY])
+            >>> bool(handle.apply_ops(batch).ok.all())   # doctest: +SKIP
+            True
+        """
+        if self.adapter.apply_ops is None:
+            return segmented_apply_ops(self, batch)
+        fn = self._fn("apply_ops")
+        self.state, report = fn(self.state, batch.keys, batch.ops,
+                                valid=batch.valid)
         return report
 
     def count(self) -> int:

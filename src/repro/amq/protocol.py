@@ -51,6 +51,12 @@ class Capabilities:
       cascade (:mod:`repro.amq.cascade`): its sizing knobs can tighten the
       per-level FPR geometrically (DESIGN.md §8). False for structures whose
       packing caps the fingerprint width (the TCF's uint32 stash words).
+    * ``supports_mixed`` — has a *native fused* mixed-operation path
+      (``apply_ops`` over an :class:`OpBatch`): one compiled program executes
+      an interleaved query/insert/delete stream (DESIGN.md §9). Backends
+      without it still accept ``OpBatch``\\ es through the handle — the
+      generic fallback segments the batch into maximal same-op runs and
+      replays the per-op entry points, at one dispatch per run.
     """
 
     supports_delete: bool = True
@@ -60,6 +66,69 @@ class Capabilities:
     exact: bool = False
     serial_insert: bool = False
     supports_expand: bool = False
+    supports_mixed: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Mixed-operation batches (DESIGN.md §9): one unit of execution carrying an
+# interleaved stream of queries, inserts, and deletes.
+# ---------------------------------------------------------------------------
+
+# Per-key op codes. int32 so op arrays live happily inside jitted programs.
+OP_QUERY = 0
+OP_INSERT = 1
+OP_DELETE = 2
+
+OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete"}
+
+
+class OpBatch(NamedTuple):
+    """A mixed stream of filter operations — the unit of fused execution.
+
+    * ``keys``  — uint32[n, 2] (lo, hi) key pairs, like every other op.
+    * ``ops``   — int32[n] op codes (:data:`OP_QUERY` / :data:`OP_INSERT` /
+      :data:`OP_DELETE`).
+    * ``valid`` — bool[n]; False marks padding slots (micro-batching
+      front-ends pad to a fixed batch size so one compiled program serves
+      every traffic shape).
+
+    Semantics are positional: operations on the *same 64-bit key* resolve
+    in batch order (a query at index i observes exactly the inserts and
+    deletes of that key at indices j < i — DESIGN.md §9). A plain pytree,
+    safe to pass through jit.
+    """
+
+    keys: jnp.ndarray
+    ops: jnp.ndarray
+    valid: jnp.ndarray
+
+    @staticmethod
+    def make(keys, ops, valid=None) -> "OpBatch":
+        """Normalize (keys, ops[, valid]) into a well-typed batch."""
+        keys = jnp.asarray(keys, jnp.uint32)
+        ops = jnp.asarray(ops, jnp.int32)
+        if ops.shape != (keys.shape[0],):
+            raise ValueError(
+                f"ops shape {ops.shape} does not match {keys.shape[0]} keys")
+        return OpBatch(keys, ops, ensure_valid(keys, valid))
+
+    @property
+    def size(self) -> int:
+        """Number of slots in the batch (including padding)."""
+        return self.keys.shape[0]
+
+    def pad_to(self, n: int) -> "OpBatch":
+        """Pad with invalid query slots up to ``n`` (static-shape batching)."""
+        pad = n - self.size
+        if pad < 0:
+            raise ValueError(f"batch of {self.size} cannot pad to {n}")
+        if pad == 0:
+            return self
+        return OpBatch(
+            jnp.concatenate([self.keys, jnp.zeros((pad, 2), jnp.uint32)]),
+            jnp.concatenate([self.ops,
+                             jnp.full((pad,), OP_QUERY, jnp.int32)]),
+            jnp.concatenate([self.valid, jnp.zeros((pad,), bool)]))
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +167,47 @@ class DeleteReport(NamedTuple):
 
     ok: jnp.ndarray
     routed: jnp.ndarray
+
+
+class MixedReport(NamedTuple):
+    """Result of executing an :class:`OpBatch` (one slot per operation).
+
+    * ``ok`` — bool[n], interpreted by that slot's op code: query → hit,
+      insert → landed, delete → a stored copy was removed. False on padding
+      (invalid) slots.
+    * ``routed`` — bool[n]; as in the per-op reports, ``ok`` is only
+      meaningful where ``routed`` (sharded backends' bin overflow).
+    * ``evictions`` — int32[n] eviction-chain lengths (insert slots only).
+    * ``rounds`` — int32[] total rounds across the fused program.
+
+    The per-op views below slice this into the standard report types with
+    op-masked ``routed`` — a slot outside the view's op reports
+    ``routed=False`` there, so consumers can reuse per-op code unchanged.
+    """
+
+    ok: jnp.ndarray
+    routed: jnp.ndarray
+    evictions: jnp.ndarray
+    rounds: jnp.ndarray
+
+    def _view(self, batch: "OpBatch", code: int):
+        mask = batch.valid & (batch.ops == code)
+        return self.ok & mask, self.routed & mask
+
+    def insert_report(self, batch: "OpBatch") -> InsertReport:
+        """Sub-report for the batch's insert slots (routed-masked)."""
+        ok, routed = self._view(batch, OP_INSERT)
+        return InsertReport(ok, self.evictions, self.rounds, routed)
+
+    def query_result(self, batch: "OpBatch") -> QueryResult:
+        """Sub-report for the batch's query slots (routed-masked)."""
+        hits, routed = self._view(batch, OP_QUERY)
+        return QueryResult(hits, routed)
+
+    def delete_report(self, batch: "OpBatch") -> DeleteReport:
+        """Sub-report for the batch's delete slots (routed-masked)."""
+        ok, routed = self._view(batch, OP_DELETE)
+        return DeleteReport(ok, routed)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,10 @@ def _validate(adapter: AMQAdapter) -> None:
         raise ValueError(
             f"{adapter.name!r}: supports_expand=True but no growth_sizings "
             "hook (the cascade cannot size levels to their FPR shares)")
+    if caps.supports_mixed and not callable(adapter.apply_ops):
+        raise ValueError(
+            f"{adapter.name!r}: supports_mixed=True but no apply_ops op "
+            "(the fused mixed-batch path it advertises)")
 
 
 def register(adapter: AMQAdapter, *, overwrite: bool = False) -> None:

@@ -1,0 +1,254 @@
+"""FilterService: a micro-batching front-end over one AMQ filter.
+
+Serving traffic reaches a filter as many small, interleaved op streams —
+one per logical client — while the accelerator wants few, large, fixed-shape
+dispatches. The service bridges the two (DESIGN.md §9):
+
+* **Coalescing**: ``query`` / ``insert`` / ``delete`` / ``submit`` calls
+  append ops (any count, any client) onto one pending stream in arrival
+  order. Nothing is dispatched until a full micro-batch accumulates or a
+  result is demanded.
+* **Fixed-shape batches**: every dispatch is an :class:`OpBatch` of exactly
+  ``batch_size`` slots (short tails are padded with invalid slots), so one
+  compiled ``apply_ops`` program serves every traffic pattern — dynamic
+  client batch sizes never trigger recompilation.
+* **Fused execution**: each micro-batch runs as a single mixed-op pass on
+  the wrapped handle — queries, inserts, and deletes of *different* clients
+  share one dispatch; in-batch order equals global arrival order, so the
+  per-key semantics of DESIGN.md §9 apply across clients.
+* **Double buffering**: dispatch is asynchronous — the service keeps each
+  batch's :class:`~repro.amq.protocol.MixedReport` as unconcretised device
+  arrays and immediately continues packing the next batch while the device
+  churns; the handle donates its state buffers to each dispatch, so the
+  table is updated in place. Results are only pulled to the host when a
+  ticket's :meth:`Ticket.result` is called.
+* **Scatter**: every submission returns a :class:`Ticket` that knows which
+  slots of which micro-batches carry its ops; ``result()`` gathers exactly
+  those slots back into per-client order, however the ops were interleaved.
+
+Example::
+
+    from repro import amq
+
+    svc = amq.FilterService(amq.make("cuckoo", capacity=1 << 20))
+    t1 = svc.insert(keys_a)             # client A
+    t2 = svc.query(keys_b)              # client B — may share A's batch
+    hits = t2.result()                  # flushes pending ops, scatters B's
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .protocol import OP_DELETE, OP_INSERT, OP_QUERY, MixedReport, OpBatch
+
+
+class _Dispatch:
+    """One executed micro-batch: its (lazy) report and concretised cache."""
+
+    __slots__ = ("report", "_ok", "_routed")
+
+    def __init__(self, report: MixedReport):
+        self.report = report
+        self._ok: Optional[np.ndarray] = None
+        self._routed: Optional[np.ndarray] = None
+
+    def ok(self) -> np.ndarray:
+        if self._ok is None:  # first touch blocks on the device result
+            self._ok = np.asarray(self.report.ok, bool)
+        return self._ok
+
+    def routed(self) -> np.ndarray:
+        if self._routed is None:
+            self._routed = np.asarray(self.report.routed, bool)
+        return self._routed
+
+
+class Ticket:
+    """A client's claim on its slice of one or more micro-batches.
+
+    ``result()`` returns ``ok`` per submitted op, in submission order
+    (query → hit, insert → landed, delete → removed). ``routed()`` returns
+    the matching routed mask (sharded backends). Both force a flush of any
+    still-pending part of the submission.
+    """
+
+    def __init__(self, service: "FilterService", n: int):
+        self._service = service
+        self._n = n
+        # (dispatch, slots-in-batch, positions-in-submission); appended by
+        # the service when a batch carrying part of this submission
+        # launches. Tickets are the only owners of _Dispatch objects, so a
+        # batch's reports are reclaimed as soon as every ticket that drew
+        # from it is garbage — the service itself retains nothing.
+        self._parts: List[Tuple[_Dispatch, np.ndarray, np.ndarray]] = []
+        self._filled = 0
+
+    def _gather(self, field: str) -> np.ndarray:
+        self._service._flush_for(self)
+        out = np.zeros((self._n,), bool)
+        for dispatch, slots, positions in self._parts:
+            out[positions] = getattr(dispatch, field)()[slots]
+        return out
+
+    @property
+    def dispatched(self) -> bool:
+        """True once every op of this submission has left the pending
+        stream — ``result()`` will then not force a flush."""
+        return self._filled >= self._n
+
+    def result(self) -> np.ndarray:
+        """Per-op outcomes, in submission order (bool[n])."""
+        return self._gather("ok")
+
+    def routed(self) -> np.ndarray:
+        """Per-op routed mask, in submission order (bool[n])."""
+        return self._gather("routed")
+
+
+class FilterService:
+    """Coalesce many clients' op streams into fused fixed-size OpBatches.
+
+    ``handle`` is any AMQ handle (static or cascade). ``batch_size`` is the
+    micro-batch width — the one compiled shape; keep it large enough to
+    amortise dispatch, small enough that padding on a forced flush stays
+    cheap (the :attr:`stats_fill` property reports the realised
+    utilisation; ``stats`` counts dispatches/ops/padded slots).
+    """
+
+    def __init__(self, handle, *, batch_size: int = 1024):
+        if batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
+        self.handle = handle
+        self.batch_size = int(batch_size)
+        self._keys: List[np.ndarray] = []     # pending key rows [m, 2]
+        self._ops: List[np.ndarray] = []      # pending op codes [m]
+        # Pending claims as (ticket, start-pos-in-submission, count) ranges
+        # — submissions are contiguous in arrival order, so bookkeeping is
+        # O(#submissions), never O(#ops).
+        self._claims: List[Tuple[Ticket, int, int]] = []
+        self._pending = 0
+        self.stats = {"dispatches": 0, "ops": 0, "padded": 0}
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def pending_ops(self) -> int:
+        """Ops accepted but not yet dispatched."""
+        return self._pending
+
+    @property
+    def stats_fill(self) -> float:
+        """Realised batch utilisation: live slots / dispatched slots."""
+        total = self.stats["ops"] - self._pending + self.stats["padded"]
+        live = self.stats["ops"] - self._pending
+        return live / total if total else 1.0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, keys, ops) -> Ticket:
+        """Append a client's op stream; returns its :class:`Ticket`.
+
+        ``keys``: uint32[m, 2]; ``ops``: int32[m] op codes. The ops join
+        the global stream in call order — coalescing never reorders.
+        """
+        keys = np.asarray(keys, np.uint32)
+        ops = np.asarray(ops, np.int32).reshape(-1)
+        if keys.ndim != 2 or keys.shape[1] != 2:
+            raise ValueError(f"keys must be [n, 2] uint32, got {keys.shape}")
+        if keys.shape[0] != ops.shape[0]:
+            raise ValueError(
+                f"{keys.shape[0]} keys vs {ops.shape[0]} op codes")
+        if ((ops < OP_QUERY) | (ops > OP_DELETE)).any():
+            raise ValueError("unknown op code in submission")
+        if ((ops == OP_DELETE).any()
+                and not self.handle.capabilities.supports_delete):
+            raise NotImplementedError(
+                f"{self.handle.name}: append-only backend cannot serve "
+                "deletes (capabilities.supports_delete is False)")
+        ticket = Ticket(self, keys.shape[0])
+        if keys.shape[0]:
+            self._keys.append(keys)
+            self._ops.append(ops)
+            self._claims.append((ticket, 0, keys.shape[0]))
+            self._pending += keys.shape[0]
+            self.stats["ops"] += keys.shape[0]
+        while self._pending >= self.batch_size:
+            self._dispatch(self.batch_size)
+        return ticket
+
+    def query(self, keys) -> Ticket:
+        """Enqueue membership queries for ``keys``."""
+        return self.submit(keys, np.full((np.asarray(keys).shape[0],),
+                                         OP_QUERY, np.int32))
+
+    def insert(self, keys) -> Ticket:
+        """Enqueue inserts for ``keys``."""
+        return self.submit(keys, np.full((np.asarray(keys).shape[0],),
+                                         OP_INSERT, np.int32))
+
+    def delete(self, keys) -> Ticket:
+        """Enqueue deletes for ``keys`` (capability-gated at submit)."""
+        return self.submit(keys, np.full((np.asarray(keys).shape[0],),
+                                         OP_DELETE, np.int32))
+
+    # -- execution -----------------------------------------------------------
+
+    def flush(self) -> None:
+        """Dispatch every pending op now (the tail batch is padded)."""
+        while self._pending:
+            self._dispatch(min(self._pending, self.batch_size))
+
+    def _flush_for(self, ticket: Ticket) -> None:
+        if ticket._filled < ticket._n:
+            self.flush()
+
+    def _take(self, m: int):
+        """Pop the first ``m`` pending ops off the stream.
+
+        Returns the packed keys/ops plus the claim ranges they came from,
+        splitting the tail range when a submission straddles the batch
+        boundary.
+        """
+        keys_out, ops_out, claims = [], [], []
+        need = m
+        while need:
+            k, o = self._keys[0], self._ops[0]
+            ticket, start, cnt = self._claims[0]
+            take = min(cnt, need)
+            keys_out.append(k[:take])
+            ops_out.append(o[:take])
+            claims.append((ticket, start, take))
+            if take == cnt:
+                self._keys.pop(0)
+                self._ops.pop(0)
+                self._claims.pop(0)
+            else:
+                self._keys[0] = k[take:]
+                self._ops[0] = o[take:]
+                self._claims[0] = (ticket, start + take, cnt - take)
+            need -= take
+        self._pending -= m
+        return np.concatenate(keys_out), np.concatenate(ops_out), claims
+
+    def _dispatch(self, m: int) -> None:
+        keys, ops, claims = self._take(m)
+        batch = OpBatch.make(jnp.asarray(keys), jnp.asarray(ops)).pad_to(
+            self.batch_size)
+        report = self.handle.apply_ops(batch)   # async: not concretised here
+        dispatch = _Dispatch(report)
+        self.stats["dispatches"] += 1
+        self.stats["padded"] += self.batch_size - m
+
+        # Scatter the contiguous claim ranges back onto tickets (the
+        # tickets alone keep the dispatch alive — see Ticket._parts).
+        slot = 0
+        for ticket, start, cnt in claims:
+            ticket._parts.append((dispatch,
+                                  np.arange(slot, slot + cnt),
+                                  np.arange(start, start + cnt)))
+            ticket._filled += cnt
+            slot += cnt

@@ -19,6 +19,8 @@ from ..amq.protocol import (  # noqa: F401
     DeleteReport,
     InsertReport,
     LevelStats,
+    MixedReport,
+    OpBatch,
     QueryResult,
 )
 from .cuckoo_filter import (  # noqa: F401
@@ -26,12 +28,13 @@ from .cuckoo_filter import (  # noqa: F401
     CuckooFilter,
     CuckooState,
     InsertStats,
+    apply_ops,
     delete,
     insert,
     insert_bulk,
     prepare_keys,
     query,
 )
-from .hashing import hash_key, keys_from_numpy  # noqa: F401
+from .hashing import hash_key, keys_from_numpy, keys_to_numpy  # noqa: F401
 from .layout import BucketLayout  # noqa: F401
 from .policies import OffsetPolicy, XorPolicy, make_policy  # noqa: F401

@@ -627,6 +627,187 @@ def delete(
 
 
 # ---------------------------------------------------------------------------
+# Fused mixed-operation execution (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+# Op codes shared with the AMQ protocol (repro.amq.protocol is
+# dependency-light by contract, so this import cannot cycle).
+from ..amq.protocol import OP_DELETE, OP_INSERT, OP_QUERY  # noqa: E402
+
+
+def _count_matches(config: CuckooConfig, state: CuckooState,
+                   keys: jnp.ndarray):
+    """Stored copies matching each key across its two candidate buckets.
+
+    Returns int32[n]. When XOR placement degenerates to ``i1 == i2`` (and
+    the match tags coincide), the single bucket is counted once — exactly
+    the pool of copies a sequential delete chain could consume.
+    """
+    lay = config.layout
+    pol = config.placement
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    t1, t2 = pol.query_match_tags(base_tag)
+    cnt1 = jnp.sum(L.bucket_tags(state.table, i1, lay) == t1[:, None],
+                   axis=-1, dtype=jnp.int32)
+    cnt2 = jnp.sum(L.bucket_tags(state.table, i2, lay) == t2[:, None],
+                   axis=-1, dtype=jnp.int32)
+    aliased = (i1 == i2) & (t1 == t2)
+    return jnp.where(aliased, cnt1, cnt1 + cnt2)
+
+
+def apply_ops(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    ops: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Execute an interleaved QUERY/INSERT/DELETE stream in one fused pass.
+
+    ``ops`` is int32[n] of op codes; returns ``(state', ok[n], stats)``
+    where ``ok[i]`` is that slot's outcome under its op code (query → hit,
+    insert → landed, delete → removed a stored copy).
+
+    Intra-batch semantics (validated against the per-op sequential oracle
+    in tests/test_mixed_ops.py): **operations on the same 64-bit key
+    resolve in batch order** — a query at index i observes exactly that
+    key's inserts and deletes at indices j < i, and a delete consumes the
+    oldest available copy. Rather than serialising per-key chains, the
+    pass materialises them algebraically:
+
+    1. one gather over the table counts each key's stored copies ``c0``
+       (the SWAR-unpacked match count over both candidate buckets);
+    2. a segmented associative scan over the batch (grouped by key value,
+       batch order within groups) runs the saturating counter
+       ``c_t = max(c_{t-1} + a_t, 0)`` (+1 insert, −1 delete, 0 query)
+       from ``c0``, which answers every query (``c > 0``) and delete
+       (``c_before > 0``) in its correct intra-batch position;
+    3. only each key's *net* effect touches the table: ``d = c_last − c0``
+       surplus copies are inserted (the last ``d`` insert slots) or
+       ``−d`` copies deleted (the first ``−d`` delete slots) through the
+       existing claim machinery — insert/delete pairs that cancel within
+       the batch never generate memory traffic.
+
+    Documented deviations from the sequential oracle (DESIGN.md §9): a
+    cancelled insert reports ``ok=True`` even when a sequential execution
+    would have failed it against a full table, and *cross-key* fingerprint
+    aliasing within one batch is observed as-if-reordered (net effects are
+    applied deletes-then-inserts). Neither can produce a false negative
+    for a key's own inserts, and both vanish below the design load.
+    """
+    n = keys.shape[0]
+    v = (jnp.ones((n,), bool) if valid is None else valid.astype(bool))
+    ops = ops.astype(jnp.int32)
+    is_ins = v & (ops == OP_INSERT)
+    is_del = v & (ops == OP_DELETE)
+    is_qry = v & (ops == OP_QUERY)
+
+    c0 = _count_matches(config, state, keys)
+
+    # --- group by 64-bit key value; batch order within groups (stable).
+    lo, hi = keys[..., 0], keys[..., 1]
+    order = jnp.lexsort((lo, hi))
+    lo_s, hi_s = lo[order], hi[order]
+    seg_start = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (lo_s[1:] != lo_s[:-1]) | (hi_s[1:] != hi_s[:-1]),
+    ])
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    idx = jnp.arange(n, dtype=jnp.int32)
+    head_pos = jax.lax.cummax(jnp.where(seg_start, idx, 0))
+
+    def seg_cumsum(x_s):
+        c = jnp.cumsum(x_s)
+        return c - (c[head_pos] - x_s[head_pos])
+
+    a = (is_ins.astype(jnp.int32) - is_del.astype(jnp.int32))[order]
+    c0_s = c0[order]
+
+    # --- segmented saturating-counter scan. Each op is the map
+    #     c -> max(c + a, 0); maps compose as (A, M): c -> max(c + A, M)
+    #     with A = A1 + A2, M = max(M1 + A2, M2) — associative, and the
+    #     segment-start flag resets composition at key-group boundaries.
+    def combine(left, right):
+        A1, M1, r1 = left
+        A2, M2, r2 = right
+        A = jnp.where(r2, A2, A1 + A2)
+        M = jnp.where(r2, M2, jnp.maximum(M1 + A2, M2))
+        return A, M, r1 | r2
+
+    A, M, _ = jax.lax.associative_scan(
+        combine, (a, jnp.zeros((n,), jnp.int32), seg_start))
+    c_incl = jnp.maximum(c0_s + A, M)
+    c_before = jnp.where(seg_start, c0_s, jnp.roll(c_incl, 1))
+
+    # --- net effect per key group: surplus inserts / deficit deletes.
+    last_pos = jnp.clip(
+        jax.ops.segment_max(idx, seg_id, num_segments=n), 0, n - 1)
+    c_last = c_incl[last_pos][seg_id]
+    d = c_last - c0_s                       # net copies to add (+) / drop (−)
+    ins_rank = seg_cumsum(is_ins[order].astype(jnp.int32))    # 1-based
+    del_rank = seg_cumsum(is_del[order].astype(jnp.int32))
+    ins_total = ins_rank[last_pos][seg_id]
+    net_ins_s = is_ins[order] & (ins_rank > ins_total - jnp.maximum(d, 0))
+    net_del_s = is_del[order] & (del_rank <= jnp.maximum(-d, 0))
+
+    unsort = lambda x_s, fill: jnp.full((n,), fill, x_s.dtype).at[order].set(x_s)
+    net_ins = unsort(net_ins_s, False)
+    net_del = unsort(net_del_s, False)
+    q_ok = unsort(c_incl > 0, False)
+    d_ok_prov = unsort(c_before > 0, False)
+
+    # --- apply net mutations through the existing claim machinery
+    #     (deletes first: they free slots the surplus inserts may claim).
+    #     The claim loops pay full-batch-width sorts per round, so sparse
+    #     net slices (the common case for read-heavy traffic) are first
+    #     *compacted* into a narrow static sub-batch with one cumsum
+    #     scatter — no sort — and only dense slices run full width, where
+    #     net inserts take the bulk-build fast path (DESIGN.md §6; the
+    #     fused pass already paid for the batch analysis). lax.cond picks
+    #     the branch at runtime; shapes stay static either way.
+    sub = max(8, n // 8)
+
+    def _compact(mask, width):
+        pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        slot = jnp.where(mask, pos, width)
+        sub_keys = jnp.zeros((width, 2), jnp.uint32).at[slot].set(
+            keys, mode="drop")
+        sub_valid = jnp.zeros((width,), bool).at[slot].set(mask, mode="drop")
+        return jnp.clip(pos, 0, width - 1), sub_keys, sub_valid
+
+    def sparse_delete(st):
+        pos, skeys, svalid = _compact(net_del, sub)
+        st, ok_sub = delete(config, st, skeys, valid=svalid)
+        return st, net_del & ok_sub[pos]
+
+    def dense_delete(st):
+        return delete(config, st, keys, valid=net_del)
+
+    state, del_ok = jax.lax.cond(
+        jnp.sum(net_del, dtype=jnp.int32) <= sub,
+        sparse_delete, dense_delete, state)
+
+    def sparse_insert(st):
+        pos, skeys, svalid = _compact(net_ins, sub)
+        st, ok_sub, st_stats = insert(config, st, skeys, valid=svalid)
+        ev = jnp.where(net_ins, st_stats.evictions[pos], 0)
+        return st, net_ins & ok_sub[pos], ev, st_stats.rounds
+
+    def dense_insert(st):
+        st, ok_f, st_stats = insert_bulk(config, st, keys, valid=net_ins)
+        return st, ok_f, st_stats.evictions, st_stats.rounds
+
+    state, ins_ok, evictions, rounds = jax.lax.cond(
+        jnp.sum(net_ins, dtype=jnp.int32) <= sub,
+        sparse_insert, dense_insert, state)
+
+    ok = jnp.where(
+        is_qry, q_ok,
+        jnp.where(is_ins, jnp.where(net_ins, ins_ok, True),
+                  jnp.where(is_del,
+                            d_ok_prov & jnp.where(net_del, del_ok, True),
+                            False)))
+    return state, ok, InsertStats(evictions, rounds)
+
+
+# ---------------------------------------------------------------------------
 # Convenience object API (functional; methods return new state).
 # ---------------------------------------------------------------------------
 
@@ -678,6 +859,13 @@ class CuckooFilter:
     def delete(self, keys) -> jnp.ndarray:
         self.state, ok = self._op(delete)(self.state, keys)
         return ok
+
+    def apply_ops(self, keys, ops, valid=None
+                  ) -> Tuple[jnp.ndarray, InsertStats]:
+        """Run an interleaved query/insert/delete stream in one fused pass."""
+        self.state, ok, stats = self._op(apply_ops)(self.state, keys, ops,
+                                                    valid)
+        return ok, stats
 
     @property
     def load_factor(self) -> float:

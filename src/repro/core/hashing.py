@@ -48,6 +48,19 @@ def keys_from_numpy(arr: np.ndarray) -> np.ndarray:
     return out
 
 
+def keys_to_numpy(keys) -> np.ndarray:
+    """Host helper: uint32[..., 2] (lo, hi) -> uint64 numpy array.
+
+    Exact inverse of :func:`keys_from_numpy` — the one key-normalization
+    helper shared by every host-side consumer (the Python oracle, the AMQ
+    adapters, the service front-end), so the packing convention cannot
+    drift between them.
+    """
+    arr = np.asarray(keys, np.uint32)
+    return (arr[..., 0].astype(np.uint64)
+            | (arr[..., 1].astype(np.uint64) << np.uint64(32)))
+
+
 def xxhash64_u64(key: b64.U64, seed: int = 0) -> b64.U64:
     """xxHash64 of a single 64-bit lane (length-8 input), bit exact.
 

@@ -43,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compat
 from .cuckoo_filter import CuckooConfig, CuckooState
+from .cuckoo_filter import apply_ops as _apply_ops
 from .cuckoo_filter import delete as _delete
 from .cuckoo_filter import insert as _insert
 from .cuckoo_filter import insert_bulk as _insert_bulk
@@ -141,7 +142,11 @@ def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int,
     a bin slot (so they cannot crowd out live keys).
 
     Returns (bins uint32[S, cap, 2], bin_valid bool[S, cap],
-             order, dest_sorted, idx_in_group, routed_sorted).
+             order, dest_sorted, idx_in_group, routed_sorted, slot).
+
+    ``slot`` is the flat bin address per *sorted* key (``S*cap`` sentinel =
+    unrouted); extra per-key channels (the mixed batch's op codes) are
+    binned with the same scatter so they travel the identical all-to-all.
     """
     S = config.num_shards
     n = keys.shape[0]
@@ -158,7 +163,7 @@ def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int,
     bins = jnp.zeros((S * cap, 2), jnp.uint32).at[slot].set(keys_s, mode="drop")
     bin_valid = jnp.zeros((S * cap,), bool).at[slot].set(routed, mode="drop")
     return (bins.reshape(S, cap, 2), bin_valid.reshape(S, cap),
-            order, dest_s, idx_in_group, routed)
+            order, dest_s, idx_in_group, routed, slot)
 
 
 def _unroute(order, dest_s, idx_in_group, routed, back, fill=False):
@@ -176,14 +181,22 @@ def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int,
     ``dedup_within_batch`` is globally correct because duplicates of a key
     hash to the same owner shard: per-shard first-occurrence dedup IS
     whole-batch dedup.
+
+    ``op == "apply_ops"`` is the mixed-batch path: the per-key op codes are
+    binned with the same scatter as the keys and travel the same
+    all-to-all, so every shard replays its slice of the interleaved stream
+    with ``cuckoo_filter.apply_ops``. In-batch order is preserved
+    end-to-end: all copies of a key land on its owner shard, the routing
+    sort is stable, and the exchange concatenates source devices in mesh
+    order — so same-key operations arrive in global batch order.
     """
     cap = config.bin_capacity(local_batch)
     ax = config.axis_name
 
-    def fn(table, count, keys, valid):
+    def fn(table, count, keys, valid, ops=None):
         # table: [1, num_words] local shard; keys: [local_batch, 2]
         state = CuckooState(table[0], count[0])
-        bins, bin_valid, order, dest_s, idxg, routed = _route(
+        bins, bin_valid, order, dest_s, idxg, routed, slot = _route(
             config, keys, cap, valid)
         recv = jax.lax.all_to_all(bins, ax, split_axis=0, concat_axis=0,
                                   tiled=False)
@@ -192,7 +205,17 @@ def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int,
         flat_keys = recv.reshape(-1, 2)
         flat_valid = recv_valid.reshape(-1)
 
-        if op == "insert":
+        if op == "apply_ops":
+            S = config.num_shards
+            bin_ops = jnp.zeros((S * cap,), jnp.int32).at[slot].set(
+                ops.astype(jnp.int32)[order], mode="drop")
+            recv_ops = jax.lax.all_to_all(bin_ops.reshape(S, cap), ax,
+                                          split_axis=0, concat_axis=0,
+                                          tiled=False)
+            state, ok, _ = _apply_ops(config.shard, state, flat_keys,
+                                      recv_ops.reshape(-1),
+                                      valid=flat_valid)
+        elif op == "insert":
             state, ok, _ = _insert(config.shard, state, flat_keys,
                                    valid=flat_valid,
                                    dedup_within_batch=dedup_within_batch)
@@ -249,19 +272,22 @@ class ShardedCuckooFilter:
             ax = self.config.axis_name
             fn = _make_sharded_op(self.config, op, self.local_batch,
                                   dedup_within_batch=dedup)
+            n_in = 5 if op == "apply_ops" else 4
             mapped = compat.shard_map(
                 fn, mesh=self.mesh,
-                in_specs=(P(ax), P(ax), P(ax), P(ax)),
+                in_specs=(P(ax),) * n_in,
                 out_specs=(P(ax), P(ax), P(ax), P(ax)),
             )
             self._ops[key] = jax.jit(mapped)
         return self._ops[key]
 
-    def _run(self, op, keys, valid=None, dedup=False):
+    def _run(self, op, keys, valid=None, dedup=False, ops=None):
         if valid is None:
             valid = jnp.ones((keys.shape[0],), bool)
-        table, count, result, routed = self._op(op, dedup)(
-            self.state.table, self.state.count, keys, valid)
+        args = (self.state.table, self.state.count, keys, valid)
+        if op == "apply_ops":
+            args += (ops,)
+        table, count, result, routed = self._op(op, dedup)(*args)
         if op != "query":
             self.state = ShardedCuckooState(table, count)
         return result, routed
@@ -286,6 +312,17 @@ class ShardedCuckooFilter:
     def delete(self, keys, valid: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self._run("delete", keys, valid)
+
+    def apply_ops(self, keys, ops, valid: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Mixed-batch pass: -> (ok, routed), ok per that slot's op code.
+
+        Op codes travel the same all-to-all as their keys, so every shard
+        replays its slice of the interleaved stream in global batch order
+        (see _make_sharded_op).
+        """
+        return self._run("apply_ops", keys, valid,
+                         ops=jnp.asarray(ops, jnp.int32))
 
     @property
     def total_count(self) -> int:

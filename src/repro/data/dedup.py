@@ -132,38 +132,74 @@ def forget_keys(cfg: DedupConfig, state: Any,
 
 
 class StreamingDeduper:
-    """Handle-based dedup for unbounded streams (no a-priori sizing).
+    """Service-based dedup for unbounded streams (no a-priori sizing).
 
     Wraps any ``amq`` handle — by default an auto-expanding cascade
-    (DESIGN.md §8) — so the dedup window grows with the stream instead of
-    saturating at a guessed capacity. Host-driven (the cascade allocates
-    levels between batches), unlike :func:`dedup_batch` which stays fully
-    jit-fusable over a static filter.
+    (DESIGN.md §8) — behind a :class:`repro.amq.FilterService` micro-batch
+    (DESIGN.md §9): the membership probe and the fresh-key admission are
+    *enqueued* op streams, so only the fresh slice of each batch is ever
+    inserted (variable-size at the host level, absorbed by the service's
+    fixed-shape padding — no recompilation per duplicate count), and
+    several dedupers can coalesce into one shared service. Host-driven
+    (the cascade allocates levels between batches), unlike
+    :func:`dedup_batch` which stays fully jit-fusable over a static
+    filter.
     """
 
-    def __init__(self, handle):
-        self.handle = handle
+    def __init__(self, handle, *, service_batch: int = 512,
+                 service: Optional["amq.FilterService"] = None):
+        self.service = (amq.FilterService(handle, batch_size=service_batch)
+                        if service is None else service)
+        self.handle = self.service.handle
         self.stats = {"duplicates": 0, "insert_failures": 0}
+        self._admissions: list = []   # tickets whose failures aren't counted
+
+    def _drain_admissions(self) -> int:
+        """Fold finished admission tickets into ``insert_failures``.
+
+        Only tickets already dispatched are resolved — draining never
+        forces a flush, so admissions stay lazy. Returns the failures
+        counted by this drain.
+        """
+        drained = 0
+        live = []
+        for t in self._admissions:
+            if not t.dispatched:
+                live.append(t)
+                continue
+            drained += int((~t.result()).sum())
+        self._admissions = live
+        self.stats["insert_failures"] += drained
+        return drained
 
     def dedup(self, batch: Dict[str, jnp.ndarray]
               ) -> Tuple[Dict[str, jnp.ndarray], Dict]:
         """Mask duplicates in ``batch`` and insert fresh sequence keys.
 
         Returns ``(batch + {"mask"}, per_batch_stats)`` and accumulates
-        totals in ``self.stats``.
+        totals in ``self.stats``. Admissions are *enqueued*: this batch's
+        fresh keys ride the service's micro-batches and are only forced
+        onto the device by the next membership probe (or :meth:`flush`),
+        so ``insert_failures`` — both per batch and in ``self.stats`` —
+        trails the admissions by one flush. ``duplicates`` is always
+        exact for the current batch.
         """
-        keys = sequence_keys(batch["tokens"])
-        seen = self.handle.query(keys).hits
-        fresh = np.asarray(~seen) & ~np.asarray(intra_batch_duplicates(keys))
-        report = self.handle.insert(keys, valid=jnp.asarray(fresh))
-        ok = np.asarray(report.ok)
+        keys = np.asarray(sequence_keys(batch["tokens"]))
+        seen = self.service.query(keys).result()
+        failures = self._drain_admissions()   # prior admissions just flushed
+        fresh = ~seen & ~np.asarray(intra_batch_duplicates(jnp.asarray(keys)))
+        self._admissions.append(self.service.insert(keys[fresh]))
         out = dict(batch)
         out["mask"] = jnp.asarray(fresh)
         stats = {"duplicates": int((~fresh).sum()),
-                 "insert_failures": int((fresh & ~ok).sum())}
-        for k, v in stats.items():
-            self.stats[k] += v
+                 "insert_failures": failures}
+        self.stats["duplicates"] += stats["duplicates"]
         return out, stats
+
+    def flush(self) -> None:
+        """Force pending admissions onto the filter and settle stats."""
+        self.service.flush()
+        self._drain_admissions()
 
     def forget(self, keys: jnp.ndarray) -> None:
         """Expire keys from the window (capability-gated, like forget_keys)."""
@@ -171,11 +207,13 @@ class StreamingDeduper:
             raise NotImplementedError(
                 f"{self.handle.name}: append-only backend cannot forget keys "
                 "(capabilities.supports_delete is False)")
-        self.handle.delete(keys)
+        self.service.delete(np.asarray(keys)).result()
+        self._drain_admissions()
 
 
 def make_deduper(capacity: int, backend: str = "cuckoo", *,
-                 auto_expand: bool = True, **kw) -> StreamingDeduper:
+                 auto_expand: bool = True, service_batch: int = 512,
+                 **kw) -> StreamingDeduper:
     """Build a :class:`StreamingDeduper` on any registry backend.
 
     ``capacity`` is the initial window size; with ``auto_expand`` (the
@@ -184,7 +222,8 @@ def make_deduper(capacity: int, backend: str = "cuckoo", *,
     """
     return StreamingDeduper(
         amq.make(backend, capacity=capacity,
-                 auto_expand="auto" if auto_expand else False, **kw))
+                 auto_expand="auto" if auto_expand else False, **kw),
+        service_batch=service_batch)
 
 
 # Backwards-compat convenience mirroring the original module surface.

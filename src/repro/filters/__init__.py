@@ -18,6 +18,8 @@ from ..amq.protocol import (  # noqa: F401
     DeleteReport,
     InsertReport,
     LevelStats,
+    MixedReport,
+    OpBatch,
     QueryResult,
 )
 from .bcht import BCHTConfig, BucketedCuckooHashTable  # noqa: F401

@@ -15,16 +15,14 @@ from typing import List
 
 import numpy as np
 
-from ..core.hashing import fmix32_py, xxhash64_py
+from ..core.hashing import fmix32_py, keys_to_numpy, xxhash64_py  # noqa: F401
+# keys_to_numpy (re-exported above) replaces this module's old keys_to_u64:
+# the host-side key normalization now lives in one place, shared with the
+# AMQ adapters and the service front-end. The old name is gone on purpose —
+# repro.core.hashing.keys_to_u64 is a *different* function (a jax U64 lane
+# pair), and two public names with clashing semantics invited misuse.
 
 _M32 = 0xFFFFFFFF
-
-
-def keys_to_u64(keys) -> np.ndarray:
-    """uint32[n, 2] (lo, hi) pairs -> uint64[n] (inverse of keys_from_numpy)."""
-    arr = np.asarray(keys, np.uint32)
-    return (arr[..., 0].astype(np.uint64)
-            | (arr[..., 1].astype(np.uint64) << np.uint64(32)))
 
 
 @dataclasses.dataclass(frozen=True)

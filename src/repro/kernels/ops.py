@@ -16,6 +16,7 @@ from ..core.cuckoo_filter import CuckooConfig, CuckooState, prepare_keys
 from ..filters.blocked_bloom import BloomConfig, BloomState
 from .bloom import bloom_insert_pallas, bloom_query_pallas
 from .cuckoo_insert import cuckoo_insert_bulk_pallas, cuckoo_insert_pallas
+from .cuckoo_mixed import cuckoo_mixed_pallas
 from .cuckoo_query import cuckoo_query_pallas
 from .hash64 import hash64_pallas
 from .kmer_pack import kmer_pack_pallas
@@ -85,6 +86,31 @@ def cuckoo_insert_bulk(config: CuckooConfig, state: CuckooState,
     ok = jnp.zeros((n0,), jnp.uint32).at[order].set(ok_s[:n0])
     count = state.count + jnp.sum(ok, dtype=jnp.int32)
     return CuckooState(table, count), ok.astype(bool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
+def cuckoo_apply_ops(config: CuckooConfig, state: CuckooState,
+                     keys: jnp.ndarray, ops: jnp.ndarray,
+                     block_keys: int = 256):
+    """Kernel-backed fused mixed-op pass. -> (state', ok bool[n]).
+
+    ``ops``: int32[n] op codes (0 query / 1 insert / 2 delete). The kernel
+    realises exact sequential in-batch semantics (DESIGN.md §9); inserts
+    are direct-only — failed insert slots (ok==False) should be retried
+    through the eviction-capable ``core.cuckoo_filter`` path.
+    """
+    n0 = keys.shape[0]
+    keys, n = _pad_to(keys, block_keys, fill=0)
+    ops_p, _ = _pad_to(ops.astype(jnp.int32), block_keys, fill=0)
+    valid = (jnp.arange(keys.shape[0]) < n0).astype(jnp.uint32)
+    table, ok = cuckoo_mixed_pallas(config, state.table,
+                                    keys[:, 0], keys[:, 1], ops_p, valid,
+                                    block_keys=block_keys,
+                                    interpret=not _on_tpu())
+    ok = ok[:n0].astype(bool)
+    delta = (jnp.sum(ok & (ops == 1), dtype=jnp.int32)
+             - jnp.sum(ok & (ops == 2), dtype=jnp.int32))
+    return CuckooState(table, state.count + delta), ok
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))

@@ -23,14 +23,26 @@ from .prefix_cache import PrefixCache
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, batch: int, max_len: int,
-                 prefix_cache_entries: int = 64):
+                 prefix_cache_entries: int = 64,
+                 prefix_cache_backend: str = "cuckoo",
+                 prefix_cache_auto_expand: bool = True,
+                 prefix_cache_kw: Optional[Dict[str, Any]] = None):
+        """``prefix_cache_backend`` / ``prefix_cache_auto_expand`` /
+        ``prefix_cache_kw`` flow to :class:`PrefixCache`, so the engine's
+        guard filter uses the full AMQ registry surface (any backend,
+        auto-expanding by default) instead of the legacy fixed-capacity
+        construction."""
         if model.cfg.frontend == "frames":
             raise ValueError("encoder-only arch has no autoregressive serve")
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
-        self.prefix_cache = PrefixCache(prefix_cache_entries)
+        self.prefix_cache = PrefixCache(
+            prefix_cache_entries,
+            backend=prefix_cache_backend,
+            auto_expand=prefix_cache_auto_expand,
+            **(prefix_cache_kw or {}))
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 

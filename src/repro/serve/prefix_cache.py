@@ -17,6 +17,13 @@ filter — tracked in ``stats["stale"]`` so operators can see the rot the
 paper warns about; with auto-expansion those stale keys also keep
 *occupying* the cascade, which is exactly why the delete-capable default
 backend matters.
+
+All filter traffic flows through a :class:`repro.amq.FilterService`
+micro-batch (DESIGN.md §9): eviction deletes and admission inserts are
+*enqueued* (coalesced across calls — and across caches, when several share
+one service) and only forced when a lookup needs an answer, so a burst of
+cache churn costs one fused mixed-op dispatch instead of a filter
+round-trip per entry.
 """
 
 from __future__ import annotations
@@ -24,7 +31,6 @@ from __future__ import annotations
 import collections
 from typing import Any, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from .. import amq
@@ -44,37 +50,47 @@ class PrefixCache:
     """LRU prefix->cache-entry store with filter-guarded lookups.
 
     ``backend`` picks any AMQ registry backend for the guard filter;
-    alternatively pass a ready-made ``filter_handle`` (sized by the caller).
-    ``auto_expand`` (default True, where the backend supports it) makes the
-    guard an auto-expanding cascade, so ``filter_capacity`` is only an
-    initial size, not a ceiling.
+    alternatively pass a ready-made ``filter_handle`` (sized by the caller)
+    or a shared ``service`` (several caches coalescing into one filter's
+    micro-batches). ``auto_expand`` (default True, where the backend
+    supports it) makes the guard an auto-expanding cascade, so
+    ``filter_capacity`` is only an initial size, not a ceiling.
     """
 
     def __init__(self, capacity_entries: int, filter_capacity: int = 0,
                  backend: str = "cuckoo",
                  filter_handle: Optional["amq.FilterHandle"] = None,
                  auto_expand: bool = True,
+                 service: Optional["amq.FilterService"] = None,
+                 service_batch: int = 64,
                  **filter_kw):
         self.capacity = capacity_entries
         self.entries: "collections.OrderedDict[int, Any]" = \
             collections.OrderedDict()
-        if filter_handle is None:
-            fcap = filter_capacity or capacity_entries * 4
-            filter_handle = amq.make(
-                backend, capacity=fcap,
-                auto_expand="auto" if auto_expand else False, **filter_kw)
-        self.filter = filter_handle
+        if service is None:
+            if filter_handle is None:
+                fcap = filter_capacity or capacity_entries * 4
+                filter_handle = amq.make(
+                    backend, capacity=fcap,
+                    auto_expand="auto" if auto_expand else False, **filter_kw)
+            service = amq.FilterService(filter_handle,
+                                        batch_size=service_batch)
+        elif filter_handle is not None:
+            raise TypeError("pass filter_handle= or service=, not both")
+        self.service = service
+        self.filter = service.handle
         self.stats = {"hits": 0, "misses": 0, "filtered": 0,
                       "evictions": 0, "stale": 0}
 
     def _fkey(self, key: int):
-        return jnp.asarray(
-            [[key & 0xFFFFFFFF, (key >> 32) & 0xFFFFFFFF]], jnp.uint32)
+        return np.asarray(
+            [[key & 0xFFFFFFFF, (key >> 32) & 0xFFFFFFFF]], np.uint32)
 
     def lookup(self, tokens) -> Optional[Any]:
         key = prefix_key(tokens)
         # AMQ front door: definite-negative skips the (expensive) probe.
-        if not bool(np.asarray(self.filter.query(self._fkey(key)).hits)[0]):
+        # The ticket flushes any admissions/evictions queued ahead of it.
+        if not bool(self.service.query(self._fkey(key)).result()[0]):
             self.stats["filtered"] += 1
             return None
         entry = self.entries.get(key)
@@ -94,9 +110,11 @@ class PrefixCache:
         while len(self.entries) >= self.capacity:
             old_key, _ = self.entries.popitem(last=False)   # LRU eviction
             if self.filter.capabilities.supports_delete:
-                self.filter.delete(self._fkey(old_key))      # keep AMQ in sync
+                # Enqueued, not dispatched: the micro-batch keeps the AMQ
+                # in sync at the next flush, before any lookup reads it.
+                self.service.delete(self._fkey(old_key))
             else:
                 self.stats["stale"] += 1  # append-only backend: key rots
             self.stats["evictions"] += 1
         self.entries[key] = entry
-        self.filter.insert(self._fkey(key))
+        self.service.insert(self._fkey(key))

@@ -81,6 +81,26 @@ def test_keys_from_numpy_roundtrip():
     np.testing.assert_array_equal(back, raw)
 
 
+def test_keys_to_numpy_is_the_shared_inverse():
+    """keys_to_numpy is the one hoisted host-side inverse of
+    keys_from_numpy, shared by the oracle module and the AMQ adapters —
+    the packing convention cannot drift between consumers."""
+    from repro.core.hashing import keys_to_numpy
+    from repro.filters import cpu_reference
+
+    rng = np.random.default_rng(4)
+    raw = rng.integers(0, 2**64, size=100, dtype=np.uint64)
+    np.testing.assert_array_equal(keys_to_numpy(keys_from_numpy(raw)), raw)
+    # jnp inputs (device arrays) normalize identically
+    np.testing.assert_array_equal(
+        keys_to_numpy(jnp.asarray(keys_from_numpy(raw))), raw)
+    # one shared callable, re-exported — not a copy that could drift; the
+    # old numpy keys_to_u64 name is gone (it clashed with the jax helper
+    # of the same name in core.hashing, which returns a U64 lane pair).
+    assert cpu_reference.keys_to_numpy is keys_to_numpy
+    assert not hasattr(cpu_reference, "keys_to_u64")
+
+
 @pytest.mark.parametrize("kind", ["xxhash64", "fmix32"])
 def test_hash_distribution_rough(kind):
     """Both hash kinds should look uniform at coarse granularity."""

@@ -1,0 +1,227 @@
+"""Differential tests for mixed-op execution (DESIGN.md §9).
+
+Every registry backend replays random interleaved QUERY/INSERT/DELETE
+streams through ``apply_ops`` — the native fused path where the backend has
+one, and the segmented fallback explicitly for every backend — and must
+match a *per-op sequential oracle*: the same backend executing the same
+ops one at a time through its per-op entry points. Same-key interleavings
+are provoked by drawing keys from a tiny universe.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised in the bare container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import amq
+from repro.amq.adapters import segmented_apply_ops
+from repro.amq.protocol import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_QUERY,
+    MixedReport,
+    OpBatch,
+)
+from repro.core import keys_from_numpy
+
+CAPACITY = 2048
+N_OPS = 48
+UNIVERSE = 8          # tiny key universe -> dense same-key interleavings
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def _keys_for(seed: int, picks) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    uni = rng.integers(1, 2**63, size=UNIVERSE, dtype=np.uint64)
+    return jnp.asarray(keys_from_numpy(uni[np.asarray(picks) % UNIVERSE]))
+
+
+_HANDLES = {}
+
+
+def _make(backend: str):
+    """One cached handle per backend, state reset per use (keeps every
+    per-op jit compiled exactly once across the whole module)."""
+    if backend not in _HANDLES:
+        kw = {"num_shards": 1} if backend == "sharded-cuckoo" else {}
+        _HANDLES[backend] = amq.make(backend, capacity=CAPACITY, **kw)
+    handle = _HANDLES[backend]
+    handle.state = handle.adapter.init(handle.config)
+    return handle
+
+
+def _sequential_oracle(backend: str, batch: OpBatch) -> np.ndarray:
+    """Replay the batch one op at a time through per-op entry points."""
+    handle = _make(backend)
+    ops = _np(batch.ops)
+    v = _np(batch.valid)
+    ok = np.zeros((batch.size,), bool)
+    for i in range(batch.size):
+        if not v[i]:
+            continue
+        k1 = batch.keys[i:i + 1]
+        if ops[i] == OP_QUERY:
+            ok[i] = bool(_np(handle.query(k1).hits)[0])
+        elif ops[i] == OP_INSERT:
+            ok[i] = bool(_np(handle.insert(k1).ok)[0])
+        else:
+            ok[i] = bool(_np(handle.delete(k1).ok)[0])
+    return ok, handle.count()
+
+
+def _ops_strategy(with_deletes: bool):
+    codes = [OP_QUERY, OP_INSERT] + ([OP_DELETE] if with_deletes else [])
+    return st.lists(st.sampled_from(codes), min_size=N_OPS, max_size=N_OPS)
+
+
+@pytest.fixture(params=list(amq.names()))
+def backend(request):
+    return request.param
+
+
+@pytest.fixture(params=["native", "segmented"])
+def path(request):
+    return request.param
+
+
+def _apply(backend: str, path: str, batch: OpBatch) -> MixedReport:
+    handle = _make(backend)
+    if path == "segmented":
+        report = segmented_apply_ops(handle, batch)
+    else:
+        report = handle.apply_ops(batch)   # native where supported
+    return report, handle.count()
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_mixed_matches_sequential_oracle(backend, path, data):
+    """apply_ops == one-op-at-a-time replay, per backend, both paths."""
+    caps = amq.get(backend).capabilities
+    ops = np.asarray(data.draw(_ops_strategy(caps.supports_delete)),
+                     np.int32)
+    picks = data.draw(st.lists(st.integers(0, UNIVERSE - 1),
+                               min_size=N_OPS, max_size=N_OPS))
+    seed = data.draw(st.integers(0, 2**16))
+    keys = _keys_for(seed, picks)
+    batch = OpBatch.make(keys, ops)
+
+    ok_seq, count_seq = _sequential_oracle(backend, batch)
+    report, count = _apply(backend, path, batch)
+    np.testing.assert_array_equal(
+        _np(report.ok), ok_seq,
+        err_msg=f"{backend}/{path}: mixed != sequential oracle")
+    assert _np(report.routed).all()
+    assert count == count_seq, f"{backend}/{path}: count drift"
+
+
+def test_mixed_valid_mask(backend):
+    """Padding slots never touch the structure and never report ok."""
+    rng = np.random.default_rng(0)
+    ops = rng.integers(0, 2, size=N_OPS).astype(np.int32)  # query/insert
+    keys = _keys_for(1, rng.integers(0, UNIVERSE, size=N_OPS))
+    valid = jnp.arange(N_OPS) % 2 == 0
+    handle = _make(backend)
+    report = handle.apply_ops(OpBatch(keys, jnp.asarray(ops), valid))
+    assert not _np(report.ok)[~_np(valid)].any()
+    assert handle.count() == int(
+        (_np(report.ok) & (ops == OP_INSERT) & _np(valid)).sum())
+
+
+def test_mixed_delete_capability_gated(backend):
+    """Batches with deletes raise on append-only backends, on every path."""
+    caps = amq.get(backend).capabilities
+    if caps.supports_delete:
+        pytest.skip("delete-capable backend")
+    keys = _keys_for(2, range(N_OPS))
+    ops = jnp.full((N_OPS,), OP_DELETE, jnp.int32)
+    with pytest.raises(NotImplementedError):
+        _make(backend).apply_ops(OpBatch.make(keys, ops))
+
+
+def test_mixed_report_subviews():
+    """Per-op sub-reports carry op-masked routed views."""
+    handle = _make("cuckoo")
+    keys = _keys_for(3, range(12))
+    ops = jnp.asarray([OP_INSERT] * 4 + [OP_QUERY] * 4 + [OP_DELETE] * 4,
+                      jnp.int32)
+    batch = OpBatch.make(keys, ops)
+    report = handle.apply_ops(batch)
+    ir = report.insert_report(batch)
+    qr = report.query_result(batch)
+    dr = report.delete_report(batch)
+    np.testing.assert_array_equal(_np(ir.routed),
+                                  _np(batch.ops) == OP_INSERT)
+    np.testing.assert_array_equal(_np(qr.routed),
+                                  _np(batch.ops) == OP_QUERY)
+    np.testing.assert_array_equal(_np(dr.routed),
+                                  _np(batch.ops) == OP_DELETE)
+    # The three views tile the batch: ok decomposes exactly.
+    recombined = (_np(ir.ok) | _np(qr.hits) | _np(dr.ok))
+    np.testing.assert_array_equal(recombined, _np(report.ok))
+
+
+def test_segmented_all_padding_batch_is_noop():
+    """A fully padded batch (forced flush) reports all-False, no crash."""
+    keys = _keys_for(7, range(8))
+    batch = OpBatch(keys, jnp.full((8,), OP_DELETE, jnp.int32),
+                    jnp.zeros((8,), bool))
+    for backend in ("bloom", "cuckoo"):   # fallback + native paths
+        handle = _make(backend)
+        report = handle.apply_ops(batch)
+        assert not _np(report.ok).any()
+        assert handle.count() == 0
+
+
+def test_opbatch_pad_to():
+    keys = _keys_for(4, range(5))
+    batch = OpBatch.make(keys, [OP_INSERT] * 5).pad_to(8)
+    assert batch.size == 8
+    assert not _np(batch.valid)[5:].any()
+    report = _make("cuckoo").apply_ops(batch)
+    assert _np(report.ok)[:5].all() and not _np(report.ok)[5:].any()
+    with pytest.raises(ValueError, match="pad"):
+        batch.pad_to(4)
+
+
+def test_cascade_mixed_grows_past_capacity():
+    """Cascade apply_ops keeps absorbing inserts past level capacity."""
+    h = amq.make("cuckoo", capacity=256, auto_expand=True)
+    rng = np.random.default_rng(5)
+    raw = np.unique(rng.integers(1, 2**63, size=4096, dtype=np.uint64))[:1024]
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ops = jnp.full((1024,), OP_INSERT, jnp.int32)
+    report = h.apply_ops(OpBatch.make(keys, ops))
+    assert _np(report.ok).all()       # growth, never refusal
+    assert len(h.levels) > 1
+    hits = h.apply_ops(OpBatch.make(keys, jnp.full((1024,), OP_QUERY,
+                                                   jnp.int32)))
+    assert _np(hits.ok).all()         # no false negatives across levels
+
+
+def test_kernel_mixed_matches_core():
+    """The Pallas mixed kernel (interpret mode) matches the fused core op."""
+    from repro.core import CuckooConfig
+    from repro.kernels.ops import cuckoo_apply_ops
+
+    cfg = CuckooConfig.for_capacity(512, hash_kind="fmix32")
+    rng = np.random.default_rng(6)
+    uni = rng.integers(1, 2**63, size=UNIVERSE, dtype=np.uint64)
+    raw = uni[rng.integers(0, UNIVERSE, size=96)]
+    keys = jnp.asarray(keys_from_numpy(raw))
+    ops = jnp.asarray(rng.integers(0, 3, size=96), jnp.int32)
+
+    handle = amq.make("cpu-cuckoo", capacity=512, hash_kind="fmix32")
+    oracle = handle.apply_ops(OpBatch.make(keys, ops))
+    state, ok = cuckoo_apply_ops(cfg, cfg.init(), keys, ops, 32)
+    np.testing.assert_array_equal(_np(ok), _np(oracle.ok))
+    assert int(state.count) == handle.count()

@@ -1,0 +1,175 @@
+"""FilterService: micro-batching, multi-client scatter, consumer migration.
+
+The acceptance scenario of DESIGN.md §9: many logical clients submit
+interleaved op streams; the service coalesces them into fixed-size padded
+OpBatches, executes each as one fused pass, and every client gets exactly
+its own results back — verified against a direct replay of the same global
+stream on a fresh handle.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import amq
+from repro.amq.protocol import OP_DELETE, OP_INSERT, OP_QUERY
+from repro.core import keys_from_numpy
+
+CAPACITY = 4096
+
+
+def _kk(raw) -> np.ndarray:
+    return keys_from_numpy(np.asarray(raw, np.uint64))
+
+
+def _client_streams(seed: int, n_clients: int = 4, per_client: int = 5):
+    """Interleaved per-client op streams over a shared small key universe."""
+    rng = np.random.default_rng(seed)
+    uni = rng.integers(1, 2**63, size=12, dtype=np.uint64)
+    streams = []
+    for c in range(n_clients):
+        for _ in range(per_client):
+            m = int(rng.integers(1, 7))
+            keys = uni[rng.integers(0, uni.size, size=m)]
+            ops = rng.integers(0, 3, size=m).astype(np.int32)
+            streams.append((c, _kk(keys), ops))
+    return streams
+
+
+def _replay_direct(streams, backend="cuckoo"):
+    """The same global op stream on a bare handle, submission by
+    submission — the scatter ground truth."""
+    handle = amq.make(backend, capacity=CAPACITY)
+    out = []
+    for _, keys, ops in streams:
+        batch = amq.OpBatch.make(jnp.asarray(keys),
+                                 jnp.asarray(ops)).pad_to(8)
+        out.append(np.asarray(handle.apply_ops(batch).ok)[:keys.shape[0]])
+    return out
+
+
+@pytest.mark.parametrize("batch_size", [8, 32, 256])
+def test_multi_client_interleaved_scatter(batch_size):
+    """Per-client results match the direct replay at every batch size.
+
+    batch_size 8 forces submissions to straddle micro-batch boundaries;
+    256 forces everything into one padded batch — the scatter must be
+    invariant to how the stream is chopped.
+    """
+    streams = _client_streams(seed=0)
+    expected = _replay_direct(streams)
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=batch_size)
+    tickets = [svc.submit(keys, ops) for _, keys, ops in streams]
+    for (client, keys, ops), ticket, want in zip(streams, tickets, expected):
+        got = ticket.result()
+        np.testing.assert_array_equal(
+            got, want,
+            err_msg=f"client {client} scatter mismatch @bs={batch_size}")
+        assert ticket.routed().all()
+
+
+def test_fixed_shape_batches_and_padding_stats():
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=16)
+    svc.insert(_kk(np.arange(1, 25)))       # 24 ops -> one full batch + 8
+    assert svc.stats["dispatches"] == 1     # full batch dispatched eagerly
+    assert svc.pending_ops == 8
+    svc.flush()
+    assert svc.pending_ops == 0
+    assert svc.stats["dispatches"] == 2
+    assert svc.stats["padded"] == 8         # the tail batch was padded
+    assert 0.0 < svc.stats_fill <= 1.0
+
+
+def test_result_forces_flush():
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=64)
+    t_ins = svc.insert(_kk([42, 43]))
+    t_q = svc.query(_kk([42, 43, 44]))
+    assert svc.stats["dispatches"] == 0     # everything still pending
+    hits = t_q.result()                     # forces the flush, in order
+    assert svc.stats["dispatches"] == 1
+    np.testing.assert_array_equal(hits, [True, True, False])
+    assert t_ins.result().all()
+
+
+def test_submission_order_is_batch_order():
+    """Insert->query->delete->query of one key across separate clients."""
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=32)
+    key = _kk([7])
+    t1 = svc.insert(key)
+    t2 = svc.query(key)
+    t3 = svc.delete(key)
+    t4 = svc.query(key)
+    assert t1.result().all() and t2.result().all() and t3.result().all()
+    assert not t4.result().any()
+
+
+def test_submit_validation_and_capability_gate():
+    svc = amq.FilterService(amq.make("bloom", capacity=CAPACITY),
+                            batch_size=8)
+    with pytest.raises(NotImplementedError):
+        svc.delete(_kk([1]))
+    with pytest.raises(ValueError, match="op code"):
+        svc.submit(_kk([1]), np.asarray([7], np.int32))
+    with pytest.raises(ValueError, match="keys"):
+        svc.submit(np.zeros((3,), np.uint32), np.zeros((3,), np.int32))
+    ok = svc.insert(_kk([1, 2])).result()   # bloom still serves ins/query
+    assert ok.all()
+
+
+def test_service_on_cascade_grows():
+    svc = amq.FilterService(
+        amq.make("cuckoo", capacity=128, auto_expand=True), batch_size=64)
+    raw = np.unique(np.random.default_rng(3).integers(
+        1, 2**63, size=2048, dtype=np.uint64))[:512]
+    t = svc.submit(_kk(raw), np.full((512,), OP_INSERT, np.int32))
+    assert t.result().all()                 # grew instead of refusing
+    assert len(svc.handle.levels) > 1
+    assert svc.query(_kk(raw)).result().all()
+
+
+def test_prefix_cache_rides_the_service():
+    """The serving consumer coalesces filter ops through one service."""
+    from repro.serve.prefix_cache import PrefixCache
+
+    pc = PrefixCache(2, backend="cuckoo")
+    for i in range(4):
+        pc.insert([i, i + 1, i + 2], entry=f"e{i}")
+    # admissions/evictions were enqueued; no lookup has forced them yet
+    assert pc.service.stats["ops"] > 0
+    assert pc.lookup([3, 4, 5]) == "e3"     # flushes, then answers
+    assert pc.lookup([0, 1, 2]) is None     # evicted + deleted from filter
+    assert pc.stats["evictions"] == 2 and pc.stats["stale"] == 0
+    assert pc.service.pending_ops == 0
+
+
+def test_shared_service_across_prefix_caches():
+    """Several caches coalesce into one filter service (one guard filter)."""
+    from repro.serve.prefix_cache import PrefixCache
+
+    svc = amq.FilterService(amq.make("cuckoo", capacity=1024), batch_size=32)
+    a = PrefixCache(4, service=svc)
+    b = PrefixCache(4, service=svc)
+    a.insert([1, 2, 3], entry="a")
+    b.insert([4, 5, 6], entry="b")
+    assert a.lookup([1, 2, 3]) == "a"
+    assert b.lookup([4, 5, 6]) == "b"
+    assert a.filter is b.filter is svc.handle
+
+
+def test_streaming_dedup_on_service():
+    from repro.data import make_deduper
+
+    d = make_deduper(1024, service_batch=64)
+    tokens = jnp.tile(jnp.arange(32, dtype=jnp.int32)[None], (16, 1))
+    tokens = tokens.at[8:].add(1)           # 2 distinct sequences, 8 copies
+    out, stats = d.dedup({"tokens": tokens})
+    assert stats["duplicates"] == 14
+    assert int(out["mask"].sum()) == 2
+    out2, stats2 = d.dedup({"tokens": tokens})
+    assert stats2["duplicates"] == 16       # all seen now
+    assert d.stats["duplicates"] == 30

@@ -36,7 +36,8 @@ def test_route_unroute_roundtrip():
     keys = jnp.asarray(keys_from_numpy(
         rng.integers(0, 2**64, size=256, dtype=np.uint64)))
     cap = cfg.bin_capacity(256)
-    bins, bin_valid, order, dest_s, idxg, routed = _route(cfg, keys, cap)
+    bins, bin_valid, order, dest_s, idxg, routed, _slot = _route(cfg, keys,
+                                                                 cap)
     assert bins.shape == (4, cap, 2)
     # every routed key appears in its destination bin
     dest = np.asarray(shard_of(cfg, keys))

@@ -45,7 +45,10 @@ cascade = amq.make(name, capacity=..., auto_expand=True)   # needs `expand`
 
 Consumers branch on the capability flags below — never on backend names
 (DESIGN.md §7); `auto_expand` wraps a backend as a growing cascade of
-levels (DESIGN.md §8).
+levels (DESIGN.md §8). Every handle also executes mixed operation batches
+(`handle.apply_ops(OpBatch)`, DESIGN.md §9): backends with the `mixed`
+capability run them as one fused program, the rest fall back to maximal
+same-op runs.
 """
 
 
@@ -113,7 +116,7 @@ def render() -> str:
     short = {"supports_delete": "delete", "supports_bulk": "bulk",
              "supports_sharding": "sharding", "counting": "counting",
              "exact": "exact", "serial_insert": "serial insert",
-             "supports_expand": "expand"}
+             "supports_expand": "expand", "supports_mixed": "mixed"}
     lines.append("| backend | " + " | ".join(short[f] for f in cap_fields)
                  + " |")
     lines.append("|---" * (len(cap_fields) + 1) + "|")
