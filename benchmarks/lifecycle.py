@@ -1,0 +1,111 @@
+"""Filter-state lifecycle costs: snapshot, restore, reshard, hot-swap.
+
+Measures the operational primitives of DESIGN.md §10 on the serving-scale
+configurations the lifecycle subsystem exists for:
+
+* **snapshot** — device→host pull of the packed state (GB/s of table),
+* **restore** — host→device placement + validation onto a fresh handle,
+* **reshard** — the sharded backend's exact K→K′ partition relocation
+  (snapshot → restore under a resharded config, zero membership change),
+* **hot-swap pause** — wall-clock a loaded :class:`~repro.amq.FilterService`
+  cannot accept dispatches while draining + migrating onto a new backend
+  (the zero-downtime claim is that *only* this pause is paid — tickets
+  issued before the swap stay readable and no acknowledged op is lost).
+
+Emits CSV rows via benchmarks.common plus a machine-readable payload under
+``BENCH_lifecycle.json`` (CI's bench-smoke artifact), seeding the perf
+trajectory for snapshot/restore throughput and swap pause across commits.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import amq
+
+from .common import emit, emit_json, rand_keys, throughput_m_per_s
+
+
+def _mb_per_s(nbytes: int, us: float) -> str:
+    return f"{nbytes / max(us, 1e-9):.1f}MB_per_s"
+
+
+def _timed(fn, iters: int):
+    best = float("inf")
+    out = None
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def run(fast: bool = False) -> None:
+    capacity = 1 << 14 if fast else 1 << 18
+    n_keys = int(capacity * 0.8)
+    iters = 3 if fast else 5
+    keys = rand_keys(n_keys, seed=11)
+    payload: dict = {"capacity": capacity, "n_keys": n_keys}
+
+    # -- snapshot / restore on the core backend ------------------------------
+    handle = amq.make("cuckoo", capacity=capacity)
+    handle.insert(keys, bulk=True)
+    snap, snap_us = _timed(handle.snapshot, iters)
+    emit("lifecycle_snapshot_cuckoo", snap_us, _mb_per_s(snap.nbytes, snap_us))
+
+    twin = amq.make("cuckoo", config=handle.config)
+    _, restore_us = _timed(lambda: twin.restore(snap), iters)
+    emit("lifecycle_restore_cuckoo", restore_us,
+         _mb_per_s(snap.nbytes, restore_us))
+    assert twin.count() == handle.count()
+    payload["snapshot"] = {"bytes": snap.nbytes, "us": snap_us,
+                           "restore_us": restore_us}
+
+    # -- exact resharding (fixed partitions, K -> K') ------------------------
+    sharded = amq.make("sharded-cuckoo", capacity=capacity,
+                       partitions_per_shard=8)
+    sharded.insert(keys)
+    pre = np.asarray(sharded.query(keys).hits)
+
+    def _reshard():
+        return sharded.resharded(num_shards=1)
+
+    moved, reshard_us = _timed(_reshard, iters)
+    post = np.asarray(moved.query(keys).hits)
+    assert (pre == post).all(), "reshard changed membership"
+    ssnap = sharded.snapshot()
+    emit("lifecycle_reshard_sharded", reshard_us,
+         _mb_per_s(ssnap.nbytes, reshard_us))
+    payload["reshard"] = {"bytes": ssnap.nbytes, "us": reshard_us,
+                          "partitions": sharded.config.inner.partitions,
+                          "membership_preserved": True}
+
+    # -- hot-swap pause under a live service ---------------------------------
+    svc = amq.FilterService(amq.make("cuckoo", capacity=capacity),
+                            batch_size=1024)
+    svc.insert(keys)          # acknowledged load the swap must carry over
+    svc.query(keys[: 1024 // 2])   # leave a partial batch pending
+    swap = svc.hot_swap(amq.make("cuckoo", config=svc.handle.config))
+    pause_us = swap["pause_s"] * 1e6
+    emit("lifecycle_hot_swap_pause", pause_us,
+         f"drained={swap['drained_ops']}")
+    survived = svc.query(keys).result()
+    assert survived.all(), "hot swap lost acknowledged inserts"
+    payload["hot_swap"] = {"pause_us": pause_us,
+                           "drained_ops": swap["drained_ops"]}
+
+    # Serving-rate context: how many op-batches the pause is worth.
+    batch = rand_keys(1024, seed=13)
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        svc.query(batch).result()
+    per_batch_us = (time.perf_counter() - t0) / reps * 1e6
+    emit("lifecycle_pause_in_batches", pause_us / max(per_batch_us, 1e-9),
+         f"{throughput_m_per_s(1024, per_batch_us)}_steady_state")
+    payload["hot_swap"]["pause_in_batches"] = pause_us / max(per_batch_us,
+                                                             1e-9)
+
+    emit_json("lifecycle", payload)

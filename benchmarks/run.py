@@ -25,6 +25,7 @@ from . import (
     expansion,
     fpr,
     kmer_case_study,
+    lifecycle,
     mixed_workload,
     roofline,
     sorted_insertion,
@@ -42,6 +43,7 @@ SUITES = {
     "s463": sorted_insertion.run,
     "expansion": expansion.run,
     "mixed": mixed_workload.run,
+    "lifecycle": lifecycle.run,
     "roofline": roofline.run,
 }
 

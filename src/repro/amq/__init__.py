@@ -20,6 +20,7 @@ from .protocol import (  # noqa: F401
     OP_DELETE,
     OP_INSERT,
     OP_QUERY,
+    SNAPSHOT_VERSION,
     AMQConfig,
     Capabilities,
     CascadeReport,
@@ -29,9 +30,13 @@ from .protocol import (  # noqa: F401
     MixedReport,
     OpBatch,
     QueryResult,
+    Snapshot,
+    SnapshotMismatchError,
     fpr_share,
     fpr_tolerance,
     load_factor,
+    load_snapshot,
+    save_snapshot,
 )
 
 _LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
@@ -40,8 +45,9 @@ _LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
 __all__ = list(_LAZY) + [
     "AMQConfig", "Capabilities", "CascadeReport", "DeleteReport",
     "InsertReport", "LevelStats", "MixedReport", "OpBatch", "OP_QUERY",
-    "OP_INSERT", "OP_DELETE", "QueryResult", "fpr_share",
-    "fpr_tolerance", "load_factor",
+    "OP_INSERT", "OP_DELETE", "QueryResult", "Snapshot",
+    "SnapshotMismatchError", "SNAPSHOT_VERSION", "fpr_share",
+    "fpr_tolerance", "load_factor", "load_snapshot", "save_snapshot",
 ]
 
 

@@ -81,6 +81,17 @@ class AMQAdapter:
     executing an interleaved query/insert/delete stream in one program.
     Required when ``capabilities.supports_mixed`` is True; backends
     without it are served by :func:`segmented_apply_ops`.
+
+    ``snapshot``/``restore`` are the lifecycle hooks (DESIGN.md §10):
+    ``snapshot(config, state) -> dict[str, np.ndarray]`` pulls the packed
+    state to host; ``restore(config, arrays) -> state`` places it back
+    under the *same* config (the handle validates the config fingerprint
+    before calling it). Both required when
+    ``capabilities.supports_snapshot`` is True. ``fingerprint`` overrides
+    the default config-identity string (:func:`config_fingerprint`) —
+    the sharded backend uses it to exclude placement (mesh, shard count)
+    from identity, which is what makes restore-onto-a-new-mesh and exact
+    resharding legal.
     """
 
     name: str
@@ -95,10 +106,79 @@ class AMQAdapter:
     jit: bool = True
     growth_sizings: Optional[tuple] = None
     grow_config: Optional[Callable[..., Any]] = None
+    snapshot: Optional[Callable[..., Any]] = None
+    restore: Optional[Callable[..., Any]] = None
+    fingerprint: Optional[Callable[[Any], str]] = None
 
 
 def _zero_stats(n):
     return jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle hooks (DESIGN.md §10): snapshot / restore / config fingerprints.
+# ---------------------------------------------------------------------------
+
+def default_fingerprint(config) -> str:
+    """Config identity for snapshot validation: the frozen-dataclass repr.
+
+    Every backend config is a frozen dataclass of primitives, so its repr
+    is deterministic and covers exactly the knobs that shape the packed
+    state (layout, hashes, seeds). Backends whose configs carry placement
+    state override this (see ``ShardedAMQConfig``).
+    """
+    return repr(config)
+
+
+def config_fingerprint(adapter: AMQAdapter, config) -> str:
+    """The adapter's fingerprint for ``config`` (custom hook or default)."""
+    fn = adapter.fingerprint or default_fingerprint
+    return fn(config)
+
+
+def state_snapshot(config, state) -> Dict[str, Any]:
+    """Generic snapshot: pull every field of a NamedTuple state to host."""
+    del config
+    return {f: np.asarray(getattr(state, f)) for f in state._fields}
+
+
+def _validated_state_arrays(config, arrays):
+    """Check snapshot arrays against the config's abstract state template.
+
+    The template comes from ``jax.eval_shape(config.init)`` — authoritative
+    shapes and dtypes with **no device allocation** (restore latency is a
+    tracked metric; materializing a zero table just to read its shapes
+    would double it). Returns ``(state_cls, host_arrays_in_field_order)``;
+    any disagreement raises
+    :class:`~repro.amq.protocol.SnapshotMismatchError`.
+    """
+    from .protocol import SnapshotMismatchError
+
+    template = jax.eval_shape(config.init)
+    missing = set(template._fields) - set(arrays)
+    if missing:
+        raise SnapshotMismatchError(
+            f"snapshot is missing state arrays {sorted(missing)} "
+            f"(has {sorted(arrays)})")
+    values = []
+    for f in template._fields:
+        t = getattr(template, f)
+        a = np.asarray(arrays[f])
+        if tuple(a.shape) != tuple(t.shape) or a.dtype != np.dtype(t.dtype):
+            raise SnapshotMismatchError(
+                f"state array {f!r}: snapshot has {a.dtype}"
+                f"{list(a.shape)}, config expects {np.dtype(t.dtype)}"
+                f"{list(t.shape)}")
+        values.append(a)
+    return type(template), values
+
+
+def state_restore(config, arrays):
+    """Generic restore: validate against the abstract template, place on
+    the default device(s). Backends whose state is mesh-placed provide a
+    custom hook (``_sharded_restore``)."""
+    state_cls, values = _validated_state_arrays(config, arrays)
+    return state_cls(*(jnp.asarray(a) for a in values))
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +302,7 @@ CUCKOO = AMQAdapter(
     name="cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
                               counting=True, supports_expand=True,
-                              supports_mixed=True),
+                              supports_mixed=True, supports_snapshot=True),
     make_config=_cuckoo_make_config,
     init=lambda cfg: cfg.init(),
     insert=_cuckoo_insert,
@@ -231,6 +311,8 @@ CUCKOO = AMQAdapter(
     delete=_cuckoo_delete,
     apply_ops=_cuckoo_apply_ops,
     growth_sizings=_CUCKOO_SIZINGS,
+    snapshot=state_snapshot,
+    restore=state_restore,
 )
 
 
@@ -254,13 +336,15 @@ def _bloom_query(config, state, keys, *, valid=None):
 BLOOM = AMQAdapter(
     name="bloom",
     capabilities=Capabilities(supports_delete=False, counting=False,
-                              supports_expand=True),
+                              supports_expand=True, supports_snapshot=True),
     make_config=lambda capacity, **kw: BB.BloomConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_bloom_insert,
     query=_bloom_query,
     growth_sizings=_BLOOM_SIZINGS,
+    snapshot=state_snapshot,
+    restore=state_restore,
 )
 
 
@@ -288,13 +372,16 @@ def _tcf_delete(config, state, keys, *, valid=None):
 
 TCF = AMQAdapter(
     name="tcf",
-    capabilities=Capabilities(supports_delete=True, counting=True),
+    capabilities=Capabilities(supports_delete=True, counting=True,
+                              supports_snapshot=True),
     make_config=lambda capacity, **kw: TC.TCFConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
     insert=_tcf_insert,
     query=_tcf_query,
     delete=_tcf_delete,
+    snapshot=state_snapshot,
+    restore=state_restore,
 )
 
 
@@ -323,7 +410,8 @@ def _gqf_delete(config, state, keys, *, valid=None):
 GQF = AMQAdapter(
     name="gqf",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              serial_insert=True, supports_expand=True),
+                              serial_insert=True, supports_expand=True,
+                              supports_snapshot=True),
     make_config=lambda capacity, **kw: QF.GQFConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
@@ -331,6 +419,8 @@ GQF = AMQAdapter(
     query=_gqf_query,
     delete=_gqf_delete,
     growth_sizings=_GQF_SIZINGS,
+    snapshot=state_snapshot,
+    restore=state_restore,
 )
 
 
@@ -359,7 +449,8 @@ def _bcht_delete(config, state, keys, *, valid=None):
 BCHT = AMQAdapter(
     name="bcht",
     capabilities=Capabilities(supports_delete=True, counting=True,
-                              exact=True, supports_expand=True),
+                              exact=True, supports_expand=True,
+                              supports_snapshot=True),
     make_config=lambda capacity, **kw: HT.BCHTConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
@@ -367,6 +458,8 @@ BCHT = AMQAdapter(
     query=_bcht_query,
     delete=_bcht_delete,
     growth_sizings=({},),  # exact: any level trivially meets its FPR share
+    snapshot=state_snapshot,
+    restore=state_restore,
 )
 
 
@@ -407,10 +500,39 @@ class ShardedAMQConfig:
             self.inner.init(),
             NamedSharding(self.mesh, P(self.inner.axis_name)))
 
+    def resharded(self, num_shards: Optional[int] = None, *,
+                  mesh: Any = None,
+                  axis_name: Optional[str] = None) -> "ShardedAMQConfig":
+        """The same filter over a different device set — exactly.
+
+        Key→partition is fixed (``SF.partition_of`` hashes modulo the
+        partition count, never the device count), so only the
+        partition→device placement changes: a state restored under the
+        resharded config answers every query bit-for-bit identically
+        (DESIGN.md §10). Pass ``num_shards`` (a divisor of the partition
+        count; a default mesh of that size is derived) and/or an explicit
+        new ``mesh``.
+        """
+        ax = axis_name or self.inner.axis_name
+        if mesh is None and num_shards is None:
+            mesh, num_shards = _default_mesh(ax, None)
+        elif num_shards is None:
+            num_shards = mesh.shape[ax]
+        # Validate the partition math first: a divisibility error should
+        # name partitions, not fail while deriving a default mesh.
+        inner = self.inner.resharded(num_shards, axis_name=axis_name)
+        if mesh is None:
+            mesh, _ = _default_mesh(ax, num_shards)
+        return ShardedAMQConfig(inner, mesh)
+
 
 def _default_mesh(axis_name: str, num_shards: Optional[int]):
     devices = jax.devices()
     n = num_shards or len(devices)
+    if n > len(devices):
+        raise ValueError(
+            f"num_shards={n} exceeds the {len(devices)} available "
+            "device(s); pass an explicit mesh= spanning the target devices")
     return jax.sharding.Mesh(np.asarray(devices[:n]), (axis_name,)), n
 
 
@@ -484,6 +606,33 @@ def _sharded_apply_ops(config, state, keys, ops, *, valid=None):
     return state, MixedReport(ok, routed, *_zero_stats(n))
 
 
+def _sharded_restore(config: ShardedAMQConfig, arrays):
+    """Sharded restore: validated arrays placed along the config's mesh.
+
+    The partition axis is re-placed under the *target* config's mesh and
+    shard count — which may differ from the snapshot's, since the sharded
+    fingerprint excludes placement: this is the exact-reshard path.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state_cls, values = _validated_state_arrays(config, arrays)
+    sharding = NamedSharding(config.mesh, P(config.inner.axis_name))
+    return state_cls(*(jax.device_put(a, sharding) for a in values))
+
+
+def _sharded_fingerprint(config: ShardedAMQConfig) -> str:
+    """Sharded config identity: per-partition filter + partition count.
+
+    Placement (mesh, shard count, axis name) and routing overprovision are
+    deliberately *excluded*: they shape where partitions live, not what
+    they contain — which is exactly what licenses snapshot-restore onto a
+    new mesh / shard count as the zero-membership-change migration path
+    (DESIGN.md §10).
+    """
+    inner = config.inner
+    return f"sharded-cuckoo[P={inner.partitions}]:{inner.shard!r}"
+
+
 def _sharded_grow_config(prev: ShardedAMQConfig, factor: float,
                          **overlay) -> ShardedAMQConfig:
     """Next cascade level: grow the per-shard filter, keep the *same* mesh.
@@ -501,7 +650,8 @@ SHARDED_CUCKOO = AMQAdapter(
     name="sharded-cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
                               supports_sharding=True, counting=True,
-                              supports_expand=True, supports_mixed=True),
+                              supports_expand=True, supports_mixed=True,
+                              supports_snapshot=True),
     make_config=_sharded_make_config,
     init=lambda cfg: cfg.init(),
     insert=_sharded_insert,
@@ -512,6 +662,9 @@ SHARDED_CUCKOO = AMQAdapter(
     jit=False,  # ops are shard_map programs jitted per batch shape above
     growth_sizings=_CUCKOO_SIZINGS,  # fp_bits flows to the per-shard config
     grow_config=_sharded_grow_config,
+    snapshot=state_snapshot,
+    restore=_sharded_restore,
+    fingerprint=_sharded_fingerprint,
 )
 
 
@@ -583,11 +736,44 @@ def _py_apply_ops(config, state, keys, ops, *, valid=None):
                               np.zeros((n,), np.int32), np.zeros((), np.int32))
 
 
+def _py_snapshot(config, state) -> Dict[str, Any]:
+    """Oracle snapshot: the bucket grid + count as plain arrays.
+
+    The eviction RNG's position is not captured — snapshots preserve
+    *membership* exactly; future insert eviction choices may differ from a
+    never-snapshotted oracle (irrelevant to correctness, which never
+    depends on which victim a cuckoo walk picks).
+    """
+    del config
+    return {"buckets": np.asarray(state.buckets, np.uint32),
+            "count": np.asarray(state.count, np.int64)}
+
+
+def _py_restore(config, arrays):
+    from .protocol import SnapshotMismatchError
+
+    filt = config.init()
+    want = (config.num_buckets, config.bucket_size)
+    buckets = np.asarray(arrays.get("buckets"))
+    if "buckets" not in arrays or tuple(buckets.shape) != want:
+        raise SnapshotMismatchError(
+            f"state array 'buckets': snapshot has "
+            f"{None if 'buckets' not in arrays else list(buckets.shape)}, "
+            f"config expects {list(want)}")
+    if "count" not in arrays:
+        raise SnapshotMismatchError(
+            "snapshot is missing state array 'count' "
+            f"(has {sorted(arrays)})")
+    filt.buckets = [[int(t) for t in row] for row in buckets]
+    filt.count = int(arrays["count"])
+    return filt
+
+
 CPU_CUCKOO = AMQAdapter(
     name="cpu-cuckoo",
     capabilities=Capabilities(supports_delete=True, counting=True,
                               serial_insert=True, supports_expand=True,
-                              supports_mixed=True),
+                              supports_mixed=True, supports_snapshot=True),
     make_config=lambda capacity, **kw: PYREF.PyCuckooConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
@@ -597,6 +783,8 @@ CPU_CUCKOO = AMQAdapter(
     apply_ops=_py_apply_ops,
     jit=False,
     growth_sizings=_CUCKOO_SIZINGS,
+    snapshot=_py_snapshot,
+    restore=_py_restore,
 )
 
 

@@ -50,7 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .adapters import AMQAdapter, segmented_apply_ops
+from ..core.hashing import normalize_keys
+from .adapters import AMQAdapter, config_fingerprint, segmented_apply_ops
 from .handle import FilterHandle
 from .protocol import (
     OP_INSERT,
@@ -61,6 +62,8 @@ from .protocol import (
     MixedReport,
     OpBatch,
     QueryResult,
+    Snapshot,
+    SnapshotMismatchError,
     fpr_share,
 )
 
@@ -140,6 +143,7 @@ class CascadeHandle:
         self.fpr_budget = float(fpr_budget)
         self.levels: list = []
         self._shares: list = []
+        self._alloc_ids: list = []  # allocation index per live level
         self._allocated = 0     # monotonic: shares keep decaying past churn
         self._query_fn = None   # (configs tuple, jitted fan) for the live set
         self._grow()
@@ -255,8 +259,108 @@ class CascadeHandle:
                               self._config_for(capacity, share, prev))
         self.levels.append(handle)
         self._shares.append(share)
+        self._alloc_ids.append(i)
         self._allocated += 1
         return True
+
+    # -- lifecycle (DESIGN.md §10) -------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Snapshot *all live levels* as one versioned host-side payload.
+
+        Level ``i``'s state arrays are stored under ``level<i>/`` names;
+        ``meta["levels"]`` records each level's config fingerprint, FPR
+        share, and allocation index, so :meth:`restore` can rebuild the
+        exact level stack (and fail loudly on any drift).
+
+        Example::
+
+            >>> snap = cascade.snapshot()
+            >>> twin = amq.make(cascade.name, capacity=cascade.base_capacity,
+            ...                 auto_expand=True, snapshot=snap)
+        """
+        if not self.adapter.capabilities.supports_snapshot:
+            raise NotImplementedError(
+                f"{self.name}: state cannot be snapshotted "
+                "(capabilities.supports_snapshot is False)")
+        arrays, levels = {}, []
+        for i, lvl in enumerate(self.levels):
+            for k, v in self.adapter.snapshot(lvl.config, lvl.state).items():
+                arrays[f"level{i}/{k}"] = v
+            levels.append({
+                "fingerprint": config_fingerprint(self.adapter, lvl.config),
+                "share": self._shares[i],
+                "alloc_index": self._alloc_ids[i],
+                "count": lvl.count(),
+            })
+        meta = {"levels": levels, "allocated": self._allocated,
+                "base_capacity": self.base_capacity, "growth": self.growth,
+                "watermark": self.watermark, "fpr_budget": self.fpr_budget,
+                "split_ratio": self.split_ratio, "count": self.count()}
+        return Snapshot(backend=self.name, kind="cascade", fingerprint="",
+                        arrays=arrays, meta=meta,
+                        configs=tuple(lvl.config for lvl in self.levels))
+
+    def restore(self, snap: Snapshot) -> "CascadeHandle":
+        """Rebuild every live level from a cascade snapshot — validated.
+
+        Level configs come from the snapshot itself when it was taken in
+        this process (``snap.configs``); file-loaded snapshots re-derive
+        them by replaying the cascade's deterministic level sizing (same
+        ``capacity``/``growth``/sizing kwargs as at save time) and verify
+        each against the recorded fingerprint — any disagreement (different
+        ctor args, a ``grow_config`` chain broken by compaction) raises
+        :class:`~repro.amq.protocol.SnapshotMismatchError` instead of
+        restoring a mismatched table. Returns ``self``.
+        """
+        if snap.kind != "cascade":
+            raise SnapshotMismatchError(
+                f"cannot restore a {snap.kind!r} snapshot onto a cascade "
+                "(static-filter snapshots restore onto FilterHandles)")
+        if snap.backend != self.name:
+            raise SnapshotMismatchError(
+                f"snapshot is from backend {snap.backend!r}, "
+                f"this cascade is {self.name!r}")
+        meta = snap.meta
+        for knob in ("base_capacity", "growth", "split_ratio",
+                     "watermark", "fpr_budget"):
+            if getattr(self, knob) != meta[knob]:
+                raise SnapshotMismatchError(
+                    f"cascade {knob} mismatch: snapshot has {meta[knob]}, "
+                    f"this handle was built with {getattr(self, knob)}")
+        levels_meta = meta["levels"]
+        configs = snap.configs
+        if not configs:  # file-loaded: replay the deterministic sizing
+            configs, prev = [], None
+            for lm in levels_meta:
+                i = lm["alloc_index"]
+                capacity = max(1, int(round(
+                    self.base_capacity * self.growth ** i)))
+                cfg = self._config_for(capacity, lm["share"], prev)
+                configs.append(cfg)
+                prev = cfg
+        if len(configs) != len(levels_meta):
+            raise SnapshotMismatchError(
+                f"snapshot carries {len(configs)} level configs for "
+                f"{len(levels_meta)} recorded levels")
+        levels = []
+        for i, (cfg, lm) in enumerate(zip(configs, levels_meta)):
+            got = config_fingerprint(self.adapter, cfg)
+            if got != lm["fingerprint"]:
+                raise SnapshotMismatchError(
+                    f"level {i} config fingerprint mismatch:\n"
+                    f"  snapshot: {lm['fingerprint']}\n  rebuilt:  {got}")
+            prefix = f"level{i}/"
+            arrays = {k[len(prefix):]: v for k, v in snap.arrays.items()
+                      if k.startswith(prefix)}
+            state = self.adapter.restore(cfg, arrays)
+            levels.append(FilterHandle(self.adapter, cfg, state))
+        self.levels = levels
+        self._shares = [lm["share"] for lm in levels_meta]
+        self._alloc_ids = [lm["alloc_index"] for lm in levels_meta]
+        self._allocated = meta["allocated"]
+        self._query_fn = None
+        return self
 
     # -- ops -----------------------------------------------------------------
 
@@ -279,6 +383,7 @@ class CascadeHandle:
             >>> bool(report.ok.all())      # doctest: +SKIP
             True
         """
+        keys = normalize_keys(keys)
         n = int(keys.shape[0])
         pending = _mask(keys, valid)
         ok = np.zeros((n,), bool)
@@ -326,6 +431,7 @@ class CascadeHandle:
 
             >>> hits = h.query(keys).hits
         """
+        keys = normalize_keys(keys)
         if self.adapter.jit:
             configs = tuple(lvl.config for lvl in self.levels)
             states = tuple(lvl.state for lvl in self.levels)
@@ -379,6 +485,7 @@ class CascadeHandle:
             raise NotImplementedError(
                 f"{self.name}: append-only structure "
                 "(capabilities.supports_delete is False)")
+        keys = normalize_keys(keys)
         n = int(keys.shape[0])
         pending = _mask(keys, valid)
         ok = np.zeros((n,), bool)
@@ -453,12 +560,15 @@ class CascadeHandle:
             >>> h.delete(keys)             # drain a level ...
             >>> report = h.compact()       # ... and free it
         """
-        live = [(lvl, share) for lvl, share in zip(self.levels, self._shares)
+        live = [(lvl, share, aid) for lvl, share, aid
+                in zip(self.levels, self._shares, self._alloc_ids)
                 if lvl.count() > 0]
         if live:
-            self.levels = [lvl for lvl, _ in live]
-            self._shares = [share for _, share in live]
+            self.levels = [lvl for lvl, _, _ in live]
+            self._shares = [share for _, share, _ in live]
+            self._alloc_ids = [aid for _, _, aid in live]
         else:
-            self.levels, self._shares, self._allocated = [], [], 0
+            self.levels, self._shares, self._alloc_ids = [], [], []
+            self._allocated = 0
             self._grow()
         return self.report()

@@ -16,7 +16,12 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from .adapters import AMQAdapter, segmented_apply_ops
+from ..core.hashing import normalize_keys
+from .adapters import (
+    AMQAdapter,
+    config_fingerprint,
+    segmented_apply_ops,
+)
 from .protocol import (
     Capabilities,
     DeleteReport,
@@ -24,8 +29,28 @@ from .protocol import (
     MixedReport,
     OpBatch,
     QueryResult,
+    Snapshot,
+    SnapshotMismatchError,
     load_factor as _load_factor,
 )
+
+
+def _check_snapshot_target(adapter: AMQAdapter, config: Any,
+                           snap: Snapshot) -> None:
+    """Validate that ``snap`` may restore onto (adapter, config) — loudly."""
+    if snap.kind != "filter":
+        raise SnapshotMismatchError(
+            f"cannot restore a {snap.kind!r} snapshot onto a static "
+            "FilterHandle (cascade snapshots restore onto cascades)")
+    if snap.backend != adapter.name:
+        raise SnapshotMismatchError(
+            f"snapshot is from backend {snap.backend!r}, "
+            f"this handle is {adapter.name!r}")
+    fp = config_fingerprint(adapter, config)
+    if snap.fingerprint != fp:
+        raise SnapshotMismatchError(
+            f"config fingerprint mismatch:\n  snapshot: "
+            f"{snap.fingerprint}\n  target:   {fp}")
 
 
 class FilterHandle:
@@ -128,7 +153,8 @@ class FilterHandle:
                     "(capabilities.supports_bulk is False)")
             op = "insert_bulk"
         fn = self._fn(op, dedup_within_batch=dedup_within_batch)
-        self.state, report = fn(self.state, keys, valid=valid)
+        self.state, report = fn(self.state, normalize_keys(keys),
+                                valid=valid)
         return report
 
     def query(self, keys, *, valid=None) -> QueryResult:
@@ -138,7 +164,8 @@ class FilterHandle:
 
             >>> hits = handle.query(keys).hits  # bool[n]
         """
-        _, result = self._fn("query")(self.state, keys, valid=valid)
+        _, result = self._fn("query")(self.state, normalize_keys(keys),
+                                      valid=valid)
         return result
 
     def delete(self, keys, *, valid=None) -> DeleteReport:
@@ -154,7 +181,8 @@ class FilterHandle:
             raise NotImplementedError(
                 f"{self.name}: append-only structure "
                 "(capabilities.supports_delete is False)")
-        self.state, report = self._fn("delete")(self.state, keys, valid=valid)
+        self.state, report = self._fn("delete")(
+            self.state, normalize_keys(keys), valid=valid)
         return report
 
     def apply_ops(self, batch: OpBatch) -> MixedReport:
@@ -184,3 +212,87 @@ class FilterHandle:
         """Stored-key count (summed across shards where applicable)."""
         c = getattr(self.state, "count")
         return int(np.sum(np.asarray(c)))
+
+    # -- lifecycle (DESIGN.md §10) -------------------------------------------
+
+    @property
+    def fingerprint(self) -> str:
+        """This handle's config-identity string (snapshot compatibility)."""
+        return config_fingerprint(self.adapter, self.config)
+
+    def snapshot(self) -> Snapshot:
+        """Pull the filter state to host as a versioned :class:`Snapshot`.
+
+        The payload (config fingerprint + packed table arrays) survives
+        process restarts (:func:`repro.amq.save_snapshot`), restores onto
+        any handle whose config fingerprint matches — including, for the
+        sharded backend, a different mesh or shard count — and feeds
+        :meth:`repro.amq.FilterService.hot_swap`.
+
+        Example::
+
+            >>> snap = handle.snapshot()
+            >>> twin = amq.make(handle.name, config=handle.config,
+            ...                 snapshot=snap)      # bit-exact replica
+        """
+        if not self.adapter.capabilities.supports_snapshot:
+            raise NotImplementedError(
+                f"{self.name}: state cannot be snapshotted "
+                "(capabilities.supports_snapshot is False)")
+        arrays = self.adapter.snapshot(self.config, self.state)
+        return Snapshot(
+            backend=self.name, kind="filter", fingerprint=self.fingerprint,
+            arrays=arrays,
+            meta={"count": self.count(),
+                  "num_slots": int(self.config.num_slots),
+                  "table_bytes": int(self.config.table_bytes)},
+            configs=(self.config,))
+
+    def restore(self, snap: Snapshot) -> "FilterHandle":
+        """Replace this handle's state with a snapshot's — validated.
+
+        The snapshot must come from the same backend and a config with an
+        identical fingerprint; anything else raises
+        :class:`~repro.amq.protocol.SnapshotMismatchError` (a partial-key
+        table is meaningless under different hashes/layout). Returns
+        ``self`` for chaining.
+        """
+        _check_snapshot_target(self.adapter, self.config, snap)
+        self.state = self.adapter.restore(self.config, snap.arrays)
+        return self
+
+    @classmethod
+    def from_snapshot(cls, adapter: AMQAdapter, config: Any,
+                      snap: Snapshot) -> "FilterHandle":
+        """Build a handle whose initial state *is* the snapshot's.
+
+        Equivalent to ``FilterHandle(adapter, config).restore(snap)`` but
+        without allocating (and immediately discarding) a fresh zero
+        table first — restore latency is a tracked serving metric.
+        """
+        _check_snapshot_target(adapter, config, snap)
+        return cls(adapter, config, adapter.restore(config, snap.arrays))
+
+    def resharded(self, num_shards: Optional[int] = None,
+                  **kw) -> "FilterHandle":
+        """Exact reshard: the same filter on a different device layout.
+
+        Only meaningful for backends whose config exposes a ``resharded``
+        hook (the mesh-sharded cuckoo filter): returns a *new* handle
+        whose state holds the same partitions re-placed over ``num_shards``
+        devices (or an explicit ``mesh=``), with zero membership change —
+        the config fingerprint deliberately excludes placement, so the
+        snapshot round-trip is legal by construction (DESIGN.md §10).
+
+        Example::
+
+            >>> h2 = h.resharded(num_shards=2)     # K -> K' migration
+            >>> svc.hot_swap(h2)                   # and into service
+        """
+        hook = getattr(self.config, "resharded", None)
+        if hook is None:
+            raise NotImplementedError(
+                f"{self.name}: backend config has no resharding surface "
+                "(only mesh-sharded backends relocate partitions)")
+        return FilterHandle.from_snapshot(
+            self.adapter, hook(num_shards, **kw), self.snapshot())

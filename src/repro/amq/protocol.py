@@ -25,6 +25,7 @@ import dataclasses
 from typing import NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +58,13 @@ class Capabilities:
       without it still accept ``OpBatch``\\ es through the handle — the
       generic fallback segments the batch into maximal same-op runs and
       replays the per-op entry points, at one dispatch per run.
+    * ``supports_snapshot`` — filter state round-trips through a versioned
+      host-side :class:`Snapshot` (config fingerprint + packed table
+      arrays): ``handle.snapshot()`` / ``handle.restore(snap)`` survive
+      process restarts, move between meshes, and feed the serving layer's
+      zero-downtime ``hot_swap`` (DESIGN.md §10). Restoring onto a
+      mismatched config raises :class:`SnapshotMismatchError` — loudly,
+      never a silently-corrupt table.
     """
 
     supports_delete: bool = True
@@ -67,6 +75,7 @@ class Capabilities:
     serial_insert: bool = False
     supports_expand: bool = False
     supports_mixed: bool = False
+    supports_snapshot: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +89,45 @@ OP_INSERT = 1
 OP_DELETE = 2
 
 OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete"}
+
+
+def normalize_ops(ops, n: int, *, arg: str = "ops"):
+    """Validate an op-code channel against its ``n``-key batch.
+
+    The one ops-boundary check shared by :meth:`OpBatch.make` and
+    ``FilterService.submit`` (so the two cannot drift): integer dtype,
+    length ``n``, codes in ``{OP_QUERY, OP_INSERT, OP_DELETE}`` — value
+    checks run whenever the array is concrete (host-side; inside jit only
+    shape/dtype apply). Returns int32[n] (numpy for host inputs, the
+    traced array inside jit). Raises ``ValueError`` naming ``arg``.
+    """
+    from ..core.hashing import _is_tracer
+
+    if _is_tracer(ops):
+        ops = jnp.asarray(ops, jnp.int32)
+        if ops.shape != (n,):
+            raise ValueError(
+                f"{arg}: shape {tuple(ops.shape)} — expected ({n},) to "
+                f"match {n} keys")
+        return ops
+    arr = np.asarray(ops)
+    # Bool arrays are rejected on purpose: a hits/valid mask passed as
+    # ops would otherwise silently become QUERY/INSERT codes.
+    if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{arg}: expected integer op codes, got dtype {arr.dtype}")
+    if arr.shape != (n,):
+        raise ValueError(
+            f"{arg}: shape {tuple(arr.shape)} — expected ({n},), one op "
+            f"code per key")
+    # Range-check in the ORIGINAL dtype: casting first would wrap
+    # out-of-int32-range garbage (e.g. 2**32) onto valid codes.
+    if arr.size and ((arr < OP_QUERY) | (arr > OP_DELETE)).any():
+        bad = arr[(arr < OP_QUERY) | (arr > OP_DELETE)][0]
+        raise ValueError(
+            f"{arg}: unknown op code {int(bad)} (valid codes: "
+            f"{OP_QUERY}=query, {OP_INSERT}=insert, {OP_DELETE}=delete)")
+    return arr.astype(np.int32)
 
 
 class OpBatch(NamedTuple):
@@ -104,12 +152,27 @@ class OpBatch(NamedTuple):
 
     @staticmethod
     def make(keys, ops, valid=None) -> "OpBatch":
-        """Normalize (keys, ops[, valid]) into a well-typed batch."""
-        keys = jnp.asarray(keys, jnp.uint32)
-        ops = jnp.asarray(ops, jnp.int32)
-        if ops.shape != (keys.shape[0],):
-            raise ValueError(
-                f"ops shape {ops.shape} does not match {keys.shape[0]} keys")
+        """Normalize (keys, ops[, valid]) into a well-typed batch.
+
+        ``keys`` may be raw ``uint64[n]`` or packed ``uint32[n, 2]`` pairs
+        (the key-format contract — see ``repro.core.hashing.
+        normalize_keys``); ``ops`` must be integer op codes in
+        ``{OP_QUERY, OP_INSERT, OP_DELETE}`` and ``valid`` a bool-like
+        ``[n]`` mask. Malformed arguments raise ``ValueError`` naming the
+        offending argument; op-code *values* are checked whenever the array
+        is concrete (host-side callers — inside jit the check is skipped,
+        shapes/dtypes still apply).
+        """
+        from ..core.hashing import normalize_keys
+
+        keys = jnp.asarray(normalize_keys(keys, arg="keys"), jnp.uint32)
+        ops = jnp.asarray(normalize_ops(ops, keys.shape[0]), jnp.int32)
+        if valid is not None:
+            vshape = tuple(getattr(valid, "shape", np.shape(valid)))
+            if vshape != (keys.shape[0],):
+                raise ValueError(
+                    f"valid: shape {vshape} does not match "
+                    f"{keys.shape[0]} keys (want a bool[n] mask)")
         return OpBatch(keys, ops, ensure_valid(keys, valid))
 
     @property
@@ -282,6 +345,102 @@ def fpr_share(budget: float, level: int, ratio: float = 0.5) -> float:
     if not 0.0 < ratio < 1.0:
         raise ValueError(f"fpr split ratio must be in (0, 1), got {ratio}")
     return budget * (1.0 - ratio) * ratio ** level
+
+
+# ---------------------------------------------------------------------------
+# Filter-state lifecycle: versioned host-side snapshots (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+SNAPSHOT_VERSION = 1
+"""Format version stamped into every :class:`Snapshot` (and snapshot file).
+
+Bump when the payload layout changes; ``restore`` refuses newer versions
+loudly instead of misreading them.
+"""
+
+
+class SnapshotMismatchError(ValueError):
+    """A snapshot does not fit its restore target.
+
+    Raised when backend names, config fingerprints, format versions, or
+    array shapes/dtypes disagree — a partial-key filter state is only
+    meaningful under the exact config (hashes, layout, placement) that
+    built it, so a mismatched restore must fail loudly rather than produce
+    a silently-corrupt table.
+    """
+
+
+class Snapshot(NamedTuple):
+    """Versioned host-side filter-state payload (DESIGN.md §10).
+
+    * ``backend`` — registry name of the producing backend.
+    * ``kind`` — ``"filter"`` (one static handle) or ``"cascade"`` (all
+      live levels of a :class:`~repro.amq.cascade.CascadeHandle`).
+    * ``fingerprint`` — the producing config's identity string (see
+      ``repro.amq.adapters.config_fingerprint``); restore targets must
+      match it exactly. Cascade snapshots keep per-level fingerprints in
+      ``meta["levels"]`` instead.
+    * ``arrays`` — ``name -> numpy array``: the packed state, pulled to
+      host (cascade levels prefix names with ``level<i>/``).
+    * ``meta`` — JSON-able descriptive payload (counts, level shares, ...).
+    * ``configs`` — the in-memory config objects the snapshot was taken
+      under (one per level; empty for file-loaded snapshots, which restore
+      onto a caller-built config after fingerprint validation).
+    * ``version`` — :data:`SNAPSHOT_VERSION` at creation time.
+    """
+
+    backend: str
+    kind: str
+    fingerprint: str
+    arrays: dict
+    meta: dict
+    configs: tuple = ()
+    version: int = SNAPSHOT_VERSION
+
+    @property
+    def nbytes(self) -> int:
+        """Total host-side payload size in bytes."""
+        return int(sum(a.nbytes for a in self.arrays.values()))
+
+
+def save_snapshot(path, snap: Snapshot) -> None:
+    """Persist a snapshot as an ``.npz`` (arrays + JSON header).
+
+    The in-memory ``configs`` tuple is deliberately *not* serialized:
+    a file restore rebuilds the config from code (the same ``amq.make``
+    call that created the filter) and the fingerprint check proves it
+    matches — so snapshot files contain only arrays and JSON, no pickled
+    code objects.
+    """
+    import json
+
+    header = {"version": snap.version, "backend": snap.backend,
+              "kind": snap.kind, "fingerprint": snap.fingerprint,
+              "meta": snap.meta}
+    np.savez(path, __header__=np.frombuffer(
+        json.dumps(header).encode(), np.uint8),
+        **{k: np.asarray(v) for k, v in snap.arrays.items()})
+
+
+def load_snapshot(path) -> Snapshot:
+    """Load a snapshot written by :func:`save_snapshot`.
+
+    The returned snapshot carries no ``configs``; restore it through a
+    handle built with the matching config (``amq.make(..., snapshot=...)``
+    or ``handle.restore``), which validates the fingerprint.
+    """
+    import json
+
+    with np.load(path) as z:
+        header = json.loads(bytes(z["__header__"]).decode())
+        arrays = {k: z[k] for k in z.files if k != "__header__"}
+    if header["version"] > SNAPSHOT_VERSION:
+        raise SnapshotMismatchError(
+            f"snapshot format v{header['version']} is newer than this "
+            f"library's v{SNAPSHOT_VERSION}; refusing to guess its layout")
+    return Snapshot(header["backend"], header["kind"],
+                    header["fingerprint"], arrays, header["meta"],
+                    (), header["version"])
 
 
 # ---------------------------------------------------------------------------

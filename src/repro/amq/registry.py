@@ -40,6 +40,11 @@ def _validate(adapter: AMQAdapter) -> None:
         raise ValueError(
             f"{adapter.name!r}: supports_mixed=True but no apply_ops op "
             "(the fused mixed-batch path it advertises)")
+    if caps.supports_snapshot and not (callable(adapter.snapshot)
+                                       and callable(adapter.restore)):
+        raise ValueError(
+            f"{adapter.name!r}: supports_snapshot=True but missing "
+            "snapshot/restore hooks (the lifecycle surface it advertises)")
 
 
 def register(adapter: AMQAdapter, *, overwrite: bool = False) -> None:
@@ -71,13 +76,18 @@ def names() -> Iterable[str]:
 
 
 def make(name: str, capacity: Optional[int] = None, *,
-         config: Any = None, state: Any = None,
+         config: Any = None, state: Any = None, snapshot: Any = None,
          auto_expand=False, **kw):
     """Build a ready-to-use filter handle.
 
     Either pass ``capacity`` (+ backend-specific sizing kwargs, forwarded to
     the adapter's ``make_config``) or a pre-built ``config``. ``state``
-    resumes from an existing state pytree (checkpoint restore).
+    resumes from an existing state pytree; ``snapshot`` restores a
+    :class:`~repro.amq.protocol.Snapshot` (taken with ``handle.snapshot()``
+    or loaded with :func:`~repro.amq.protocol.load_snapshot`) onto the
+    freshly built handle — the snapshot's config fingerprint must match
+    the config built here, else
+    :class:`~repro.amq.protocol.SnapshotMismatchError` (DESIGN.md §10).
 
     ``auto_expand=True`` returns a :class:`repro.amq.cascade.CascadeHandle`
     instead of a static :class:`FilterHandle`: ``capacity`` becomes the
@@ -100,6 +110,8 @@ def make(name: str, capacity: Optional[int] = None, *,
     adapter = get(name)
     if auto_expand == "auto":
         auto_expand = adapter.capabilities.supports_expand
+    if snapshot is not None and state is not None:
+        raise TypeError("pass state= or snapshot=, not both")
     if auto_expand:
         if config is not None or state is not None:
             raise TypeError(
@@ -109,7 +121,10 @@ def make(name: str, capacity: Optional[int] = None, *,
             raise TypeError("make(auto_expand=True) needs capacity=...")
         from .cascade import CascadeHandle
 
-        return CascadeHandle(adapter, capacity, **kw)
+        handle = CascadeHandle(adapter, capacity, **kw)
+        if snapshot is not None:
+            handle.restore(snapshot)
+        return handle
     if config is None:
         if capacity is None:
             raise TypeError("make() needs capacity=... or config=...")
@@ -117,4 +132,7 @@ def make(name: str, capacity: Optional[int] = None, *,
     elif capacity is not None or kw:
         extra = (["capacity"] if capacity is not None else []) + sorted(kw)
         raise TypeError(f"config= given; conflicting arguments {extra}")
+    if snapshot is not None:
+        # Build straight from the snapshot: no discarded fresh table.
+        return FilterHandle.from_snapshot(adapter, config, snapshot)
     return FilterHandle(adapter, config, state)

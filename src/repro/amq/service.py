@@ -25,6 +25,11 @@ dispatches. The service bridges the two (DESIGN.md §9):
 * **Scatter**: every submission returns a :class:`Ticket` that knows which
   slots of which micro-batches carry its ops; ``result()`` gathers exactly
   those slots back into per-client order, however the ops were interleaved.
+* **Hot swap** (DESIGN.md §10): :meth:`FilterService.hot_swap` drains the
+  pending stream onto the old backend, migrates its state onto a new
+  handle via snapshot/restore (including exact resharding onto a new mesh
+  or shard count), and resumes — zero-downtime capacity/topology changes;
+  no acknowledged operation is lost and issued tickets stay readable.
 
 Example::
 
@@ -38,12 +43,22 @@ Example::
 
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .protocol import OP_DELETE, OP_INSERT, OP_QUERY, MixedReport, OpBatch
+from ..core.hashing import normalize_keys
+from .protocol import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_QUERY,
+    MixedReport,
+    OpBatch,
+    normalize_ops,
+)
 
 
 class _Dispatch:
@@ -152,18 +167,15 @@ class FilterService:
     def submit(self, keys, ops) -> Ticket:
         """Append a client's op stream; returns its :class:`Ticket`.
 
-        ``keys``: uint32[m, 2]; ``ops``: int32[m] op codes. The ops join
-        the global stream in call order — coalescing never reorders.
+        ``keys``: raw ``uint64[m]`` or packed ``uint32[m, 2]`` pairs (the
+        key-format contract — see ``repro.core.hashing.normalize_keys``);
+        ``ops``: int32[m] op codes. The ops join the global stream in call
+        order — coalescing never reorders. Malformed arguments raise
+        ``ValueError`` naming the offending argument at the boundary,
+        before anything is enqueued.
         """
-        keys = np.asarray(keys, np.uint32)
-        ops = np.asarray(ops, np.int32).reshape(-1)
-        if keys.ndim != 2 or keys.shape[1] != 2:
-            raise ValueError(f"keys must be [n, 2] uint32, got {keys.shape}")
-        if keys.shape[0] != ops.shape[0]:
-            raise ValueError(
-                f"{keys.shape[0]} keys vs {ops.shape[0]} op codes")
-        if ((ops < OP_QUERY) | (ops > OP_DELETE)).any():
-            raise ValueError("unknown op code in submission")
+        keys = np.asarray(normalize_keys(keys, arg="keys"), np.uint32)
+        ops = np.asarray(normalize_ops(ops, keys.shape[0]), np.int32)
         if ((ops == OP_DELETE).any()
                 and not self.handle.capabilities.supports_delete):
             raise NotImplementedError(
@@ -201,6 +213,53 @@ class FilterService:
         """Dispatch every pending op now (the tail batch is padded)."""
         while self._pending:
             self._dispatch(min(self._pending, self.batch_size))
+
+    def hot_swap(self, new_handle, *, migrate: bool = True) -> dict:
+        """Swap the backing filter with zero downtime (DESIGN.md §10).
+
+        Sequence:
+
+        1. **drain** — every accepted-but-pending op is dispatched to the
+           *old* handle and the device is synced, so no acknowledged
+           operation is lost (tickets already issued keep their claims on
+           the old dispatches and stay readable forever);
+        2. **migrate** — the old handle's state moves to ``new_handle``
+           via the snapshot/restore path (``migrate=True``, the default).
+           Fingerprint-compatible targets include a same-config replica,
+           a sharded handle on a *different mesh or shard count* (exact
+           resharding — capacity/topology changes without dropping a key),
+           and a cascade built with the same knobs. Pass ``migrate=False``
+           to swap to a pre-populated handle (e.g. rebuilt offline from
+           the source of truth).
+        3. **resume** — subsequent submissions coalesce onto the new
+           handle; nothing about tickets or batching changes.
+
+        Returns swap stats: ``pause_s`` (wall-clock the service could not
+        accept dispatches), ``drained_ops``, ``migrated``, and the old/new
+        backend names. Mismatched migration targets raise
+        :class:`~repro.amq.protocol.SnapshotMismatchError` *before* the
+        swap — the service keeps running on the old handle.
+
+        Example::
+
+            >>> svc.hot_swap(old.resharded(num_shards=8))   # grow the mesh
+        """
+        t0 = time.perf_counter()
+        drained = self._pending
+        self.flush()
+        old = self.handle
+        # Sync: the old table(s) are fully materialized before migration
+        # (snapshot would block anyway; this also covers migrate=False).
+        for lvl in getattr(old, "levels", [old]):
+            state = getattr(lvl, "state", None)
+            if state is not None and hasattr(state, "_fields"):
+                jax.block_until_ready(tuple(state))
+        if migrate:
+            new_handle.restore(old.snapshot())
+        self.handle = new_handle
+        return {"pause_s": time.perf_counter() - t0,
+                "drained_ops": drained, "migrated": bool(migrate),
+                "old_backend": old.name, "new_backend": new_handle.name}
 
     def _flush_for(self, ticket: Ticket) -> None:
         if ticket._filled < ticket._n:

@@ -35,6 +35,11 @@ from .cuckoo_filter import (  # noqa: F401
     prepare_keys,
     query,
 )
-from .hashing import hash_key, keys_from_numpy, keys_to_numpy  # noqa: F401
+from .hashing import (  # noqa: F401
+    hash_key,
+    keys_from_numpy,
+    keys_to_numpy,
+    normalize_keys,
+)
 from .layout import BucketLayout  # noqa: F401
 from .policies import OffsetPolicy, XorPolicy, make_policy  # noqa: F401

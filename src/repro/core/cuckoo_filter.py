@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import layout as L
-from .hashing import fmix32, hash_key
+from .hashing import fmix32, hash_key, normalize_keys
 from .policies import make_policy
 
 _U32 = np.uint32
@@ -693,6 +693,9 @@ def apply_ops(
     for a key's own inserts, and both vanish below the design load.
     """
     n = keys.shape[0]
+    if n == 0:  # static: the segmented scans assume at least one slot
+        return state, jnp.zeros((0,), bool), InsertStats(
+            jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32))
     v = (jnp.ones((n,), bool) if valid is None else valid.astype(bool))
     ops = ops.astype(jnp.int32)
     is_ins = v & (ops == OP_INSERT)
@@ -841,7 +844,7 @@ class CuckooFilter:
         dd = (self._default_dedup if dedup_within_batch is None
               else dedup_within_batch)
         fn = self._op(insert_bulk if bulk else insert, dedup_within_batch=dd)
-        self.state, ok, stats = fn(self.state, keys)
+        self.state, ok, stats = fn(self.state, normalize_keys(keys))
         return ok, stats
 
     def insert_bulk(self, keys) -> Tuple[jnp.ndarray, InsertStats]:
@@ -854,17 +857,17 @@ class CuckooFilter:
         return self.insert(keys, bulk=True)
 
     def query(self, keys) -> jnp.ndarray:
-        return self._op(query)(self.state, keys)
+        return self._op(query)(self.state, normalize_keys(keys))
 
     def delete(self, keys) -> jnp.ndarray:
-        self.state, ok = self._op(delete)(self.state, keys)
+        self.state, ok = self._op(delete)(self.state, normalize_keys(keys))
         return ok
 
     def apply_ops(self, keys, ops, valid=None
                   ) -> Tuple[jnp.ndarray, InsertStats]:
         """Run an interleaved query/insert/delete stream in one fused pass."""
-        self.state, ok, stats = self._op(apply_ops)(self.state, keys, ops,
-                                                    valid)
+        self.state, ok, stats = self._op(apply_ops)(
+            self.state, normalize_keys(keys), ops, valid)
         return ok, stats
 
     @property

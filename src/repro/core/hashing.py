@@ -35,6 +35,18 @@ _U32 = np.uint32
 
 def keys_to_u64(keys: jnp.ndarray) -> b64.U64:
     """uint32[..., 2] (lo, hi) -> U64 pair."""
+    shape = getattr(keys, "shape", None)
+    dtype = getattr(keys, "dtype", None)
+    if shape is None or len(shape) < 1 or shape[-1] != 2:
+        raise ValueError(
+            f"keys must be uint32[..., 2] (lo, hi) pairs, got shape {shape}; "
+            "raw uint64[n] keys are accepted at the FilterHandle / OpBatch / "
+            "CuckooFilter boundaries (see repro.core.hashing.normalize_keys)")
+    if dtype is not None and np.dtype(dtype).itemsize > 4:
+        raise ValueError(
+            f"keys must be uint32[..., 2] (lo, hi) pairs, got dtype {dtype}: "
+            "casting 64-bit lanes to uint32 would silently truncate; split "
+            "them with repro.core.hashing.keys_from_numpy/normalize_keys")
     keys = jnp.asarray(keys, jnp.uint32)
     return (keys[..., 1], keys[..., 0])
 
@@ -59,6 +71,71 @@ def keys_to_numpy(keys) -> np.ndarray:
     arr = np.asarray(keys, np.uint32)
     return (arr[..., 0].astype(np.uint64)
             | (arr[..., 1].astype(np.uint64) << np.uint64(32)))
+
+
+def _is_tracer(x) -> bool:
+    """True for abstract jax values (inside jit/vmap) that cannot leave the
+    device program — normalize_keys then only checks shapes/dtypes."""
+    try:
+        import jax
+
+        return isinstance(x, jax.core.Tracer)
+    except (ImportError, AttributeError):  # pragma: no cover — old jax
+        return False
+
+
+def normalize_keys(keys, *, arg: str = "keys") -> np.ndarray:
+    """Normalize any accepted key batch form to the internal layout.
+
+    The public key-format contract (README "Key format"): filters accept
+
+    * raw ``uint64[n]`` keys (numpy arrays, Python int lists/tuples) — the
+      natural input form; split into (lo, hi) pairs host-side;
+    * already-packed ``uint32[n, 2]`` (lo, hi) pairs — the internal layout,
+      passed through (any 32-bit-or-narrower integer dtype is accepted).
+
+    Returns ``uint32[n, 2]`` (numpy for host inputs, the original array for
+    jax inputs so device residency is preserved). Raises ``ValueError``
+    naming ``arg`` for genuinely malformed shapes/dtypes instead of letting
+    the shape error surface deep inside a jitted eviction loop
+    (the former ``layout.py:184`` crash).
+    """
+    if (getattr(keys, "ndim", None) == 2 and keys.shape[-1] == 2
+            and getattr(keys, "dtype", None) == np.uint32):
+        return keys  # already the internal layout: no host round-trip
+    if _is_tracer(keys):  # device values: validate statically, never convert
+        if keys.ndim != 2 or keys.shape[-1] != 2 or keys.dtype.itemsize > 4:
+            raise ValueError(
+                f"{arg}: traced key batches must already be uint32[n, 2] "
+                f"(lo, hi) pairs, got {keys.dtype}{list(keys.shape)}")
+        return keys
+    if isinstance(keys, (list, tuple)):
+        try:
+            keys = np.asarray(keys, np.uint64)
+        except (OverflowError, TypeError, ValueError) as e:
+            raise ValueError(
+                f"{arg}: key values must fit uint64 ({e})") from None
+    arr = np.asarray(keys)
+    if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{arg}: expected an integer key batch (uint64[n] or "
+            f"uint32[n, 2]), got dtype {arr.dtype}")
+    if arr.ndim == 1:
+        if arr.dtype.itemsize <= 4:  # widen 32-bit scalars losslessly
+            arr = arr.astype(np.uint32).astype(np.uint64)
+        return keys_from_numpy(arr)
+    if arr.ndim == 2 and arr.shape[-1] == 2:
+        if arr.dtype.itemsize > 4:
+            if (arr >> 32).any():
+                raise ValueError(
+                    f"{arg}: [n, 2] key pairs carry 64-bit lane values — "
+                    "lanes must be 32-bit (lo, hi) halves "
+                    "(see repro.core.hashing.keys_from_numpy)")
+            arr = arr.astype(np.uint32)
+        return np.ascontiguousarray(arr, np.uint32)
+    raise ValueError(
+        f"{arg}: expected uint64[n] keys or uint32[n, 2] (lo, hi) pairs, "
+        f"got shape {list(arr.shape)} dtype {arr.dtype}")
 
 
 def xxhash64_u64(key: b64.U64, seed: int = 0) -> b64.U64:

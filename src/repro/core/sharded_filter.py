@@ -1,12 +1,21 @@
 """Mesh-sharded Cuckoo filter — the distributed scale-out layer.
 
-Partitioning scheme (DESIGN.md §5): one *independent* sub-filter per device
-along a mesh axis, shard chosen by a dedicated hash of the key. Both cuckoo
-candidate buckets of a key live in the same shard, so eviction chains never
-cross devices — the PCF partitioning of Schmidt et al. promoted to the
-accelerator mesh. Aggregate filter bandwidth scales linearly with devices
-(the TPU analogue of the paper's "saturate global memory bandwidth": here we
-saturate *n_devices x* HBM bandwidth).
+Partitioning scheme (DESIGN.md §5, refined in §10): the key space is hashed
+into a *fixed* number of independent sub-filter **partitions** (default: one
+per device), and each device along a mesh axis owns a contiguous block of
+whole partitions. Both cuckoo candidate buckets of a key live in the same
+partition, so eviction chains never cross devices — the PCF partitioning of
+Schmidt et al. promoted to the accelerator mesh. Aggregate filter bandwidth
+scales linearly with devices (the TPU analogue of the paper's "saturate
+global memory bandwidth": here we saturate *n_devices x* HBM bandwidth).
+
+Fixing the partition count (rather than hashing modulo the device count)
+is what makes the filter's *lifecycle* operations exact (DESIGN.md §10):
+key→partition never changes, so a K→K′ reshard or a migration to a new
+mesh relocates whole partitions — every packed word moves verbatim and
+membership answers are bit-for-bit preserved (:meth:`ShardedCuckooConfig.
+resharded`, :meth:`ShardedCuckooFilter.resharded`). Create filters with
+``partitions_per_shard > 1`` to leave resharding headroom.
 
 Routing is a fixed-capacity all-to-all (no data-dependent shapes — a
 straggler-mitigation requirement at scale, DESIGN.md §5): each device sorts
@@ -48,37 +57,69 @@ from .cuckoo_filter import delete as _delete
 from .cuckoo_filter import insert as _insert
 from .cuckoo_filter import insert_bulk as _insert_bulk
 from .cuckoo_filter import query as _query
-from .hashing import fmix32
+from .hashing import fmix32, normalize_keys
 
 _U32 = np.uint32
 _SHARD_SALT = _U32(0x51ED270C)
 
 
 class ShardedCuckooState(NamedTuple):
-    table: jnp.ndarray  # uint32[num_shards, num_words]  (sharded over axis)
-    count: jnp.ndarray  # int32[num_shards]
+    table: jnp.ndarray  # uint32[num_partitions, num_words] (sharded over axis)
+    count: jnp.ndarray  # int32[num_partitions]
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardedCuckooConfig:
-    shard: CuckooConfig          # per-shard filter config
+    """Mesh-sharded filter config: fixed partitions mapped onto devices.
+
+    The unit of distribution is the *partition* — an independent sub-filter
+    (``shard`` is its per-partition :class:`CuckooConfig`) owned by exactly
+    one device. ``num_partitions`` (default: ``num_shards``) is fixed at
+    creation and is what the routing hash is taken modulo, so it is baked
+    into the stored state; ``num_shards`` is merely how many devices the
+    partitions are currently spread over (device d owns the contiguous
+    partition range ``[d*P/K, (d+1)*P/K)``). Because key→partition never
+    changes, a K→K′ reshard (or a move to a new mesh) relocates whole
+    partitions — every packed word moves exactly, zero membership change
+    (:meth:`resharded`). Create with ``partitions_per_shard > 1`` to leave
+    resharding headroom (K′ must divide ``num_partitions``).
+    """
+
+    shard: CuckooConfig          # per-partition filter config
     num_shards: int
     axis_name: str = "data"
-    capacity_factor: float = 2.0  # bin capacity overprovision vs n/num_shards
+    capacity_factor: float = 2.0  # bin capacity overprovision vs n/partitions
+    num_partitions: Optional[int] = None  # default: one per shard
+
+    def __post_init__(self):
+        p, k = self.partitions, self.num_shards
+        if p % k:
+            raise ValueError(
+                f"num_partitions={p} must be divisible by "
+                f"num_shards={k} (each device owns P/K whole partitions)")
+
+    @property
+    def partitions(self) -> int:
+        return self.num_partitions or self.num_shards
+
+    @property
+    def partitions_per_shard(self) -> int:
+        return self.partitions // self.num_shards
 
     def bin_capacity(self, local_batch: int) -> int:
-        cap = int(np.ceil(local_batch / self.num_shards * self.capacity_factor))
+        cap = int(np.ceil(
+            local_batch / self.partitions * self.capacity_factor))
         return max(8, cap)
 
     def init(self) -> ShardedCuckooState:
         lay = self.shard.layout
         return ShardedCuckooState(
-            jnp.zeros((self.num_shards, lay.num_words), jnp.uint32),
-            jnp.zeros((self.num_shards,), jnp.int32))
+            jnp.zeros((self.partitions, lay.num_words), jnp.uint32),
+            jnp.zeros((self.partitions,), jnp.int32))
 
     @property
     def total_slots(self) -> int:
-        return self.num_shards * self.shard.num_slots
+        return self.partitions * self.shard.num_slots
 
     # -- AMQ protocol surface (repro.amq.protocol.AMQConfig) ----------------
     @property
@@ -87,30 +128,32 @@ class ShardedCuckooConfig:
 
     @property
     def table_bytes(self) -> int:
-        return self.num_shards * self.shard.table_bytes
+        return self.partitions * self.shard.table_bytes
 
     def expected_fpr(self, load_factor: float) -> float:
-        """Shards are independent same-config filters: FPR is the shard's."""
+        """Partitions are independent same-config filters: FPR is theirs."""
         return self.shard.expected_fpr(load_factor)
 
     @staticmethod
     def for_capacity(capacity: int, num_shards: int, load_factor: float = 0.95,
                      axis_name: str = "data", **kw) -> "ShardedCuckooConfig":
-        per_shard = int(np.ceil(capacity / num_shards))
         cf = kw.pop("capacity_factor", 2.0)
+        pps = kw.pop("partitions_per_shard", 1)
+        partitions = num_shards * pps
+        per_partition = int(np.ceil(capacity / partitions))
         return ShardedCuckooConfig(
-            CuckooConfig.for_capacity(per_shard, load_factor, **kw),
-            num_shards, axis_name, cf)
+            CuckooConfig.for_capacity(per_partition, load_factor, **kw),
+            num_shards, axis_name, cf, partitions)
 
     def grown(self, factor: float, *, fp_bits: Optional[int] = None
               ) -> "ShardedCuckooConfig":
         """Next cascade level's config: ``factor``-times the capacity.
 
-        Scales the per-shard filter while keeping the mesh topology
-        (``num_shards``, ``axis_name``, ``capacity_factor``) fixed, so all
-        levels of a cascade share one all-to-all routing pattern.
-        ``fp_bits`` optionally tightens the level's fingerprints to meet a
-        smaller FPR share (DESIGN.md §8).
+        Scales the per-partition filter while keeping the mesh topology
+        (``num_shards``, ``num_partitions``, ``axis_name``,
+        ``capacity_factor``) fixed, so all levels of a cascade share one
+        all-to-all routing pattern. ``fp_bits`` optionally tightens the
+        level's fingerprints to meet a smaller FPR share (DESIGN.md §8).
         """
         return ShardedCuckooConfig(
             CuckooConfig.for_capacity(
@@ -124,45 +167,80 @@ class ShardedCuckooConfig:
                 max_evictions=self.shard.max_evictions,
                 max_rounds=self.shard.max_rounds,
                 seed=self.shard.seed),
-            self.num_shards, self.axis_name, self.capacity_factor)
+            self.num_shards, self.axis_name, self.capacity_factor,
+            self.num_partitions)
+
+    def resharded(self, num_shards: int, *,
+                  axis_name: Optional[str] = None) -> "ShardedCuckooConfig":
+        """The same filter spread over ``num_shards`` devices — exactly.
+
+        Only the partition→device mapping changes; the partition count,
+        per-partition filter, and therefore every stored word stay fixed,
+        so a state restored under the resharded config answers every query
+        identically (DESIGN.md §10). ``num_shards`` must divide
+        ``num_partitions``.
+        """
+        p = self.partitions
+        if p % num_shards:
+            raise ValueError(
+                f"cannot reshard {p} partitions onto {num_shards} shards: "
+                "each device must own whole partitions (create the filter "
+                "with partitions_per_shard > 1 for resharding headroom)")
+        return ShardedCuckooConfig(
+            self.shard, num_shards,
+            self.axis_name if axis_name is None else axis_name,
+            self.capacity_factor, p)
+
+
+def partition_of(config: ShardedCuckooConfig,
+                 keys: jnp.ndarray) -> jnp.ndarray:
+    """Owner partition per key — a hash independent of in-partition hashes.
+
+    Taken modulo the *fixed* partition count, never the device count, so
+    key placement survives resharding.
+    """
+    mix = fmix32(keys[..., 0] ^ fmix32(keys[..., 1] ^ _SHARD_SALT))
+    return (mix % _U32(config.partitions)).astype(jnp.int32)
 
 
 def shard_of(config: ShardedCuckooConfig, keys: jnp.ndarray) -> jnp.ndarray:
-    """Owner shard per key — a hash independent of the in-shard hashes."""
-    mix = fmix32(keys[..., 0] ^ fmix32(keys[..., 1] ^ _SHARD_SALT))
-    return (mix % _U32(config.num_shards)).astype(jnp.int32)
+    """Owner device per key: its partition's current home."""
+    return partition_of(config, keys) // config.partitions_per_shard
 
 
 def _route(config: ShardedCuckooConfig, keys: jnp.ndarray, cap: int,
            valid: Optional[jnp.ndarray] = None):
-    """Local routing: sort keys into [num_shards, cap] bins.
+    """Local routing: sort keys into [num_partitions, cap] bins.
 
-    ``valid`` masks caller-side padding keys: they are given the ``S``
-    sentinel destination, sort past every real shard group, and never claim
-    a bin slot (so they cannot crowd out live keys).
+    ``valid`` masks caller-side padding keys: they are given the ``P``
+    sentinel destination, sort past every real partition group, and never
+    claim a bin slot (so they cannot crowd out live keys).
 
-    Returns (bins uint32[S, cap, 2], bin_valid bool[S, cap],
+    Returns (bins uint32[P, cap, 2], bin_valid bool[P, cap],
              order, dest_sorted, idx_in_group, routed_sorted, slot).
 
-    ``slot`` is the flat bin address per *sorted* key (``S*cap`` sentinel =
+    ``slot`` is the flat bin address per *sorted* key (``P*cap`` sentinel =
     unrouted); extra per-key channels (the mixed batch's op codes) are
     binned with the same scatter so they travel the identical all-to-all.
+    Partitions are contiguous per device, so reshaping the leading ``P``
+    axis to ``[num_shards, P/K * cap]`` is exactly the per-device exchange
+    layout.
     """
-    S = config.num_shards
+    P = config.partitions
     n = keys.shape[0]
-    dest = shard_of(config, keys)
+    dest = partition_of(config, keys)
     if valid is not None:
-        dest = jnp.where(valid.astype(bool), dest, S)
+        dest = jnp.where(valid.astype(bool), dest, P)
     order = jnp.argsort(dest, stable=True)
     dest_s = dest[order]
     keys_s = keys[order]
     first_of_group = jnp.searchsorted(dest_s, dest_s, side="left")
     idx_in_group = jnp.arange(n, dtype=jnp.int32) - first_of_group
-    routed = (idx_in_group < cap) & (dest_s < S)
-    slot = jnp.where(routed, dest_s * cap + idx_in_group, S * cap)
-    bins = jnp.zeros((S * cap, 2), jnp.uint32).at[slot].set(keys_s, mode="drop")
-    bin_valid = jnp.zeros((S * cap,), bool).at[slot].set(routed, mode="drop")
-    return (bins.reshape(S, cap, 2), bin_valid.reshape(S, cap),
+    routed = (idx_in_group < cap) & (dest_s < P)
+    slot = jnp.where(routed, dest_s * cap + idx_in_group, P * cap)
+    bins = jnp.zeros((P * cap, 2), jnp.uint32).at[slot].set(keys_s, mode="drop")
+    bin_valid = jnp.zeros((P * cap,), bool).at[slot].set(routed, mode="drop")
+    return (bins.reshape(P, cap, 2), bin_valid.reshape(P, cap),
             order, dest_s, idx_in_group, routed, slot)
 
 
@@ -178,68 +256,93 @@ def _make_sharded_op(config: ShardedCuckooConfig, op: str, local_batch: int,
                      dedup_within_batch: bool = False):
     """Build the per-device function for one op (runs under shard_map).
 
+    Each device owns ``p_local = P/K`` whole partitions; the filter op is
+    vmapped over them. Keys are binned per destination *partition*, the
+    ``P``-row bin stack reshaped to ``[K, p_local*cap]`` is exchanged with
+    one all-to-all (partitions are contiguous per device), and each
+    receiver regroups its ``K`` incoming blocks into per-partition key
+    streams.
+
     ``dedup_within_batch`` is globally correct because duplicates of a key
-    hash to the same owner shard: per-shard first-occurrence dedup IS
-    whole-batch dedup.
+    hash to the same owner partition: per-partition first-occurrence dedup
+    IS whole-batch dedup.
 
     ``op == "apply_ops"`` is the mixed-batch path: the per-key op codes are
     binned with the same scatter as the keys and travel the same
-    all-to-all, so every shard replays its slice of the interleaved stream
-    with ``cuckoo_filter.apply_ops``. In-batch order is preserved
-    end-to-end: all copies of a key land on its owner shard, the routing
-    sort is stable, and the exchange concatenates source devices in mesh
-    order — so same-key operations arrive in global batch order.
+    all-to-all, so every partition replays its slice of the interleaved
+    stream with ``cuckoo_filter.apply_ops``. In-batch order is preserved
+    end-to-end: all copies of a key land on its owner partition, the
+    routing sort is stable, and the regrouped exchange concatenates source
+    devices in mesh order — so same-key operations arrive in global batch
+    order.
     """
     cap = config.bin_capacity(local_batch)
     ax = config.axis_name
+    K = config.num_shards
+    p_local = config.partitions_per_shard
 
-    def fn(table, count, keys, valid, ops=None):
-        # table: [1, num_words] local shard; keys: [local_batch, 2]
-        state = CuckooState(table[0], count[0])
-        bins, bin_valid, order, dest_s, idxg, routed, slot = _route(
-            config, keys, cap, valid)
-        recv = jax.lax.all_to_all(bins, ax, split_axis=0, concat_axis=0,
+    def regroup(x):
+        # [K, p_local*cap, ...] received blocks -> [p_local, K*cap, ...]
+        # per-partition streams (source-device-major, preserving order).
+        x = x.reshape((K, p_local, cap) + x.shape[2:])
+        x = jnp.moveaxis(x, 1, 0)
+        return x.reshape((p_local, K * cap) + x.shape[3:])
+
+    def ungroup(x):
+        # inverse of regroup for result channels.
+        x = x.reshape((p_local, K, cap) + x.shape[2:])
+        x = jnp.moveaxis(x, 1, 0)
+        return x.reshape((K, p_local * cap) + x.shape[3:])
+
+    def exchange(x):
+        return jax.lax.all_to_all(x, ax, split_axis=0, concat_axis=0,
                                   tiled=False)
-        recv_valid = jax.lax.all_to_all(bin_valid, ax, split_axis=0,
-                                        concat_axis=0, tiled=False)
-        flat_keys = recv.reshape(-1, 2)
-        flat_valid = recv_valid.reshape(-1)
 
+    def per_partition(table, count, keys, valid, ops):
+        state = CuckooState(table, count)
         if op == "apply_ops":
-            S = config.num_shards
-            bin_ops = jnp.zeros((S * cap,), jnp.int32).at[slot].set(
-                ops.astype(jnp.int32)[order], mode="drop")
-            recv_ops = jax.lax.all_to_all(bin_ops.reshape(S, cap), ax,
-                                          split_axis=0, concat_axis=0,
-                                          tiled=False)
-            state, ok, _ = _apply_ops(config.shard, state, flat_keys,
-                                      recv_ops.reshape(-1),
-                                      valid=flat_valid)
+            state, ok, _ = _apply_ops(config.shard, state, keys, ops,
+                                      valid=valid)
         elif op == "insert":
-            state, ok, _ = _insert(config.shard, state, flat_keys,
-                                   valid=flat_valid,
+            state, ok, _ = _insert(config.shard, state, keys, valid=valid,
                                    dedup_within_batch=dedup_within_batch)
         elif op == "insert_bulk":
-            # The all-to-all already binned keys by owner shard; the bulk
-            # path's bucket-major sort composes on top of that binning
+            # The all-to-all already binned keys by owner partition; the
+            # bulk path's bucket-major sort composes on top of that binning
             # (DESIGN.md §6) — whole-bucket commits, residue to the loop.
-            state, ok, _ = _insert_bulk(config.shard, state, flat_keys,
-                                        valid=flat_valid,
+            state, ok, _ = _insert_bulk(config.shard, state, keys,
+                                        valid=valid,
                                         dedup_within_batch=dedup_within_batch)
         elif op == "delete":
-            state, ok = _delete(config.shard, state, flat_keys,
-                                valid=flat_valid)
+            state, ok = _delete(config.shard, state, keys, valid=valid)
         elif op == "query":
-            ok = _query(config.shard, state, flat_keys) & flat_valid
+            ok = _query(config.shard, state, keys) & valid
         else:  # pragma: no cover
             raise ValueError(op)
+        return state.table, state.count, ok
 
-        back = jax.lax.all_to_all(
-            ok.reshape(config.num_shards, cap), ax,
-            split_axis=0, concat_axis=0, tiled=False)
+    def fn(table, count, keys, valid, ops=None):
+        # table: [p_local, num_words] local partitions; keys: [local_batch, 2]
+        bins, bin_valid, order, dest_s, idxg, routed, slot = _route(
+            config, keys, cap, valid)
+        part_keys = regroup(exchange(bins.reshape(K, p_local * cap, 2)))
+        part_valid = regroup(exchange(bin_valid.reshape(K, p_local * cap)))
+
+        if op == "apply_ops":
+            P = config.partitions
+            bin_ops = jnp.zeros((P * cap,), jnp.int32).at[slot].set(
+                ops.astype(jnp.int32)[order], mode="drop")
+            part_ops = regroup(exchange(bin_ops.reshape(K, p_local * cap)))
+        else:
+            part_ops = jnp.zeros((p_local, K * cap), jnp.int32)
+
+        table, count, ok = jax.vmap(per_partition)(
+            table, count, part_keys, part_valid, part_ops)
+
+        back = exchange(ungroup(ok)).reshape(config.partitions, cap)
         result = _unroute(order, dest_s, idxg, routed, back)
         routed_out = jnp.zeros((keys.shape[0],), bool).at[order].set(routed)
-        return state.table[None], state.count[None], result, routed_out
+        return table, count, result, routed_out
 
     return fn
 
@@ -253,7 +356,8 @@ class ShardedCuckooFilter:
     """
 
     def __init__(self, config: ShardedCuckooConfig, mesh: Mesh,
-                 local_batch: int):
+                 local_batch: int,
+                 state: Optional[ShardedCuckooState] = None):
         if mesh.shape[config.axis_name] != config.num_shards:
             raise ValueError(
                 f"mesh axis {config.axis_name} has size "
@@ -263,7 +367,7 @@ class ShardedCuckooFilter:
         self.local_batch = local_batch
         self._ops = {}  # (op, dedup) -> jitted shard_map — built lazily
         self.state = jax.device_put(
-            config.init(),
+            config.init() if state is None else state,
             NamedSharding(mesh, P(config.axis_name)))
 
     def _op(self, op: str, dedup: bool = False):
@@ -282,6 +386,7 @@ class ShardedCuckooFilter:
         return self._ops[key]
 
     def _run(self, op, keys, valid=None, dedup=False, ops=None):
+        keys = normalize_keys(keys)
         if valid is None:
             valid = jnp.ones((keys.shape[0],), bool)
         args = (self.state.table, self.state.count, keys, valid)
@@ -327,3 +432,19 @@ class ShardedCuckooFilter:
     @property
     def total_count(self) -> int:
         return int(jnp.sum(self.state.count))
+
+    def resharded(self, mesh: Mesh,
+                  num_shards: Optional[int] = None) -> "ShardedCuckooFilter":
+        """Exact K→K′ / new-mesh migration: relocate partitions, keep state.
+
+        Returns a new driver on ``mesh`` whose state arrays are the *same
+        values* re-placed over the new device set (key→partition is fixed,
+        so membership is bit-for-bit preserved — DESIGN.md §10). The new
+        shard count must divide ``num_partitions``.
+        """
+        k = num_shards or mesh.shape[self.config.axis_name]
+        # keep the *global* batch: per-device batches scale inversely with K
+        return ShardedCuckooFilter(
+            self.config.resharded(k), mesh,
+            max(1, self.local_batch * self.config.num_shards // k),
+            state=ShardedCuckooState(*map(jnp.asarray, self.state)))

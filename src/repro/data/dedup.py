@@ -150,9 +150,13 @@ class StreamingDeduper:
                  service: Optional["amq.FilterService"] = None):
         self.service = (amq.FilterService(handle, batch_size=service_batch)
                         if service is None else service)
-        self.handle = self.service.handle
         self.stats = {"duplicates": 0, "insert_failures": 0}
         self._admissions: list = []   # tickets whose failures aren't counted
+
+    @property
+    def handle(self):
+        """The live filter handle — tracks ``FilterService.hot_swap``."""
+        return self.service.handle
 
     def _drain_admissions(self) -> int:
         """Fold finished admission tickets into ``insert_failures``.

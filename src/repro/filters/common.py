@@ -22,6 +22,8 @@ def scatter_or(table: jnp.ndarray, addr: jnp.ndarray, val: jnp.ndarray,
     valid: optional bool[k] mask.
     """
     invalid = table.shape[0]
+    if addr.shape[0] == 0:  # static: nothing to scatter (n=0 batches)
+        return table
     if valid is not None:
         addr = jnp.where(valid, addr, invalid)
     order = jnp.argsort(addr, stable=True)

@@ -99,6 +99,8 @@ def insert(config: GQFConfig, state: GQFState, keys: jnp.ndarray,
            ) -> Tuple[GQFState, jnp.ndarray]:
     """Sequential Robin Hood insertion (the GQF's serial shifting)."""
     n = keys.shape[0]
+    if n == 0:  # static: fori_loop still traces its body on size-0 gathers
+        return state, jnp.zeros((0,), bool)
     m = config.num_slots
     rem, home = _prepare(config, keys)
     valid0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
@@ -165,6 +167,8 @@ def delete(config: GQFConfig, state: GQFState, keys: jnp.ndarray,
            ) -> Tuple[GQFState, jnp.ndarray]:
     """Sequential delete + backward-shift compaction."""
     n = keys.shape[0]
+    if n == 0:  # static: fori_loop still traces its body on size-0 gathers
+        return state, jnp.zeros((0,), bool)
     m = config.num_slots
     rem, home = _prepare(config, keys)
     valid0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)

@@ -24,6 +24,12 @@ micro-batch (DESIGN.md §9): eviction deletes and admission inserts are
 one service) and only forced when a lookup needs an answer, so a burst of
 cache churn costs one fused mixed-op dispatch instead of a filter
 round-trip per entry.
+
+The guard filter is also *swappable under live traffic*
+(:meth:`PrefixCache.hot_swap_filter`, DESIGN.md §10): the service drains
+queued admissions/evictions onto the old backend, migrates its state via
+snapshot/exact-reshard, and resumes — capacity or mesh changes for the
+serving fleet without a cache rebuild or a stale-filter window.
 """
 
 from __future__ import annotations
@@ -78,9 +84,29 @@ class PrefixCache:
         elif filter_handle is not None:
             raise TypeError("pass filter_handle= or service=, not both")
         self.service = service
-        self.filter = service.handle
         self.stats = {"hits": 0, "misses": 0, "filtered": 0,
                       "evictions": 0, "stale": 0}
+
+    @property
+    def filter(self):
+        """The live guard-filter handle — always the service's current one.
+
+        A property (not a captured reference) so a
+        :meth:`~repro.amq.FilterService.hot_swap` on the shared service is
+        immediately observed: capability gates (eviction deletes) and stats
+        consult the post-swap backend.
+        """
+        return self.service.handle
+
+    def hot_swap_filter(self, new_handle, **kw) -> dict:
+        """Swap the guard filter under live traffic (zero downtime).
+
+        Delegates to :meth:`repro.amq.FilterService.hot_swap`: queued
+        admissions/evictions drain to the old filter, its state migrates
+        onto ``new_handle`` (snapshot / exact reshard), and subsequent
+        lookups are guarded by the new backend. Returns the swap stats.
+        """
+        return self.service.hot_swap(new_handle, **kw)
 
     def _fkey(self, key: int):
         return np.asarray(

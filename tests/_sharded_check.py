@@ -77,6 +77,23 @@ def main():
     assert (q[inserted_once] == got[inserted_once]).all() or \
         got[inserted_once].all()
 
+    # exact K->K' resharding (DESIGN.md §10): 8 partitions over 8 devices
+    # relocate onto 4-, 2-, and 1-device meshes with zero membership change.
+    refill = jnp.asarray(keys_from_numpy(raw[: 8 * local_batch]))
+    ok3, routed3 = filt.insert(refill)
+    pre_q, pre_r = map(np.asarray, filt.query(refill))
+    pre_table = np.asarray(filt.state.table)
+    for k in (4, 2, 1):
+        moved = filt.resharded(jax.make_mesh((k,), ("data",),
+                                             devices=jax.devices()[:k]))
+        assert moved.config.num_shards == k
+        assert moved.config.partitions == 8
+        np.testing.assert_array_equal(np.asarray(moved.state.table),
+                                      pre_table)
+        post_q, post_r = map(np.asarray, moved.query(refill))
+        np.testing.assert_array_equal(post_q & post_r, pre_q & pre_r)
+    print("RESHARD_OK 8->4->2->1 exact")
+
     # deletion across the mesh
     dok, drouted = filt.delete(keys)
     dok, drouted = np.asarray(dok), np.asarray(drouted)

@@ -1,0 +1,20 @@
+"""Tier-1 runtime budget knobs (shared by the property-test modules).
+
+``examples(n)`` is the one place hypothesis example counts are set: each
+test passes its *full* count (what a thorough accelerator/nightly run
+should use) and the environment may cap it — CI exports
+``REPRO_MAX_EXAMPLES=25`` on its CPU runners (see .github/workflows/ci.yml)
+so the suite stays inside the tier-1 time budget without deleting a single
+assertion. Unset, counts pass through untouched.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def examples(n: int) -> int:
+    cap = os.environ.get("REPRO_MAX_EXAMPLES")
+    if cap:
+        return max(1, min(n, int(cap)))
+    return n

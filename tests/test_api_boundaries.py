@@ -1,0 +1,220 @@
+"""Hardened API boundaries: key normalization + argument validation.
+
+Regression suite for the former raw-``uint64[n]`` crash (a bare
+``ValueError: indices and arr must have the same number of dimensions``
+thrown from deep inside the jitted eviction loop — ``layout.py:184`` via
+``cuckoo_filter.py``) and conformance for the key-format contract: every
+registry backend × op accepts raw ``uint64[n]`` keys, ``n=0``, and ``n=1``
+batches, and rejects genuinely malformed shapes/dtypes with a
+``ValueError`` that names the offending argument.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import amq
+from repro.amq import OP_DELETE, OP_INSERT, OP_QUERY, OpBatch
+from repro.core import CuckooConfig, CuckooFilter, keys_from_numpy
+from repro.core.hashing import normalize_keys
+
+CAPACITY = 2048
+
+
+@pytest.fixture(params=list(amq.names()))
+def backend(request):
+    return request.param
+
+
+def _raw(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(1, 2**64, size=2 * n + 16,
+                                  dtype=np.uint64))[:n]
+
+
+# ---------------------------------------------------------------------------
+# normalize_keys: the one key-format contract.
+# ---------------------------------------------------------------------------
+
+def test_normalize_accepts_all_documented_forms():
+    raw = _raw(16)
+    packed = keys_from_numpy(raw)
+    for form in (raw, raw.tolist(), packed, jnp.asarray(packed),
+                 packed.astype(np.int32)):
+        got = np.asarray(normalize_keys(form))
+        assert got.dtype == np.uint32 and got.shape == (16, 2)
+        np.testing.assert_array_equal(got, packed)
+
+
+def test_normalize_widens_narrow_scalars():
+    small = np.arange(5, dtype=np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(normalize_keys(small)),
+        keys_from_numpy(small.astype(np.uint64)))
+
+
+@pytest.mark.parametrize("bad, fragment", [
+    (np.zeros((4, 3), np.uint32), "keys"),
+    (np.zeros((2, 2, 2), np.uint32), "keys"),
+    (np.zeros((4,), np.float32), "keys"),
+    (np.asarray(["a", "b"], object), "keys"),
+    ((np.zeros((4, 2), np.uint64) + (1 << 40)), "lane"),
+])
+def test_normalize_rejects_malformed(bad, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        normalize_keys(bad)
+
+
+# ---------------------------------------------------------------------------
+# The pinned regression: raw uint64 keys through every backend x op.
+# ---------------------------------------------------------------------------
+
+def test_raw_uint64_insert_regression_layout_crash():
+    """Pinned: this exact call used to die inside jit with
+    ``ValueError: indices and arr must have the same number of dimensions;
+    2 vs 1`` at src/repro/core/layout.py:184 (gather_bucket_words) via
+    src/repro/core/cuckoo_filter.py (prepare_keys), for every fp_bits."""
+    for fp_bits in (8, 16, 32):
+        handle = amq.make("cuckoo", capacity=CAPACITY, fp_bits=fp_bits)
+        raw = _raw(64)
+        assert np.asarray(handle.insert(raw).ok).all()
+        assert np.asarray(handle.query(raw).hits).all()
+
+
+@pytest.mark.parametrize("n", [0, 1, 37])
+def test_raw_uint64_all_backends_all_ops(backend, n):
+    handle = amq.make(backend, capacity=CAPACITY)
+    caps = handle.capabilities
+    raw = _raw(n, seed=n)
+
+    report = handle.insert(raw)
+    ok = np.asarray(report.ok) & np.asarray(report.routed)
+    assert ok.shape == (n,)
+    assert ok.all(), f"{backend}: raw-key insert failed"
+    hits = np.asarray(handle.query(raw).hits)
+    assert hits[ok].all(), f"{backend}: false negative on raw keys"
+    if caps.supports_bulk:
+        handle.insert(raw, bulk=True)
+    if caps.supports_delete:
+        dr = handle.delete(raw)
+        assert (np.asarray(dr.ok) & np.asarray(dr.routed)).shape == (n,)
+    batch = OpBatch.make(raw, np.full((n,), OP_INSERT, np.int32))
+    m = handle.apply_ops(batch)
+    assert np.asarray(m.ok).shape == (n,)
+
+
+def test_raw_uint64_equals_packed(backend):
+    """Raw and pre-packed key batches must produce identical answers."""
+    raw = _raw(200)
+    packed = jnp.asarray(keys_from_numpy(raw))
+    h1 = amq.make(backend, capacity=CAPACITY)
+    h2 = amq.make(backend, capacity=CAPACITY)
+    np.testing.assert_array_equal(np.asarray(h1.insert(raw).ok),
+                                  np.asarray(h2.insert(packed).ok))
+    np.testing.assert_array_equal(np.asarray(h1.query(raw).hits),
+                                  np.asarray(h2.query(packed).hits))
+
+
+def test_malformed_keys_rejected_at_handle(backend):
+    handle = amq.make(backend, capacity=CAPACITY)
+    with pytest.raises(ValueError, match="keys"):
+        handle.insert(np.zeros((4, 3), np.uint32))
+    with pytest.raises(ValueError, match="keys"):
+        handle.query(np.zeros((4,), np.float64))
+
+
+def test_raw_uint64_cascade_and_core_wrappers():
+    cascade = amq.make("cuckoo", capacity=256, auto_expand=True)
+    raw = _raw(400)
+    assert np.asarray(cascade.insert(raw).ok).all()
+    assert np.asarray(cascade.query(raw).hits).all()
+    assert np.asarray(cascade.delete(raw[:10]).ok).all()
+
+    filt = CuckooFilter(CuckooConfig.for_capacity(CAPACITY))
+    ok, _ = filt.insert(raw)
+    assert np.asarray(ok).all()
+    assert np.asarray(filt.query(raw)).all()
+    assert np.asarray(filt.delete(raw[:10])).all()
+
+
+def test_core_functional_op_raises_clear_error():
+    """The jitted core rejects un-normalized keys with a pointer to the
+    contract instead of the old opaque dimension error."""
+    from repro.core import insert
+
+    cfg = CuckooConfig.for_capacity(CAPACITY)
+    with pytest.raises(ValueError, match="normalize_keys|lo, hi"):
+        insert(cfg, cfg.init(), jnp.zeros((8,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# OpBatch.make validation.
+# ---------------------------------------------------------------------------
+
+def test_opbatch_accepts_raw_uint64():
+    raw = _raw(8)
+    batch = OpBatch.make(raw, np.full((8,), OP_QUERY, np.int32))
+    np.testing.assert_array_equal(np.asarray(batch.keys),
+                                  keys_from_numpy(raw))
+
+
+def test_opbatch_rejects_bad_op_codes():
+    raw = _raw(4)
+    with pytest.raises(ValueError, match="ops.*unknown op code 7"):
+        OpBatch.make(raw, np.array([0, 1, 2, 7], np.int32))
+    with pytest.raises(ValueError, match="ops.*-1"):
+        OpBatch.make(raw, np.array([0, -1, 2, 1], np.int32))
+
+
+def test_opbatch_rejects_bad_ops_dtype_and_shape():
+    raw = _raw(4)
+    with pytest.raises(ValueError, match="ops.*dtype"):
+        OpBatch.make(raw, np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="ops.*shape"):
+        OpBatch.make(raw, np.zeros((3,), np.int32))
+
+
+def test_opbatch_rejects_bad_valid_shape():
+    raw = _raw(4)
+    with pytest.raises(ValueError, match="valid.*shape"):
+        OpBatch.make(raw, np.zeros((4,), np.int32),
+                     valid=np.ones((3,), bool))
+
+
+# ---------------------------------------------------------------------------
+# FilterService submission boundary.
+# ---------------------------------------------------------------------------
+
+def test_service_accepts_raw_uint64_and_scatters():
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=16)
+    raw = _raw(40)
+    t_ins = svc.insert(raw)
+    t_q = svc.query(raw)
+    assert t_ins.result().all() and t_q.result().all()
+
+
+def test_service_rejects_malformed_submissions():
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=16)
+    raw = _raw(4)
+    with pytest.raises(ValueError, match="keys"):
+        svc.submit(np.zeros((4, 3), np.uint32), np.zeros((4,), np.int32))
+    with pytest.raises(ValueError, match="ops.*dtype"):
+        svc.submit(raw, np.zeros((4,), np.float64))
+    with pytest.raises(ValueError, match=r"ops.*expected \(3,\)"):
+        svc.submit(raw[:3], np.zeros((4,), np.int32))
+    with pytest.raises(ValueError, match="ops.*dtype"):
+        svc.submit(raw, np.array([True, False, True, True]))  # mask != ops
+    with pytest.raises(ValueError, match="ops.*shape"):
+        svc.submit(raw[:3], np.zeros((3, 1), np.int32))  # no silent flatten
+    with pytest.raises(ValueError, match="ops.*unknown op code 9"):
+        svc.submit(raw, np.array([9, 0, 0, 0], np.int32))
+    assert svc.pending_ops == 0  # nothing half-enqueued
+
+
+def test_service_delete_capability_gate_names_backend():
+    svc = amq.FilterService(amq.make("bloom", capacity=CAPACITY),
+                            batch_size=16)
+    with pytest.raises(NotImplementedError, match="bloom"):
+        svc.delete(_raw(4))

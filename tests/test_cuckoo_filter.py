@@ -10,6 +10,8 @@ except ImportError:  # degrade to fixed-seed example tests
     from _hypothesis_compat import given, settings
     from _hypothesis_compat import strategies as st
 
+from _tuning import examples
+
 from repro.core import (
     CuckooConfig,
     CuckooFilter,
@@ -159,7 +161,7 @@ def test_fpr_tracks_equation4():
     assert 0.3 * expected < fpr < 3.0 * expected, (fpr, expected)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=examples(20), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), data=st.data())
 def test_property_random_op_sequences(seed, data):
     """Model-based: filter agrees with a multiset model on collision-free keys."""

@@ -10,6 +10,8 @@ except ImportError:  # degrade to fixed-seed example tests
     from _hypothesis_compat import given, settings
     from _hypothesis_compat import strategies as st
 
+from _tuning import examples
+
 from repro.core import bits64 as b64
 from repro.core.hashing import (
     fmix32,
@@ -29,19 +31,19 @@ def as_u64(x: int):
     return b64.from_py(x)
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(u64s, u64s)
 def test_add(a, b):
     assert b64.to_py(b64.add(as_u64(a), as_u64(b))) == (a + b) & MASK
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(u64s, u64s)
 def test_mul(a, b):
     assert b64.to_py(b64.mul(as_u64(a), as_u64(b))) == (a * b) & MASK
 
 
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(u64s, st.integers(min_value=0, max_value=63))
 def test_shifts_and_rot(a, r):
     assert b64.to_py(b64.shl(as_u64(a), r)) == (a << r) & MASK
@@ -50,14 +52,14 @@ def test_shifts_and_rot(a, r):
     assert b64.to_py(b64.rotl(as_u64(a), r)) == want
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(u32s)
 def test_fmix32(x):
     got = int(np.asarray(fmix32(jnp.uint32(x))))
     assert got == fmix32_py(x)
 
 
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(u64s, st.sampled_from([0, 1, 0xDEADBEEF]))
 def test_xxhash64_exact(key, seed):
     got = b64.to_py(xxhash64_u64(as_u64(key), seed=seed))

@@ -53,4 +53,5 @@ def test_benchmark_harness_importable():
     import benchmarks.run as br
 
     assert set(br.SUITES) == {"fig3", "fig4", "fig5_6", "fig7", "fig8",
-                              "s463", "expansion", "mixed", "roofline"}
+                              "s463", "expansion", "mixed", "lifecycle",
+                              "roofline"}

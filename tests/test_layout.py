@@ -10,13 +10,15 @@ except ImportError:  # degrade to fixed-seed example tests
     from _hypothesis_compat import given, settings
     from _hypothesis_compat import strategies as st
 
+from _tuning import examples
+
 from repro.core import layout as L
 
 u32s = st.integers(min_value=0, max_value=(1 << 32) - 1)
 
 
 @pytest.mark.parametrize("fp_bits", [8, 16, 32])
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(word=u32s)
 def test_swar_zero_mask_matches_naive(word, fp_bits):
     mask = L.swar_zero_mask(jnp.uint32(word), fp_bits)
@@ -26,7 +28,7 @@ def test_swar_zero_mask_matches_naive(word, fp_bits):
 
 
 @pytest.mark.parametrize("fp_bits", [8, 16, 32])
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(word=u32s, tag=u32s)
 def test_swar_match_mask_matches_naive(word, tag, fp_bits):
     tag &= (1 << fp_bits) - 1
@@ -47,7 +49,7 @@ def test_pack_unpack_roundtrip(fp_bits):
 
 
 @pytest.mark.parametrize("fp_bits", [8, 16, 32])
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(word=u32s, tag=u32s, slot=st.integers(min_value=0, max_value=3))
 def test_extract_replace(word, tag, slot, fp_bits):
     tpw = 32 // fp_bits

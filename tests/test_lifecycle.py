@@ -1,0 +1,337 @@
+"""Filter-state lifecycle invariants (DESIGN.md §10).
+
+* snapshot → restore round-trips are **bit-exact** for every
+  ``supports_snapshot`` backend (arrays identical, query answers identical);
+* restores onto mismatched configs/backends/kinds fail loudly with
+  :class:`~repro.amq.protocol.SnapshotMismatchError`;
+* sharded resharding K→K′ (and mesh moves) preserve query results exactly
+  against pre-migration answers;
+* :meth:`~repro.amq.FilterService.hot_swap` loses no acknowledged
+  operation; and
+* snapshot files round-trip through ``save_snapshot``/``load_snapshot``
+  (including cascade files, via deterministic level-sizing replay) and the
+  ``filterctl`` CLI.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import amq
+from repro.amq.protocol import (
+    SnapshotMismatchError,
+    load_snapshot,
+    save_snapshot,
+)
+
+CAPACITY = 2048
+
+
+@pytest.fixture(params=list(amq.names()))
+def backend(request):
+    return request.param
+
+
+def _raw(n, seed=0, lo=1, hi=2**64):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(lo, hi, size=2 * n + 16,
+                                  dtype=np.uint64))[:n]
+
+
+def _assert_same_arrays(a: dict, b: dict):
+    assert sorted(a) == sorted(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"array {k!r} differs")
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore: bit-exact on every backend.
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_bit_exact(backend):
+    handle = amq.make(backend, capacity=CAPACITY)
+    assert handle.capabilities.supports_snapshot
+    keys = _raw(1200)
+    handle.insert(keys)
+    if handle.capabilities.supports_delete:
+        handle.delete(keys[:100])
+    snap = handle.snapshot()
+    assert snap.kind == "filter" and snap.backend == backend
+    assert snap.meta["count"] == handle.count()
+
+    twin = amq.make(backend, config=handle.config, snapshot=snap)
+    _assert_same_arrays(snap.arrays, twin.snapshot().arrays)
+    assert twin.count() == handle.count()
+    probe = np.concatenate([keys, _raw(4096, seed=9, lo=2**32)])
+    np.testing.assert_array_equal(np.asarray(twin.query(probe).hits),
+                                  np.asarray(handle.query(probe).hits))
+
+
+def test_snapshot_restore_in_place(backend):
+    """restore() replaces a live handle's state (rollback use case)."""
+    handle = amq.make(backend, capacity=CAPACITY)
+    keys = _raw(500)
+    handle.insert(keys[:250])
+    snap = handle.snapshot()
+    handle.insert(keys[250:])
+    assert handle.count() == 500
+    handle.restore(snap)
+    assert handle.count() == 250
+
+
+def test_restore_mismatch_fails_loudly(backend):
+    handle = amq.make(backend, capacity=CAPACITY)
+    handle.insert(_raw(100))
+    snap = handle.snapshot()
+    with pytest.raises(SnapshotMismatchError, match="fingerprint"):
+        amq.make(backend, capacity=4 * CAPACITY, snapshot=snap)
+    other = "bloom" if backend != "bloom" else "cuckoo"
+    with pytest.raises(SnapshotMismatchError, match="backend"):
+        amq.make(other, capacity=CAPACITY, snapshot=snap)
+
+
+def test_snapshot_file_roundtrip(backend, tmp_path):
+    handle = amq.make(backend, capacity=CAPACITY)
+    keys = _raw(800)
+    handle.insert(keys)
+    path = tmp_path / "snap.npz"
+    save_snapshot(path, handle.snapshot())
+    loaded = load_snapshot(path)
+    assert loaded.configs == ()  # files carry arrays + JSON, never code
+    twin = amq.make(backend, capacity=CAPACITY, snapshot=loaded)
+    assert twin.count() == handle.count()
+    np.testing.assert_array_equal(np.asarray(twin.query(keys).hits),
+                                  np.asarray(handle.query(keys).hits))
+
+
+def test_snapshot_future_version_refused(tmp_path):
+    handle = amq.make("cuckoo", capacity=CAPACITY)
+    snap = handle.snapshot()._replace(version=99)
+    path = tmp_path / "future.npz"
+    save_snapshot(path, snap)
+    with pytest.raises(SnapshotMismatchError, match="v99"):
+        load_snapshot(path)
+
+
+# ---------------------------------------------------------------------------
+# Cascade snapshots: all live levels.
+# ---------------------------------------------------------------------------
+
+def _grown_cascade(n_keys=6000, capacity=1024):
+    cascade = amq.make("cuckoo", capacity=capacity, auto_expand=True)
+    keys = _raw(n_keys, seed=3)
+    assert np.asarray(cascade.insert(keys).ok).all()
+    assert len(cascade.levels) >= 2, "test needs a multi-level cascade"
+    return cascade, keys
+
+
+def test_cascade_snapshot_covers_all_levels():
+    cascade, keys = _grown_cascade()
+    snap = cascade.snapshot()
+    assert snap.kind == "cascade"
+    assert len(snap.meta["levels"]) == len(cascade.levels)
+    assert snap.meta["count"] == cascade.count()
+
+    twin = amq.make("cuckoo", capacity=1024, auto_expand=True, snapshot=snap)
+    assert len(twin.levels) == len(cascade.levels)
+    assert twin.count() == cascade.count()
+    _assert_same_arrays(snap.arrays, twin.snapshot().arrays)
+    probe = np.concatenate([keys, _raw(4096, seed=17, lo=2**32)])
+    np.testing.assert_array_equal(np.asarray(twin.query(probe).hits),
+                                  np.asarray(cascade.query(probe).hits))
+    # the restored cascade keeps growing correctly
+    more = _raw(3000, seed=23, lo=2**33)
+    assert np.asarray(twin.insert(more).ok).all()
+    assert np.asarray(twin.query(more).hits).all()
+
+
+def test_cascade_snapshot_file_roundtrip(tmp_path):
+    cascade, keys = _grown_cascade()
+    path = tmp_path / "cascade.npz"
+    save_snapshot(path, cascade.snapshot())
+    twin = amq.make("cuckoo", capacity=1024, auto_expand=True,
+                    snapshot=load_snapshot(path))
+    assert twin.count() == cascade.count()
+    np.testing.assert_array_equal(np.asarray(twin.query(keys).hits),
+                                  np.asarray(cascade.query(keys).hits))
+
+
+def test_cascade_snapshot_survives_compaction():
+    cascade, keys = _grown_cascade()
+    # drain the oldest level and reclaim it, then round-trip
+    cascade.delete(keys)
+    cascade.compact()
+    cascade.insert(_raw(500, seed=31, lo=2**33))
+    snap = cascade.snapshot()
+    twin = amq.make("cuckoo", capacity=1024, auto_expand=True, snapshot=snap)
+    assert twin.count() == cascade.count()
+    assert [lvl.config for lvl in twin.levels] == \
+        [lvl.config for lvl in cascade.levels]
+
+
+def test_cascade_restore_mismatched_knobs_fails():
+    cascade, _ = _grown_cascade()
+    snap = cascade.snapshot()
+    with pytest.raises(SnapshotMismatchError, match="base_capacity"):
+        amq.make("cuckoo", capacity=512, auto_expand=True, snapshot=snap)
+    handle = amq.make("cuckoo", capacity=1024)
+    with pytest.raises(SnapshotMismatchError, match="cascade"):
+        handle.restore(snap)
+    with pytest.raises(SnapshotMismatchError, match="filter"):
+        amq.make("cuckoo", capacity=1024, auto_expand=True,
+                 snapshot=handle.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# Exact resharding (fixed partitions).
+# ---------------------------------------------------------------------------
+
+def test_reshard_membership_differential():
+    """K→K′ reshard: every query answers exactly as before migration."""
+    handle = amq.make("sharded-cuckoo", capacity=4096,
+                      partitions_per_shard=4)
+    keys = _raw(2000, seed=5)
+    report = handle.insert(keys)
+    stored = np.asarray(report.ok) & np.asarray(report.routed)
+    probe = np.concatenate([keys, _raw(4096, seed=7, lo=2**32)])
+    pre_hits = np.asarray(handle.query(probe).hits)
+    pre_routed = np.asarray(handle.query(probe).routed)
+
+    moved = handle.resharded(num_shards=1)
+    assert moved is not handle
+    # bit-exact state relocation, zero membership change
+    np.testing.assert_array_equal(np.asarray(moved.state.table),
+                                  np.asarray(handle.state.table))
+    post = moved.query(probe)
+    np.testing.assert_array_equal(np.asarray(post.hits) & np.asarray(
+        post.routed), pre_hits & pre_routed)
+    # and the moved filter still serves mutations
+    dr = moved.delete(keys[:50])
+    assert (np.asarray(dr.ok) & np.asarray(dr.routed))[stored[:50]].all()
+
+
+def test_reshard_requires_divisible_partitions():
+    handle = amq.make("sharded-cuckoo", capacity=4096,
+                      partitions_per_shard=4)
+    with pytest.raises(ValueError, match="partitions"):
+        handle.config.resharded(num_shards=3)
+
+
+def test_reshard_unsupported_backend_raises():
+    with pytest.raises(NotImplementedError, match="resharding"):
+        amq.make("cuckoo", capacity=CAPACITY).resharded(num_shards=2)
+
+
+def test_sharded_snapshot_restores_across_meshes():
+    """Mesh migration = snapshot → restore under a resharded config."""
+    handle = amq.make("sharded-cuckoo", capacity=4096,
+                      partitions_per_shard=2)
+    keys = _raw(1500, seed=13)
+    handle.insert(keys)
+    snap = handle.snapshot()
+    new_mesh = jax.make_mesh((1,), ("data",))
+    new_cfg = handle.config.resharded(mesh=new_mesh)
+    twin = amq.make("sharded-cuckoo", config=new_cfg, snapshot=snap)
+    np.testing.assert_array_equal(np.asarray(twin.query(keys).hits),
+                                  np.asarray(handle.query(keys).hits))
+
+
+# ---------------------------------------------------------------------------
+# Zero-downtime hot swap.
+# ---------------------------------------------------------------------------
+
+def test_hot_swap_loses_no_acknowledged_op():
+    handle = amq.make("cuckoo", capacity=CAPACITY)
+    svc = amq.FilterService(handle, batch_size=64)
+    keys = _raw(500, seed=19)
+    t_full = svc.insert(keys[:448])       # dispatches 7 full batches
+    t_tail = svc.insert(keys[448:])       # stays pending
+    assert not t_tail.dispatched
+
+    swap = svc.hot_swap(amq.make("cuckoo", config=handle.config))
+    assert swap["migrated"] and swap["drained_ops"] > 0
+    assert swap["pause_s"] >= 0.0
+    assert svc.handle is not handle
+    # every acknowledged op: tickets readable, membership carried over
+    assert t_full.result().all() and t_tail.result().all()
+    assert svc.query(keys).result().all()
+    # old handle still intact (tickets drew from its dispatches)
+    assert handle.count() == 500
+
+
+def test_hot_swap_migrate_false_swaps_prepopulated():
+    handle = amq.make("cuckoo", capacity=CAPACITY)
+    svc = amq.FilterService(handle, batch_size=32)
+    keys = _raw(100, seed=29)
+    svc.insert(keys[:50]).result()
+    prebuilt = amq.make("cuckoo", config=handle.config)
+    prebuilt.insert(keys)                  # rebuilt from source of truth
+    swap = svc.hot_swap(prebuilt, migrate=False)
+    assert not swap["migrated"]
+    assert svc.query(keys).result().all()
+
+
+def test_hot_swap_mismatch_keeps_old_backend():
+    handle = amq.make("cuckoo", capacity=CAPACITY)
+    svc = amq.FilterService(handle, batch_size=32)
+    keys = _raw(64, seed=37)
+    svc.insert(keys).result()
+    with pytest.raises(SnapshotMismatchError):
+        svc.hot_swap(amq.make("cuckoo", capacity=8 * CAPACITY))
+    assert svc.handle is handle            # swap never happened
+    assert svc.query(keys).result().all()
+
+
+def test_hot_swap_reshard_under_service():
+    """The headline flow: grow/shrink the mesh without dropping traffic."""
+    handle = amq.make("sharded-cuckoo", capacity=4096,
+                      partitions_per_shard=4)
+    svc = amq.FilterService(handle, batch_size=64)
+    keys = _raw(800, seed=41)
+    svc.insert(keys).result()
+    swap = svc.hot_swap(handle.resharded(num_shards=1))
+    assert swap["migrated"]
+    assert svc.query(keys).result().all()
+
+
+def test_prefix_cache_filter_tracks_hot_swap():
+    from repro.serve.prefix_cache import PrefixCache
+
+    cache = PrefixCache(capacity_entries=8, backend="cuckoo",
+                        filter_capacity=CAPACITY, auto_expand=False)
+    for i in range(8):
+        cache.insert([1, 2, i], entry=i)
+    old = cache.filter
+    swap = cache.hot_swap_filter(amq.make("cuckoo", config=old.config))
+    assert cache.filter is not old         # property follows the service
+    assert swap["migrated"]
+    assert cache.lookup([1, 2, 3]) == 3    # guarded lookups still hit
+
+
+# ---------------------------------------------------------------------------
+# filterctl CLI.
+# ---------------------------------------------------------------------------
+
+def test_filterctl_cli_roundtrip(tmp_path, capsys):
+    import importlib.util
+    import pathlib
+    spec = importlib.util.spec_from_file_location(
+        "filterctl", pathlib.Path(__file__).resolve().parents[1]
+        / "tools" / "filterctl.py")
+    filterctl = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(filterctl)
+
+    path = str(tmp_path / "f.npz")
+    assert filterctl.main(["save", path, "--backend", "cuckoo",
+                           "--capacity", "4096",
+                           "--insert-random", "1000"]) == 0
+    assert filterctl.main(["inspect", path]) == 0
+    out = capsys.readouterr().out
+    assert "backend:     cuckoo" in out and "fingerprint" in out
+    assert filterctl.main(["load", path, "--backend", "cuckoo",
+                           "--capacity", "4096",
+                           "--verify-random", "1000"]) == 0
+    with pytest.raises(SnapshotMismatchError):
+        filterctl.main(["load", path, "--backend", "cuckoo",
+                        "--capacity", "64"])

@@ -15,6 +15,8 @@ except ImportError:  # pragma: no cover - exercised in the bare container
     from _hypothesis_compat import given, settings
     from _hypothesis_compat import strategies as st
 
+from _tuning import examples
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -102,7 +104,7 @@ def _apply(backend: str, path: str, batch: OpBatch) -> MixedReport:
     return report, handle.count()
 
 
-@settings(max_examples=8, deadline=None)
+@settings(max_examples=examples(8), deadline=None)
 @given(data=st.data())
 def test_mixed_matches_sequential_oracle(backend, path, data):
     """apply_ops == one-op-at-a-time replay, per backend, both paths."""

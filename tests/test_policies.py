@@ -10,12 +10,14 @@ except ImportError:  # degrade to fixed-seed example tests
     from _hypothesis_compat import given, settings
     from _hypothesis_compat import strategies as st
 
+from _tuning import examples
+
 from repro.core.policies import OffsetPolicy, XorPolicy, make_policy
 
 u32s = st.integers(min_value=0, max_value=(1 << 32) - 1)
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(h=u32s, idx=u32s)
 def test_xor_involution(h, idx):
     pol = XorPolicy(num_buckets=1 << 12, fp_bits=16)
@@ -32,7 +34,7 @@ def test_xor_requires_power_of_two():
         XorPolicy(num_buckets=300, fp_bits=16)
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=examples(200), deadline=None)
 @given(h=u32s, idx=u32s, m=st.sampled_from([3, 100, 257, 4096, 99991]))
 def test_offset_roundtrip(h, idx, m):
     pol = OffsetPolicy(num_buckets=m, fp_bits=16)

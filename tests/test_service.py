@@ -116,7 +116,9 @@ def test_submit_validation_and_capability_gate():
     with pytest.raises(ValueError, match="op code"):
         svc.submit(_kk([1]), np.asarray([7], np.int32))
     with pytest.raises(ValueError, match="keys"):
-        svc.submit(np.zeros((3,), np.uint32), np.zeros((3,), np.int32))
+        # [n, 3] is genuinely malformed; 1-D integer batches are *raw keys*
+        # under the key-format contract (DESIGN.md §10) and now accepted.
+        svc.submit(np.zeros((3, 3), np.uint32), np.zeros((3,), np.int32))
     ok = svc.insert(_kk([1, 2])).result()   # bloom still serves ins/query
     assert ok.all()
 

@@ -1,0 +1,164 @@
+"""filterctl — save / load / inspect AMQ filter snapshots (DESIGN.md §10).
+
+Operator front door to the filter-state lifecycle: build and populate a
+filter, persist its versioned snapshot, inspect a snapshot file without
+touching a device, and restore one onto a freshly built config (the
+fingerprint check proves the config matches — a wrong ``--capacity`` or
+sizing kwarg fails loudly instead of restoring a corrupt table).
+
+    PYTHONPATH=src python tools/filterctl.py save out.npz \\
+        --backend cuckoo --capacity 100000 --insert-random 80000
+    PYTHONPATH=src python tools/filterctl.py inspect out.npz
+    PYTHONPATH=src python tools/filterctl.py load out.npz \\
+        --backend cuckoo --capacity 100000 --verify-random 80000
+
+Sizing kwargs ride along as repeated ``--kw name=value`` flags (values are
+parsed as int/float where possible), e.g. ``--kw fp_bits=8``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro import amq  # noqa: E402
+from repro.amq.protocol import load_snapshot, save_snapshot  # noqa: E402
+
+
+def _parse_kw(pairs) -> dict:
+    out = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--kw expects name=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def _rand_keys(n: int, seed: int) -> np.ndarray:
+    """First ``n`` distinct keys of the seeded stream — prefix-stable.
+
+    Deduplicated in *generation order* (not sorted), so for one seed the
+    first ``m <= n`` keys of a larger draw equal a smaller draw exactly:
+    ``load --verify-random M`` (M <= save's ``--insert-random N``) queries
+    keys that were actually inserted.
+    """
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 2**64, size=2 * n + 16, dtype=np.uint64)
+    _, idx = np.unique(arr, return_index=True)
+    return arr[np.sort(idx)][:n]
+
+
+def _load_keys(args) -> np.ndarray:
+    if args.keys is not None:
+        return np.load(args.keys).astype(np.uint64).reshape(-1)
+    if args.insert_random:
+        return _rand_keys(args.insert_random, args.seed)
+    return np.zeros((0,), np.uint64)
+
+
+def _make(args):
+    return amq.make(args.backend or "cuckoo", capacity=args.capacity,
+                    **_parse_kw(args.kw))
+
+
+def cmd_save(args) -> int:
+    """Build + populate a filter, then persist its snapshot."""
+    handle = _make(args)
+    keys = _load_keys(args)
+    if keys.size:
+        report = handle.insert(keys)
+        ok = np.asarray(report.ok) & np.asarray(report.routed)
+        print(f"inserted {int(ok.sum())}/{keys.size} keys "
+              f"(load {handle.load_factor:.3f})")
+    snap = handle.snapshot()
+    save_snapshot(args.path, snap)
+    print(f"wrote {args.path}: backend={snap.backend} "
+          f"count={snap.meta['count']} bytes={snap.nbytes}")
+    return 0
+
+
+def cmd_inspect(args) -> int:
+    """Print a snapshot file's header and array inventory (host-only)."""
+    snap = load_snapshot(args.path)
+    print(f"backend:     {snap.backend}")
+    print(f"kind:        {snap.kind}")
+    print(f"format:      v{snap.version}")
+    print(f"fingerprint: {snap.fingerprint or '(per-level, see meta)'}")
+    for k, v in sorted(snap.meta.items()):
+        print(f"meta.{k}: {v}")
+    for name in sorted(snap.arrays):
+        a = snap.arrays[name]
+        print(f"array {name}: {a.dtype}{list(a.shape)} ({a.nbytes} B)")
+    return 0
+
+
+def cmd_load(args) -> int:
+    """Restore a snapshot onto a freshly built config and sanity-check it."""
+    snap = load_snapshot(args.path)
+    handle = amq.make(args.backend or snap.backend, capacity=args.capacity,
+                      snapshot=snap, **_parse_kw(args.kw))
+    print(f"restored {handle.name}: count={handle.count()} "
+          f"load={handle.load_factor:.3f}")
+    if args.verify_random:
+        keys = _rand_keys(args.verify_random, args.seed)
+        hits = np.asarray(handle.query(keys).hits)
+        print(f"verify: {int(hits.sum())}/{keys.size} stored keys answered "
+              "positive" + ("" if hits.all() else "  <-- FALSE NEGATIVES"))
+        if not hits.all():
+            return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="filterctl", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, capacity_required):
+        p.add_argument("path", help="snapshot file (.npz)")
+        # None so `load` can fall back to the snapshot's recorded backend
+        # (save defaults to cuckoo in _make).
+        p.add_argument("--backend", default=None)
+        p.add_argument("--capacity", type=int,
+                       required=capacity_required)
+        p.add_argument("--kw", action="append", metavar="NAME=VALUE",
+                       help="backend sizing kwarg (repeatable)")
+        p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("save", help="build + populate + snapshot to file")
+    common(p, True)
+    p.add_argument("--insert-random", type=int, default=0, metavar="N",
+                   help="populate with N random uint64 keys before saving")
+    p.add_argument("--keys", default=None,
+                   help=".npy file of uint64 keys to insert before saving")
+    p.set_defaults(fn=cmd_save)
+
+    p = sub.add_parser("inspect", help="print snapshot header (no device)")
+    p.add_argument("path")
+    p.set_defaults(fn=cmd_inspect)
+
+    p = sub.add_parser("load", help="restore onto a freshly built config")
+    common(p, True)
+    p.add_argument("--verify-random", type=int, default=0, metavar="N",
+                   help="re-query the first N keys of the save-time seeded "
+                        "stream (N <= save's --insert-random) and fail on "
+                        "any false negative")
+    p.set_defaults(fn=cmd_load)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

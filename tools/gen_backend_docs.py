@@ -48,7 +48,11 @@ Consumers branch on the capability flags below — never on backend names
 levels (DESIGN.md §8). Every handle also executes mixed operation batches
 (`handle.apply_ops(OpBatch)`, DESIGN.md §9): backends with the `mixed`
 capability run them as one fused program, the rest fall back to maximal
-same-op runs.
+same-op runs. Backends with the `snapshot` capability round-trip their
+state through versioned host-side snapshots (`handle.snapshot()` /
+`handle.restore()` / `amq.make(..., snapshot=...)`, DESIGN.md §10) —
+the substrate for persistence, exact resharding, and the serving layer's
+zero-downtime `FilterService.hot_swap`.
 """
 
 
@@ -116,7 +120,8 @@ def render() -> str:
     short = {"supports_delete": "delete", "supports_bulk": "bulk",
              "supports_sharding": "sharding", "counting": "counting",
              "exact": "exact", "serial_insert": "serial insert",
-             "supports_expand": "expand", "supports_mixed": "mixed"}
+             "supports_expand": "expand", "supports_mixed": "mixed",
+             "supports_snapshot": "snapshot"}
     lines.append("| backend | " + " | ".join(short[f] for f in cap_fields)
                  + " |")
     lines.append("|---" * (len(cap_fields) + 1) + "|")
