@@ -28,6 +28,7 @@ from . import (
     lifecycle,
     mixed_workload,
     roofline,
+    serving_slo,
     sorted_insertion,
     throughput,
 )
@@ -44,6 +45,7 @@ SUITES = {
     "expansion": expansion.run,
     "mixed": mixed_workload.run,
     "lifecycle": lifecycle.run,
+    "serving_slo": serving_slo.run,
     "roofline": roofline.run,
 }
 

@@ -1,0 +1,229 @@
+"""Serving-SLO harness: deadline/backpressure sweep under synthetic load.
+
+Drives the DESIGN.md §11 serving engine the way a fleet front-end would:
+thousands of synthetic clients submit variable-size op streams whose keys
+follow a zipfian popularity curve and whose arrivals are bursty (on/off
+periods with Poisson arrivals inside each burst). The harness sweeps
+deadline x batch-size x admission policy across >=3 registry backends and
+reports p50/p99 *enqueue-to-ready* latency plus sustained ops/s per cell,
+all emitted into ``BENCH_serving_slo.json``.
+
+Timing model: the service runs on a **virtual clock** (injected via
+``FilterService(clock=...)``). Arrival timestamps advance the clock, and
+the *measured wall time* of every submit/poll/drain call is added on top —
+so latencies combine genuine queueing/deadline waits (virtual) with
+genuine dispatch compute (real), and ``ops/s`` is acknowledged ops over
+the final clock reading. This keeps deadline behaviour deterministic per
+seed while still charging real XLA execution cost.
+
+Two scripted scenario cells ride the sweep:
+
+* **hot swap under live traffic** — a sharded service is resharded
+  (K -> K') mid-trace via :meth:`~repro.amq.FilterService.hot_swap`; the
+  cell asserts *zero acknowledged-op loss* (every acked+routed insert
+  still queries positive afterwards).
+* **admission bound** — ``shed`` and ``error`` policies with
+  ``max_pending`` far below the batch size; the cell asserts the observed
+  queue depth never exceeded the configured bound.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro import amq
+from repro.amq.dispatch import batch_align, shape_ladder
+from repro.amq.protocol import OP_QUERY, OpBatch
+from repro.core import keys_from_numpy
+
+from .common import emit, emit_json
+
+ZIPF_A = 1.3           # key/client popularity skew
+OPS_MIX = (0.70, 0.25, 0.05)     # query / insert / delete
+
+
+class SimClock:
+    """Virtual service clock the harness advances by hand."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def _make_trace(*, n_events: int, n_clients: int, key_space: int,
+                seed: int, deletes: bool = True):
+    """(t_arrival, client, keys, ops) events: zipfian keys, bursty arrivals."""
+    rng = np.random.default_rng(seed)
+    universe = keys_from_numpy(np.unique(rng.integers(
+        1, 2**63, size=key_space * 2, dtype=np.uint64))[:key_space])
+    sizes = rng.integers(1, 17, size=n_events)
+    clients = (rng.zipf(ZIPF_A, size=n_events) - 1) % n_clients
+    # on/off burstiness: Poisson arrivals inside bursts, long gaps between.
+    gaps = rng.exponential(0.0005, size=n_events)          # ~2k arrivals/s on
+    burst_len = np.maximum(1, rng.poisson(40, size=n_events))
+    off_at = np.cumsum(burst_len) % n_events
+    gaps[off_at[off_at < n_events]] += rng.exponential(
+        0.02, size=(off_at < n_events).sum())              # off periods
+    t_arrival = np.cumsum(gaps)
+    p = np.asarray(OPS_MIX if deletes else (OPS_MIX[0], 1 - OPS_MIX[0], 0.0))
+    trace = []
+    for i in range(n_events):
+        m = int(sizes[i])
+        picks = (rng.zipf(ZIPF_A, size=m) - 1) % key_space
+        ops = rng.choice(3, size=m, p=p).astype(np.int32)
+        trace.append((float(t_arrival[i]), f"c{clients[i]}",
+                      universe[picks], ops))
+    return trace
+
+
+def _warm(handle, batch_size: int):
+    """Compile every ladder rung with no-op queries before measuring.
+
+    First-dispatch XLA compilation is seconds of wall time per rung; left
+    in the trace it would dominate every latency percentile. Queries leave
+    the filter contents untouched, so warmed cells start from a clean
+    state with hot jit caches.
+    """
+    probe = jnp.zeros((1, 2), jnp.uint32)
+    for rung in shape_ladder(batch_size, batch_align(handle)):
+        handle.apply_ops(OpBatch.make(
+            probe, jnp.full((1,), OP_QUERY, jnp.int32)).pad_to(rung))
+    return handle
+
+
+def _drive(svc, clock, trace, *, mid_trace=None):
+    """Replay a trace through the service; returns (tickets, rejected, wall)."""
+    tickets, rejected = [], 0
+    wall0 = time.perf_counter()
+    for i, (t, client, keys, ops) in enumerate(trace):
+        if mid_trace is not None and i == len(trace) // 2:
+            mid_trace(svc)
+        clock.now = max(clock.now, t)
+        t0 = time.perf_counter()
+        try:
+            tickets.append((svc.submit(keys, ops, client=client), keys, ops))
+        except amq.QueueFullError:
+            rejected += 1
+        clock.now += time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.drain()
+    clock.now += time.perf_counter() - t0
+    return tickets, rejected, time.perf_counter() - wall0
+
+
+def _cell(snap, clock, *, rejected, wall_s, label):
+    """CSV row + JSON record for one sweep cell."""
+    p50_us = snap["ready"]["p50_s"] * 1e6
+    p99_us = snap["ready"]["p99_s"] * 1e6
+    acked = snap["dispatched_ops"]
+    ops_per_s = acked / max(clock.now, 1e-9)
+    emit(label, p99_us,
+         f"p50={p50_us:.0f}us_sustained={ops_per_s / 1e3:.1f}k_ops_per_s")
+    return {"label": label, "p50_us": p50_us, "p99_us": p99_us,
+            "acked_ops": acked, "shed_ops": snap["shed_ops"],
+            "rejected_submissions": rejected,
+            "sustained_ops_per_s": ops_per_s,
+            "wall_s": wall_s, "sim_s": clock.now,
+            "padding_waste": snap["padding_waste"],
+            "dispatch_kinds": snap["dispatch_kinds"],
+            "queue_depth_max": snap["queue_depth_max"]}
+
+
+def _backend_kw(backend):
+    return {"partitions_per_shard": 2} if backend == "sharded-cuckoo" else {}
+
+
+def run(fast: bool = False) -> None:
+    n_events = 400 if fast else 2000
+    n_clients = 256 if fast else 2048
+    key_space = 1 << 12 if fast else 1 << 15
+    capacity = 1 << 15 if fast else 1 << 18
+    payload: dict = {"n_events": n_events, "n_clients": n_clients,
+                     "key_space": key_space, "zipf_a": ZIPF_A,
+                     "cells": []}
+
+    backends = ("cuckoo", "sharded-cuckoo", "bloom")
+    batch_sizes = (256,) if fast else (256, 1024)
+    deadlines = (0.002,) if fast else (None, 0.002)
+
+    # -- the main sweep: backend x batch x deadline ------------------------
+    for backend in backends:
+        deletes = amq.get(backend).capabilities.supports_delete
+        trace = _make_trace(n_events=n_events, n_clients=n_clients,
+                            key_space=key_space, seed=7, deletes=deletes)
+        for batch_size in batch_sizes:
+            for max_delay in deadlines:
+                clock = SimClock()
+                svc = amq.FilterService(
+                    _warm(amq.make(backend, capacity=capacity,
+                                   **_backend_kw(backend)), batch_size),
+                    batch_size=batch_size, max_delay=max_delay, clock=clock)
+                _, rejected, wall = _drive(svc, clock, trace)
+                dl = "none" if max_delay is None else f"{max_delay * 1e3:g}ms"
+                payload["cells"].append(_cell(
+                    svc.stats(), clock, rejected=rejected, wall_s=wall,
+                    label=f"slo_{backend}_bs{batch_size}_dl{dl}"))
+
+    # -- admission policies keep the queue at its configured bound ---------
+    bound = 64
+    trace = _make_trace(n_events=n_events // 2, n_clients=n_clients,
+                        key_space=key_space, seed=11)
+    for admission in ("block", "shed", "error"):
+        clock = SimClock()
+        svc = amq.FilterService(
+            _warm(amq.make("cuckoo", capacity=capacity), 256),
+            batch_size=256, max_pending=bound, admission=admission,
+            max_delay=0.002, clock=clock)
+        _, rejected, wall = _drive(svc, clock, trace)
+        snap = svc.stats()
+        assert snap["queue_depth_max"] <= bound, \
+            f"{admission}: queue depth {snap['queue_depth_max']} > {bound}"
+        rec = _cell(snap, clock, rejected=rejected, wall_s=wall,
+                    label=f"slo_admission_{admission}_bound{bound}")
+        rec["max_pending"] = bound
+        payload["cells"].append(rec)
+
+    # -- hot swap (with K -> K' reshard) under live traffic ----------------
+    clock = SimClock()
+    svc = amq.FilterService(
+        _warm(amq.make("sharded-cuckoo", capacity=capacity,
+                       partitions_per_shard=2), 256),
+        batch_size=256, max_delay=0.002, clock=clock)
+    trace = _make_trace(n_events=n_events // 2, n_clients=n_clients,
+                        key_space=key_space, seed=13)
+    swap_info = {}
+
+    def _swap(service):
+        swap_info.update(service.hot_swap(
+            _warm(service.handle.resharded(num_shards=1), 256)))
+
+    tickets, rejected, wall = _drive(svc, clock, trace, mid_trace=_swap)
+    # zero acknowledged-op loss: every acked+routed insert still present.
+    acked = {}
+    for ticket, keys, ops in tickets:
+        ok, routed = ticket.result(), ticket.routed()
+        for j in np.flatnonzero((ops == amq.OP_INSERT) & ok & routed):
+            acked[tuple(keys[j])] = True
+        for j in np.flatnonzero((ops == amq.OP_DELETE) & ok & routed):
+            acked.pop(tuple(keys[j]), None)
+    if acked:
+        probe = np.asarray(list(acked), np.uint32)
+        hits = svc.query(probe).result()
+        assert hits.all(), \
+            f"hot swap lost {int((~hits).sum())} acknowledged inserts"
+    rec = _cell(svc.stats(), clock, rejected=rejected, wall_s=wall,
+                label="slo_hot_swap_reshard_live")
+    rec["swap"] = {k: swap_info[k] for k in
+                   ("pause_s", "drained_ops", "migrated",
+                    "old_backend", "new_backend")}
+    rec["acked_inserts_verified"] = len(acked)
+    rec["zero_acked_loss"] = True
+    payload["cells"].append(rec)
+
+    emit_json("serving_slo", payload)

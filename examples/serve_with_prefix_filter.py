@@ -22,7 +22,11 @@ params = model.init(jax.random.key(0))
 
 BATCH, PROMPT, STEPS = 2, 24, 8
 engine = ServeEngine(model, params, batch=BATCH, max_len=PROMPT + STEPS,
-                     prefix_cache_entries=4)
+                     prefix_cache_entries=4,
+                     # serving SLO knobs flow to the guard-filter service
+                     # (DESIGN.md §11): 1ms deadline, bounded queue.
+                     prefix_cache_service_kw={"max_delay": 0.001,
+                                              "max_pending": 32})
 
 rng = np.random.default_rng(0)
 pool = [rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)).astype(np.int32)
@@ -36,7 +40,11 @@ for i in sequence:
     tokens, stats = engine.generate(pool[i], steps=STEPS)
 dt = time.perf_counter() - t0
 print(f"{len(sequence)} requests in {dt:.1f}s")
+slo = stats.pop("filter_service")
 print("prefix cache stats:", stats)
+print(f"guard-filter SLO: p99 enqueue-to-ready "
+      f"{slo['ready']['p99_s'] * 1e6:.0f}us over {slo['ready']['count']} "
+      f"ops, dispatch causes {slo['dispatch_kinds']}")
 assert stats["hits"] > 0, "repeat prompts must hit the prefix cache"
 assert stats["filtered"] > 0, "fresh prompts must be filtered (neg lookup)"
 if stats["evictions"]:

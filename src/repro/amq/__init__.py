@@ -40,7 +40,8 @@ from .protocol import (  # noqa: F401
 )
 
 _LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
-         "CascadeHandle", "FilterService", "Ticket")
+         "CascadeHandle", "FilterService", "Ticket", "ServiceMetrics",
+         "QueueFullError")
 
 __all__ = list(_LAZY) + [
     "AMQConfig", "Capabilities", "CascadeReport", "DeleteReport",
@@ -69,6 +70,10 @@ def __getattr__(name):
         from . import service
 
         return getattr(service, name)
+    if name in ("ServiceMetrics", "QueueFullError"):
+        from . import dispatch
+
+        return getattr(dispatch, name)
     if name == "AMQAdapter":
         from .adapters import AMQAdapter
 

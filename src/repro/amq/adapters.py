@@ -492,6 +492,11 @@ class ShardedAMQConfig:
         """Aggregate FPR equals the per-shard filter's (paper Eq. 4), because shards are independent same-config cuckoo filters."""
         return self.inner.expected_fpr(load_factor)
 
+    @property
+    def batch_align(self) -> int:
+        """Dispatch widths must divide across the mesh (DESIGN.md §11)."""
+        return self.inner.batch_align
+
     def init(self) -> SF.ShardedCuckooState:
         """Fresh empty sharded state, placed along the mesh axis."""
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,17 +1,24 @@
-"""FilterService: a micro-batching front-end over one AMQ filter.
+"""FilterService: a deadline-driven, backpressured micro-batching front-end.
 
 Serving traffic reaches a filter as many small, interleaved op streams —
 one per logical client — while the accelerator wants few, large, fixed-shape
-dispatches. The service bridges the two (DESIGN.md §9):
+dispatches. The service bridges the two (DESIGN.md §9, serving engine §11):
 
 * **Coalescing**: ``query`` / ``insert`` / ``delete`` / ``submit`` calls
   append ops (any count, any client) onto one pending stream in arrival
-  order. Nothing is dispatched until a full micro-batch accumulates or a
-  result is demanded.
-* **Fixed-shape batches**: every dispatch is an :class:`OpBatch` of exactly
-  ``batch_size`` slots (short tails are padded with invalid slots), so one
-  compiled ``apply_ops`` program serves every traffic pattern — dynamic
-  client batch sizes never trigger recompilation.
+  order. A full micro-batch dispatches immediately; short tails dispatch
+  when their **deadline** (``max_delay``) expires, when a result is
+  demanded, or on :meth:`flush`.
+* **Shape ladder**: a forced (deadline/flush/backpressure) dispatch pads to
+  the smallest power-of-two-ish ladder rung that fits instead of the full
+  ``batch_size`` (one compiled program per rung — a logarithmic set), so
+  deadline-mode padding waste stays bounded by the live op count.
+* **Admission control**: ``max_pending`` bounds the pending queue with an
+  explicit policy — ``"block"`` (dispatch early to make room — the
+  backpressure path), ``"shed"`` (refuse the submission; its ticket
+  reports ``shed``), or ``"error"`` (raise
+  :class:`~repro.amq.dispatch.QueueFullError`). ``client_share`` caps any
+  one client's slice of the queue (fairness).
 * **Fused execution**: each micro-batch runs as a single mixed-op pass on
   the wrapped handle — queries, inserts, and deletes of *different* clients
   share one dispatch; in-batch order equals global arrival order, so the
@@ -20,11 +27,19 @@ dispatches. The service bridges the two (DESIGN.md §9):
   batch's :class:`~repro.amq.protocol.MixedReport` as unconcretised device
   arrays and immediately continues packing the next batch while the device
   churns; the handle donates its state buffers to each dispatch, so the
-  table is updated in place. Results are only pulled to the host when a
-  ticket's :meth:`Ticket.result` is called.
+  table is updated in place. ``max_in_flight`` bounds the unconcretised
+  window (default 2: classic double buffering); results are pulled to the
+  host when a ticket's :meth:`Ticket.result` is called or the window
+  slides.
 * **Scatter**: every submission returns a :class:`Ticket` that knows which
   slots of which micro-batches carry its ops; ``result()`` gathers exactly
   those slots back into per-client order, however the ops were interleaved.
+  Tickets carry enqueue → dispatch → ready timestamps.
+* **Observability**: a :class:`~repro.amq.dispatch.ServiceMetrics` ledger
+  (histogram-bucketed enqueue→dispatch / enqueue→ready latency, queue
+  depth, padding waste, dispatch-size and trigger distributions, per-client
+  admission outcomes, swap pauses) — read the legacy counters as
+  ``svc.stats["ops"]`` and the full SLO snapshot as ``svc.stats()``.
 * **Hot swap** (DESIGN.md §10): :meth:`FilterService.hot_swap` drains the
   pending stream onto the old backend, migrates its state onto a new
   handle via snapshot/restore (including exact resharding onto a new mesh
@@ -35,10 +50,13 @@ Example::
 
     from repro import amq
 
-    svc = amq.FilterService(amq.make("cuckoo", capacity=1 << 20))
-    t1 = svc.insert(keys_a)             # client A
-    t2 = svc.query(keys_b)              # client B — may share A's batch
-    hits = t2.result()                  # flushes pending ops, scatters B's
+    svc = amq.FilterService(amq.make("cuckoo", capacity=1 << 20),
+                            batch_size=1024, max_delay=0.002,
+                            max_pending=8192, admission="shed")
+    t1 = svc.insert(keys_a, client="ingest")   # client A
+    t2 = svc.query(keys_b, client="serve")     # client B — may share A's batch
+    hits = t2.result()                         # flushes pending ops, scatters B's
+    svc.stats()["ready"]["p99_s"]              # SLO readout
 """
 
 from __future__ import annotations
@@ -51,35 +69,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.hashing import normalize_keys
+from .dispatch import (
+    Dispatch,
+    PendingStream,
+    QueueFullError,
+    ServiceMetrics,
+    batch_align,
+    rung_for,
+    shape_ladder,
+)
 from .protocol import (
     OP_DELETE,
     OP_INSERT,
     OP_QUERY,
-    MixedReport,
     OpBatch,
     normalize_ops,
 )
 
-
-class _Dispatch:
-    """One executed micro-batch: its (lazy) report and concretised cache."""
-
-    __slots__ = ("report", "_ok", "_routed")
-
-    def __init__(self, report: MixedReport):
-        self.report = report
-        self._ok: Optional[np.ndarray] = None
-        self._routed: Optional[np.ndarray] = None
-
-    def ok(self) -> np.ndarray:
-        if self._ok is None:  # first touch blocks on the device result
-            self._ok = np.asarray(self.report.ok, bool)
-        return self._ok
-
-    def routed(self) -> np.ndarray:
-        if self._routed is None:
-            self._routed = np.asarray(self.report.routed, bool)
-        return self._routed
+_ADMISSION_POLICIES = ("block", "shed", "error")
 
 
 class Ticket:
@@ -89,31 +96,52 @@ class Ticket:
     (query → hit, insert → landed, delete → removed). ``routed()`` returns
     the matching routed mask (sharded backends). Both force a flush of any
     still-pending part of the submission.
+
+    Lifecycle timestamps (service-clock seconds): ``t_enqueue`` when the
+    submission was accepted, ``t_dispatch`` when its last op left the
+    pending queue, ``t_ready`` when its results were first gathered.
+    ``shed`` marks a submission refused by the shed admission policy —
+    its ops never ran (``result()`` is all-False and nothing ever flushes
+    on its behalf).
     """
 
-    def __init__(self, service: "FilterService", n: int):
+    def __init__(self, service: "FilterService", n: int, *, client=None,
+                 shed: bool = False):
         self._service = service
         self._n = n
+        self.client = client
+        self.shed = shed
+        self.t_enqueue: float = service._clock()
+        self.t_dispatch: Optional[float] = None
+        self.t_ready: Optional[float] = None
         # (dispatch, slots-in-batch, positions-in-submission); appended by
         # the service when a batch carrying part of this submission
-        # launches. Tickets are the only owners of _Dispatch objects, so a
+        # launches. Tickets are the only owners of Dispatch objects, so a
         # batch's reports are reclaimed as soon as every ticket that drew
-        # from it is garbage — the service itself retains nothing.
-        self._parts: List[Tuple[_Dispatch, np.ndarray, np.ndarray]] = []
+        # from it is garbage — the service itself only keeps the bounded
+        # in-flight window.
+        self._parts: List[Tuple[Dispatch, np.ndarray, np.ndarray]] = []
         self._filled = 0
+        if n == 0 or shed:
+            # Nothing will ever dispatch for this ticket: it is born ready.
+            self.t_dispatch = self.t_ready = self.t_enqueue
 
     def _gather(self, field: str) -> np.ndarray:
+        if self.shed:
+            return np.zeros((self._n,), bool)
         self._service._flush_for(self)
         out = np.zeros((self._n,), bool)
         for dispatch, slots, positions in self._parts:
             out[positions] = getattr(dispatch, field)()[slots]
+        if self.t_ready is None:
+            self.t_ready = self._service._clock()
         return out
 
     @property
     def dispatched(self) -> bool:
         """True once every op of this submission has left the pending
         stream — ``result()`` will then not force a flush."""
-        return self._filled >= self._n
+        return self.shed or self._filled >= self._n
 
     def result(self) -> np.ndarray:
         """Per-op outcomes, in submission order (bool[n])."""
@@ -124,55 +152,159 @@ class Ticket:
         return self._gather("routed")
 
 
-class FilterService:
-    """Coalesce many clients' op streams into fused fixed-size OpBatches.
+class _ServiceStats(dict):
+    """Legacy counter dict that is also callable for the full SLO snapshot.
 
-    ``handle`` is any AMQ handle (static or cascade). ``batch_size`` is the
-    micro-batch width — the one compiled shape; keep it large enough to
-    amortise dispatch, small enough that padding on a forced flush stays
-    cheap (the :attr:`stats_fill` property reports the realised
-    utilisation; ``stats`` counts dispatches/ops/padded slots).
+    ``svc.stats["dispatches"]`` keeps working (the pre-§11 counter
+    surface); ``svc.stats()`` returns the complete
+    :meth:`~repro.amq.dispatch.ServiceMetrics.stats` payload plus these
+    counters and the live queue depth.
     """
 
-    def __init__(self, handle, *, batch_size: int = 1024):
-        if batch_size <= 0:
-            raise ValueError(f"batch_size must be positive, got {batch_size}")
+    def __init__(self, service: "FilterService"):
+        super().__init__(dispatches=0, ops=0, padded=0)
+        self._service = service
+
+    def __call__(self) -> dict:
+        svc = self._service
+        out = svc.metrics.stats()
+        out.update(self)
+        out["pending_ops"] = svc.pending_ops
+        out["fill"] = svc.stats_fill
+        out["batch_size"] = svc.batch_size
+        out["shape_ladder"] = list(svc._ladder)
+        out["backend"] = svc.handle.name
+        return out
+
+
+def _validate_args(batch_size, max_delay, max_pending, admission,
+                   client_share, max_in_flight) -> None:
+    """Loud, argument-naming boundary checks (DESIGN.md §10 discipline)."""
+    if not isinstance(batch_size, (int, np.integer)) or batch_size <= 0:
+        raise ValueError(
+            f"batch_size must be a positive int, got {batch_size!r}")
+    if max_delay is not None:
+        try:
+            bad = not (float(max_delay) >= 0.0)
+        except (TypeError, ValueError):
+            bad = True
+        if bad:
+            raise ValueError(
+                f"max_delay must be None or a non-negative number of "
+                f"seconds, got {max_delay!r}")
+    if max_pending is not None and (
+            not isinstance(max_pending, (int, np.integer))
+            or max_pending <= 0):
+        raise ValueError(
+            f"max_pending must be None or a positive int, got "
+            f"{max_pending!r}")
+    if admission not in _ADMISSION_POLICIES:
+        raise ValueError(
+            f"admission must be one of {_ADMISSION_POLICIES}, got "
+            f"{admission!r}")
+    if not (isinstance(client_share, (int, float, np.floating))
+            and 0.0 < float(client_share) <= 1.0):
+        raise ValueError(
+            f"client_share must be a fraction in (0, 1], got "
+            f"{client_share!r}")
+    if max_in_flight is not None and (
+            not isinstance(max_in_flight, (int, np.integer))
+            or max_in_flight <= 0):
+        raise ValueError(
+            f"max_in_flight must be None or a positive int, got "
+            f"{max_in_flight!r}")
+
+
+class FilterService:
+    """Coalesce many clients' op streams into fused, SLO-aware OpBatches.
+
+    ``handle`` is any AMQ handle (static or cascade). ``batch_size`` is the
+    micro-batch width — the top of the dispatch shape ladder; keep it large
+    enough to amortise dispatch, small enough that a full batch's compute
+    fits the latency budget.
+
+    SLO knobs (all validated loudly, DESIGN.md §11):
+
+    * ``max_delay`` — deadline seconds: once the oldest pending op has
+      waited this long, the next service interaction (any submit, an
+      explicit :meth:`poll`, or a result gather) dispatches the tail at a
+      ladder shape instead of letting it wait for a full batch. ``None``
+      (default) preserves the pre-§11 dispatch-on-full-only behaviour.
+    * ``max_pending`` / ``admission`` / ``client_share`` — admission
+      control (see class docstring bullets).
+    * ``max_in_flight`` — unconcretised dispatch window (default 2).
+    * ``clock`` — injectable monotonic-seconds source (defaults to
+      ``time.monotonic``); the traffic harness drives a virtual clock
+      through it, which is also how deadline behaviour is unit-tested.
+    """
+
+    def __init__(self, handle, *, batch_size: int = 1024,
+                 max_delay: Optional[float] = None,
+                 max_pending: Optional[int] = None,
+                 admission: str = "block",
+                 client_share: float = 1.0,
+                 max_in_flight: Optional[int] = 2,
+                 clock=None):
+        _validate_args(batch_size, max_delay, max_pending, admission,
+                       client_share, max_in_flight)
         self.handle = handle
         self.batch_size = int(batch_size)
-        self._keys: List[np.ndarray] = []     # pending key rows [m, 2]
-        self._ops: List[np.ndarray] = []      # pending op codes [m]
-        # Pending claims as (ticket, start-pos-in-submission, count) ranges
-        # — submissions are contiguous in arrival order, so bookkeeping is
-        # O(#submissions), never O(#ops).
-        self._claims: List[Tuple[Ticket, int, int]] = []
-        self._pending = 0
-        self.stats = {"dispatches": 0, "ops": 0, "padded": 0}
+        self.max_delay = None if max_delay is None else float(max_delay)
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self.admission = admission
+        self.client_share = float(client_share)
+        self.max_in_flight = (None if max_in_flight is None
+                              else int(max_in_flight))
+        self._clock = time.monotonic if clock is None else clock
+        self._align = batch_align(handle)
+        self._ladder = shape_ladder(self.batch_size, self._align)
+        self._queue = PendingStream()
+        self._in_flight: List[Dispatch] = []
+        self.metrics = ServiceMetrics()
+        self.stats = _ServiceStats(self)
 
     # -- introspection -------------------------------------------------------
 
     @property
     def pending_ops(self) -> int:
         """Ops accepted but not yet dispatched."""
-        return self._pending
+        return self._queue.pending
 
     @property
     def stats_fill(self) -> float:
         """Realised batch utilisation: live slots / dispatched slots."""
-        total = self.stats["ops"] - self._pending + self.stats["padded"]
-        live = self.stats["ops"] - self._pending
+        total = (self.stats["ops"] - self.pending_ops - self.metrics.shed_ops
+                 + self.stats["padded"])
+        live = self.stats["ops"] - self.pending_ops - self.metrics.shed_ops
         return live / total if total else 1.0
+
+    @property
+    def shape_ladder(self) -> Tuple[int, ...]:
+        """The dispatch shapes this service pads to (top = batch_size)."""
+        return self._ladder
+
+    def _client_limit(self) -> Optional[int]:
+        if self.max_pending is None or self.client_share >= 1.0:
+            return None
+        return max(1, int(self.client_share * self.max_pending))
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, keys, ops) -> Ticket:
+    def submit(self, keys, ops, *, client=None) -> Ticket:
         """Append a client's op stream; returns its :class:`Ticket`.
 
         ``keys``: raw ``uint64[m]`` or packed ``uint32[m, 2]`` pairs (the
         key-format contract — see ``repro.core.hashing.normalize_keys``);
-        ``ops``: int32[m] op codes. The ops join the global stream in call
-        order — coalescing never reorders. Malformed arguments raise
-        ``ValueError`` naming the offending argument at the boundary,
-        before anything is enqueued.
+        ``ops``: int32[m] op codes; ``client``: optional hashable id for
+        fairness accounting and the per-client queue-share bound. The ops
+        join the global stream in call order — coalescing never reorders.
+        Malformed arguments raise ``ValueError`` naming the offending
+        argument at the boundary, before anything is enqueued; a full
+        queue follows the admission policy (block / shed / error).
+
+        ``n == 0`` submissions return an immediately-ready empty ticket:
+        nothing is enqueued, no padded dispatch is forced, and no deadline
+        starts ticking.
         """
         keys = np.asarray(normalize_keys(keys, arg="keys"), np.uint32)
         ops = np.asarray(normalize_ops(ops, keys.shape[0]), np.int32)
@@ -181,38 +313,101 @@ class FilterService:
             raise NotImplementedError(
                 f"{self.handle.name}: append-only backend cannot serve "
                 "deletes (capabilities.supports_delete is False)")
-        ticket = Ticket(self, keys.shape[0])
-        if keys.shape[0]:
-            self._keys.append(keys)
-            self._ops.append(ops)
-            self._claims.append((ticket, 0, keys.shape[0]))
-            self._pending += keys.shape[0]
-            self.stats["ops"] += keys.shape[0]
-        while self._pending >= self.batch_size:
-            self._dispatch(self.batch_size)
+        n = keys.shape[0]
+        if n == 0:
+            return Ticket(self, 0, client=client)
+
+        # -- admission control (DESIGN.md §11) -------------------------------
+        if self.max_pending is not None:
+            if self.admission == "block":
+                # Backpressure: make room by dispatching early. Ladder
+                # shapes keep the forced padding proportional to the tail.
+                while (self._queue.pending
+                       and self._queue.pending + n > self.max_pending):
+                    self._dispatch(min(self._queue.pending, self.batch_size),
+                                   kind="backpressure")
+            else:
+                share = self._client_limit()
+                held = self._queue.client_pending.get(client, 0)
+                over_share = share is not None and held + n > share
+                over_global = self._queue.pending + n > self.max_pending
+                if over_global or over_share:
+                    bound = (f"max_pending={self.max_pending}" if over_global
+                             else f"client {client!r} share={share} "
+                                  f"(client_share={self.client_share})")
+                    if self.admission == "error":
+                        raise QueueFullError(
+                            f"pending queue full: {self._queue.pending} "
+                            f"pending + {n} submitted exceeds {bound}")
+                    self.metrics.observe_shed(n, client)
+                    return Ticket(self, n, client=client, shed=True)
+
+        ticket = Ticket(self, n, client=client)
+        self._queue.append(keys, ops, ticket.t_enqueue, ticket, client)
+        self.stats["ops"] += n
+        self.metrics.observe_enqueue(n, client, self._queue.pending)
+        while self._queue.pending >= self.batch_size:
+            self._dispatch(self.batch_size, kind="full")
+        if (self.max_pending is not None and self.admission == "block"
+                and self._queue.pending > self.max_pending):
+            # A single over-bound submission: drain its own tail too.
+            self._dispatch(self._queue.pending, kind="backpressure")
+        self.poll()
         return ticket
 
-    def query(self, keys) -> Ticket:
+    def query(self, keys, *, client=None) -> Ticket:
         """Enqueue membership queries for ``keys``."""
         return self.submit(keys, np.full((np.asarray(keys).shape[0],),
-                                         OP_QUERY, np.int32))
+                                         OP_QUERY, np.int32), client=client)
 
-    def insert(self, keys) -> Ticket:
+    def insert(self, keys, *, client=None) -> Ticket:
         """Enqueue inserts for ``keys``."""
         return self.submit(keys, np.full((np.asarray(keys).shape[0],),
-                                         OP_INSERT, np.int32))
+                                         OP_INSERT, np.int32), client=client)
 
-    def delete(self, keys) -> Ticket:
+    def delete(self, keys, *, client=None) -> Ticket:
         """Enqueue deletes for ``keys`` (capability-gated at submit)."""
         return self.submit(keys, np.full((np.asarray(keys).shape[0],),
-                                         OP_DELETE, np.int32))
+                                         OP_DELETE, np.int32), client=client)
 
     # -- execution -----------------------------------------------------------
 
+    def poll(self) -> int:
+        """Fire any deadline-due dispatches; returns how many were fired.
+
+        With ``max_delay`` unset this is a no-op. Call it from an event
+        loop (or let any submit/result call do it implicitly) — the
+        deadline guarantee is: once the oldest pending op has waited
+        ``max_delay``, the *next* service interaction dispatches it, so
+        enqueue→dispatch latency is bounded by ``max_delay`` plus one
+        interaction gap plus one dispatch.
+        """
+        if self.max_delay is None:
+            return 0
+        fired = 0
+        while self._queue.pending:
+            oldest = self._queue.oldest_enqueue()
+            if self._clock() - oldest < self.max_delay:
+                break
+            self._dispatch(min(self._queue.pending, self.batch_size),
+                           kind="deadline")
+            fired += 1
+        return fired
+
     def flush(self) -> None:
-        """Dispatch every pending op now (the tail batch is padded)."""
-        while self._pending:
-            self._dispatch(min(self._pending, self.batch_size))
+        """Dispatch every pending op now (tails pad to ladder shapes)."""
+        while self._queue.pending:
+            self._dispatch(min(self._queue.pending, self.batch_size),
+                           kind="flush")
+
+    def drain(self) -> None:
+        """Flush, then concretise every in-flight dispatch (settles the
+        enqueue→ready histogram — the harness calls this before reading
+        final metrics)."""
+        self.flush()
+        for dispatch in self._in_flight:
+            dispatch.ok()
+        self._in_flight.clear()
 
     def hot_swap(self, new_handle, *, migrate: bool = True) -> dict:
         """Swap the backing filter with zero downtime (DESIGN.md §10).
@@ -232,20 +427,31 @@ class FilterService:
            to swap to a pre-populated handle (e.g. rebuilt offline from
            the source of truth).
         3. **resume** — subsequent submissions coalesce onto the new
-           handle; nothing about tickets or batching changes.
+           handle; the shape ladder is rebuilt for the new backend's
+           ``batch_align`` (a K→K′ reshard changes the legal dispatch
+           widths); nothing about tickets or batching changes.
 
         Returns swap stats: ``pause_s`` (wall-clock the service could not
         accept dispatches), ``drained_ops``, ``migrated``, and the old/new
-        backend names. Mismatched migration targets raise
+        backend names; the record is also appended to
+        ``metrics.swaps``. Mismatched migration targets raise
         :class:`~repro.amq.protocol.SnapshotMismatchError` *before* the
-        swap — the service keeps running on the old handle.
+        swap — the service keeps running on the old handle. An incompatible
+        ``batch_align`` (the new mesh cannot split ``batch_size``) raises
+        ``ValueError`` before anything drains.
 
         Example::
 
             >>> svc.hot_swap(old.resharded(num_shards=8))   # grow the mesh
         """
+        align = batch_align(new_handle)
+        if self.batch_size % align:
+            raise ValueError(
+                f"batch_size={self.batch_size} is not a multiple of the "
+                f"new handle's batch_align={align}; the swapped-in backend "
+                "could never dispatch — refusing before the drain")
         t0 = time.perf_counter()
-        drained = self._pending
+        drained = self.pending_ops
         self.flush()
         old = self.handle
         # Sync: the old table(s) are fully materialized before migration
@@ -257,57 +463,50 @@ class FilterService:
         if migrate:
             new_handle.restore(old.snapshot())
         self.handle = new_handle
-        return {"pause_s": time.perf_counter() - t0,
-                "drained_ops": drained, "migrated": bool(migrate),
-                "old_backend": old.name, "new_backend": new_handle.name}
+        self._align = align
+        self._ladder = shape_ladder(self.batch_size, align)
+        record = {"pause_s": time.perf_counter() - t0,
+                  "drained_ops": drained, "migrated": bool(migrate),
+                  "old_backend": old.name, "new_backend": new_handle.name}
+        self.metrics.observe_swap(record)
+        return record
 
     def _flush_for(self, ticket: Ticket) -> None:
         if ticket._filled < ticket._n:
             self.flush()
 
-    def _take(self, m: int):
-        """Pop the first ``m`` pending ops off the stream.
-
-        Returns the packed keys/ops plus the claim ranges they came from,
-        splitting the tail range when a submission straddles the batch
-        boundary.
-        """
-        keys_out, ops_out, claims = [], [], []
-        need = m
-        while need:
-            k, o = self._keys[0], self._ops[0]
-            ticket, start, cnt = self._claims[0]
-            take = min(cnt, need)
-            keys_out.append(k[:take])
-            ops_out.append(o[:take])
-            claims.append((ticket, start, take))
-            if take == cnt:
-                self._keys.pop(0)
-                self._ops.pop(0)
-                self._claims.pop(0)
-            else:
-                self._keys[0] = k[take:]
-                self._ops[0] = o[take:]
-                self._claims[0] = (ticket, start + take, cnt - take)
-            need -= take
-        self._pending -= m
-        return np.concatenate(keys_out), np.concatenate(ops_out), claims
-
-    def _dispatch(self, m: int) -> None:
-        keys, ops, claims = self._take(m)
+    def _dispatch(self, m: int, kind: str = "full") -> None:
+        now = self._clock()
+        keys, ops, enqueued_at, claims = self._queue.take(m)
+        shape = rung_for(m, self._ladder)
         batch = OpBatch.make(jnp.asarray(keys), jnp.asarray(ops)).pad_to(
-            self.batch_size)
-        report = self.handle.apply_ops(batch)   # async: not concretised here
-        dispatch = _Dispatch(report)
+            shape)
+        report = self.handle.apply_ops(batch)  # async: not concretised here
+        dispatch = Dispatch(report, self.metrics, self._clock, enqueued_at)
         self.stats["dispatches"] += 1
-        self.stats["padded"] += self.batch_size - m
+        self.stats["padded"] += shape - m
+        self.metrics.observe_dispatch(m, shape, kind, now - enqueued_at)
 
         # Scatter the contiguous claim ranges back onto tickets (the
-        # tickets alone keep the dispatch alive — see Ticket._parts).
+        # tickets alone keep a dispatch alive past the in-flight window —
+        # see Ticket._parts).
         slot = 0
         for ticket, start, cnt in claims:
             ticket._parts.append((dispatch,
                                   np.arange(slot, slot + cnt),
                                   np.arange(start, start + cnt)))
             ticket._filled += cnt
+            if ticket._filled >= ticket._n:
+                ticket.t_dispatch = now
             slot += cnt
+
+        # Slide the in-flight window: concretising the oldest batch is the
+        # double-buffering backstop (bounded device-result backlog) and
+        # what stamps enqueue→ready latencies promptly. With an unbounded
+        # window the service tracks nothing (tickets alone own dispatches,
+        # the pre-§11 behaviour).
+        if self.max_in_flight is not None:
+            self._in_flight.append(dispatch)
+            while len(self._in_flight) > self.max_in_flight:
+                self._in_flight.pop(0).ok()
+            self._in_flight = [d for d in self._in_flight if not d.done]

@@ -121,6 +121,16 @@ class ShardedCuckooConfig:
     def total_slots(self) -> int:
         return self.partitions * self.shard.num_slots
 
+    @property
+    def batch_align(self) -> int:
+        """Required batch-width divisor: ops split across ``num_shards``.
+
+        Front-ends that choose dispatch shapes (the serving engine's shape
+        ladder, DESIGN.md §11) read this to keep every padded batch legal
+        for the per-device ``shard_map`` split.
+        """
+        return self.num_shards
+
     # -- AMQ protocol surface (repro.amq.protocol.AMQConfig) ----------------
     @property
     def num_slots(self) -> int:

@@ -147,8 +147,13 @@ class StreamingDeduper:
     """
 
     def __init__(self, handle, *, service_batch: int = 512,
-                 service: Optional["amq.FilterService"] = None):
-        self.service = (amq.FilterService(handle, batch_size=service_batch)
+                 service: Optional["amq.FilterService"] = None,
+                 service_kw: Optional[dict] = None):
+        if service is not None and service_kw:
+            raise TypeError("service_kw only applies when the deduper builds "
+                            "its own service")
+        self.service = (amq.FilterService(handle, batch_size=service_batch,
+                                          **(service_kw or {}))
                         if service is None else service)
         self.stats = {"duplicates": 0, "insert_failures": 0}
         self._admissions: list = []   # tickets whose failures aren't counted
@@ -217,17 +222,20 @@ class StreamingDeduper:
 
 def make_deduper(capacity: int, backend: str = "cuckoo", *,
                  auto_expand: bool = True, service_batch: int = 512,
+                 service_kw: Optional[dict] = None,
                  **kw) -> StreamingDeduper:
     """Build a :class:`StreamingDeduper` on any registry backend.
 
     ``capacity`` is the initial window size; with ``auto_expand`` (the
     default, where the backend supports it) the filter grows online, so
     streaming jobs no longer need to guess their dedup volume up front.
+    ``service_kw`` flows to the underlying :class:`repro.amq.FilterService`
+    (deadline, admission policy, queue bound — DESIGN.md §11).
     """
     return StreamingDeduper(
         amq.make(backend, capacity=capacity,
                  auto_expand="auto" if auto_expand else False, **kw),
-        service_batch=service_batch)
+        service_batch=service_batch, service_kw=service_kw)
 
 
 # Backwards-compat convenience mirroring the original module surface.

@@ -26,12 +26,16 @@ class ServeEngine:
                  prefix_cache_entries: int = 64,
                  prefix_cache_backend: str = "cuckoo",
                  prefix_cache_auto_expand: bool = True,
-                 prefix_cache_kw: Optional[Dict[str, Any]] = None):
+                 prefix_cache_kw: Optional[Dict[str, Any]] = None,
+                 prefix_cache_service_kw: Optional[Dict[str, Any]] = None):
         """``prefix_cache_backend`` / ``prefix_cache_auto_expand`` /
         ``prefix_cache_kw`` flow to :class:`PrefixCache`, so the engine's
         guard filter uses the full AMQ registry surface (any backend,
         auto-expanding by default) instead of the legacy fixed-capacity
-        construction."""
+        construction. ``prefix_cache_service_kw`` configures the guard
+        filter's micro-batching service (deadline, admission policy —
+        DESIGN.md §11); its SLO snapshot rides the stats returned by
+        :meth:`generate` under ``"filter_service"``."""
         if model.cfg.frontend == "frames":
             raise ValueError("encoder-only arch has no autoregressive serve")
         self.model = model
@@ -42,6 +46,7 @@ class ServeEngine:
             prefix_cache_entries,
             backend=prefix_cache_backend,
             auto_expand=prefix_cache_auto_expand,
+            service_kw=prefix_cache_service_kw,
             **(prefix_cache_kw or {}))
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
@@ -84,4 +89,6 @@ class ServeEngine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(np.asarray(tok))
         tokens = np.stack(out, axis=1)
-        return tokens, dict(self.prefix_cache.stats)
+        stats = dict(self.prefix_cache.stats)
+        stats["filter_service"] = self.prefix_cache.slo_stats()
+        return tokens, stats

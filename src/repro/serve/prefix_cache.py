@@ -61,6 +61,10 @@ class PrefixCache:
     micro-batches). ``auto_expand`` (default True, where the backend
     supports it) makes the guard an auto-expanding cascade, so
     ``filter_capacity`` is only an initial size, not a ceiling.
+    ``service_kw`` flows to the :class:`repro.amq.FilterService` the cache
+    builds (``max_delay``, ``max_pending``, ``admission``, ... — DESIGN.md
+    §11), so serving deployments set deadline/backpressure policy at the
+    cache constructor.
     """
 
     def __init__(self, capacity_entries: int, filter_capacity: int = 0,
@@ -69,6 +73,7 @@ class PrefixCache:
                  auto_expand: bool = True,
                  service: Optional["amq.FilterService"] = None,
                  service_batch: int = 64,
+                 service_kw: Optional[dict] = None,
                  **filter_kw):
         self.capacity = capacity_entries
         self.entries: "collections.OrderedDict[int, Any]" = \
@@ -80,9 +85,14 @@ class PrefixCache:
                     backend, capacity=fcap,
                     auto_expand="auto" if auto_expand else False, **filter_kw)
             service = amq.FilterService(filter_handle,
-                                        batch_size=service_batch)
+                                        batch_size=service_batch,
+                                        **(service_kw or {}))
         elif filter_handle is not None:
             raise TypeError("pass filter_handle= or service=, not both")
+        elif service_kw:
+            raise TypeError("service_kw only applies when the cache builds "
+                            "its own service; configure the shared service "
+                            "directly instead")
         self.service = service
         self.stats = {"hits": 0, "misses": 0, "filtered": 0,
                       "evictions": 0, "stale": 0}
@@ -107,6 +117,16 @@ class PrefixCache:
         lookups are guarded by the new backend. Returns the swap stats.
         """
         return self.service.hot_swap(new_handle, **kw)
+
+    def slo_stats(self) -> dict:
+        """Serving-SLO snapshot of the guard-filter service.
+
+        The full :meth:`repro.amq.FilterService.stats` payload — queue-wait
+        and enqueue-to-ready latency percentiles, dispatch-size histogram,
+        padding waste, admission counters — for the service this cache
+        rides (shared or private).
+        """
+        return self.service.stats()
 
     def _fkey(self, key: int):
         return np.asarray(

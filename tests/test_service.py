@@ -73,13 +73,18 @@ def test_multi_client_interleaved_scatter(batch_size):
 def test_fixed_shape_batches_and_padding_stats():
     svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
                             batch_size=16)
+    assert svc.shape_ladder == (8, 16)
     svc.insert(_kk(np.arange(1, 25)))       # 24 ops -> one full batch + 8
     assert svc.stats["dispatches"] == 1     # full batch dispatched eagerly
     assert svc.pending_ops == 8
     svc.flush()
     assert svc.pending_ops == 0
     assert svc.stats["dispatches"] == 2
-    assert svc.stats["padded"] == 8         # the tail batch was padded
+    assert svc.stats["padded"] == 0         # 8-op tail fits rung 8 exactly
+    assert svc.metrics.dispatch_sizes == {16: 1, 8: 1}
+    svc.insert(_kk(np.arange(1, 4)))        # 3-op tail -> rung 8, 5 padded
+    svc.flush()
+    assert svc.stats["padded"] == 5
     assert 0.0 < svc.stats_fill <= 1.0
 
 
@@ -175,3 +180,182 @@ def test_streaming_dedup_on_service():
     out2, stats2 = d.dedup({"tokens": tokens})
     assert stats2["duplicates"] == 16       # all seen now
     assert d.stats["duplicates"] == 30
+
+
+# ---------------------------------------------------------------------------
+# §11 serving engine: deadlines, shape ladder, admission control, metrics.
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Deterministic injectable service clock (seconds)."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+def _svc(batch_size=64, backend="cuckoo", **kw):
+    return amq.FilterService(amq.make(backend, capacity=CAPACITY),
+                             batch_size=batch_size, **kw)
+
+
+def test_empty_submission_is_immediately_ready():
+    """n=0 never enqueues, never forces a padded dispatch, never flushes."""
+    svc = _svc(batch_size=16)
+    pending_before = svc.insert(_kk([1, 2]))    # real ops stay pending
+    t = svc.query(np.zeros((0,), np.uint64))
+    assert t.dispatched
+    assert t.result().shape == (0,) and t.routed().shape == (0,)
+    assert t.t_ready is not None
+    assert svc.pending_ops == 2                 # untouched: no forced flush
+    assert svc.stats["dispatches"] == 0
+    assert pending_before.result().shape == (2,)
+
+
+@pytest.mark.parametrize("kw,match", [
+    ({"batch_size": 0}, "batch_size"),
+    ({"batch_size": -8}, "batch_size"),
+    ({"max_delay": -1.0}, "max_delay"),
+    ({"max_delay": "soon"}, "max_delay"),
+    ({"max_pending": 0}, "max_pending"),
+    ({"max_pending": -5}, "max_pending"),
+    ({"admission": "panic"}, "admission"),
+    ({"client_share": 0.0}, "client_share"),
+    ({"client_share": 1.5}, "client_share"),
+    ({"max_in_flight": 0}, "max_in_flight"),
+])
+def test_constructor_validation_names_the_argument(kw, match):
+    with pytest.raises(ValueError, match=match):
+        amq.FilterService(amq.make("cuckoo", capacity=256), **kw)
+
+
+def test_deadline_dispatch_bounded_by_max_delay():
+    """Once the oldest op has waited max_delay, the next poll dispatches."""
+    clock = FakeClock()
+    svc = _svc(batch_size=64, max_delay=0.5, clock=clock)
+    svc.insert(_kk([1, 2, 3]))
+    assert svc.poll() == 0 and svc.stats["dispatches"] == 0
+    clock.advance(0.49)
+    assert svc.poll() == 0                  # not due yet
+    clock.advance(0.02)
+    assert svc.poll() == 1                  # due: dispatched at a ladder rung
+    assert svc.stats["dispatches"] == 1
+    assert svc.metrics.dispatch_kinds == {"deadline": 1}
+    assert svc.metrics.dispatch_sizes == {8: 1}
+    # queue-wait latency was recorded and is bounded by max_delay + poll gap
+    assert svc.metrics.queue_wait.total == 3
+    assert svc.metrics.queue_wait.percentile(1.0) <= 1.0
+
+
+def test_deadline_fires_on_next_submit_too():
+    clock = FakeClock()
+    svc = _svc(batch_size=64, max_delay=0.1, clock=clock)
+    svc.insert(_kk([1]))
+    clock.advance(0.2)
+    svc.insert(_kk([2]))                    # submit itself polls the deadline
+    assert svc.stats["dispatches"] == 1
+    assert svc.pending_ops == 0             # both ops rode the dispatch
+
+
+def test_admission_block_bounds_queue_via_backpressure():
+    svc = _svc(batch_size=64, max_pending=8, admission="block")
+    for i in range(6):
+        svc.insert(_kk(np.arange(1, 4) + 10 * i))   # 3 ops each
+    assert svc.pending_ops <= 8             # bound held by early dispatches
+    assert svc.metrics.dispatch_kinds.get("backpressure", 0) > 0
+    assert svc.metrics.shed_ops == 0        # block never drops
+
+
+def test_admission_shed_keeps_bound_and_marks_tickets():
+    svc = _svc(batch_size=64, max_pending=4, admission="shed")
+    kept = svc.insert(_kk([1, 2, 3]))
+    shed = svc.insert(_kk([4, 5, 6]))       # 3 + 3 > 4 -> refused whole
+    assert not kept.shed and shed.shed and shed.dispatched
+    assert not shed.result().any() and not shed.routed().any()
+    assert svc.pending_ops == 3             # bound held, nothing dispatched
+    assert svc.stats["dispatches"] == 0
+    assert svc.metrics.shed_ops == 3 and svc.metrics.shed_submissions == 1
+    assert kept.result().all()              # accepted ops still correct
+
+
+def test_admission_error_raises_queue_full():
+    svc = _svc(batch_size=64, max_pending=4, admission="error")
+    svc.insert(_kk([1, 2, 3]))
+    with pytest.raises(amq.QueueFullError, match="max_pending=4"):
+        svc.insert(_kk([4, 5]))
+    assert svc.pending_ops == 3
+    svc.flush()                             # accepted traffic unaffected
+
+
+def test_client_share_fairness():
+    svc = _svc(batch_size=64, max_pending=10, admission="shed",
+               client_share=0.5)            # any one client: <= 5 slots
+    a1 = svc.insert(_kk([1, 2, 3]), client="a")
+    a2 = svc.insert(_kk([4, 5, 6]), client="a")   # a would hold 6 > 5
+    b1 = svc.insert(_kk([7, 8, 9]), client="b")   # b is under its share
+    assert not a1.shed and a2.shed and not b1.shed
+    assert svc.metrics.clients["a"] == {"accepted": 3, "shed": 3}
+    assert svc.metrics.clients["b"] == {"accepted": 3, "shed": 0}
+
+
+def test_stats_callable_snapshot_and_ready_histogram():
+    svc = _svc(batch_size=16, max_in_flight=1)
+    svc.insert(_kk(np.arange(1, 20)))       # 16 dispatch + 3 pending
+    svc.drain()
+    snap = svc.stats()
+    assert snap["dispatches"] == svc.stats["dispatches"] == 2
+    assert snap["pending_ops"] == 0
+    assert snap["ready"]["count"] == 19     # every op's latency recorded
+    assert snap["queue_wait"]["count"] == 19
+    assert snap["ready"]["p99_s"] >= snap["ready"]["p50_s"] >= 0.0
+    assert snap["backend"] == "cuckoo"
+    assert snap["shape_ladder"] == [8, 16]
+    assert 0.0 <= snap["padding_waste"] < 1.0
+
+
+def test_ticket_timestamps_progress():
+    clock = FakeClock()
+    svc = _svc(batch_size=8, clock=clock)
+    t = svc.insert(_kk([1, 2]))
+    assert t.t_enqueue == 0.0 and t.t_dispatch is None and t.t_ready is None
+    clock.advance(1.0)
+    svc.flush()
+    assert t.t_dispatch == 1.0 and t.t_ready is None
+    clock.advance(1.0)
+    t.result()
+    assert t.t_ready is not None and t.t_ready >= t.t_dispatch >= t.t_enqueue
+
+
+def test_sharded_service_ladder_respects_batch_align():
+    svc = _svc(batch_size=64, backend="sharded-cuckoo")
+    assert all(r % svc.handle.config.batch_align == 0
+               for r in svc.shape_ladder)
+    keys = _kk(np.arange(1, 6))             # 5 ops -> forced ladder dispatch
+    assert svc.insert(keys).result().all()
+    assert svc.query(keys).result().all()
+
+
+def test_hot_swap_records_metrics_and_validates_align():
+    svc = _svc(batch_size=64)
+    svc.insert(_kk(np.arange(1, 40)))
+    swap = svc.hot_swap(amq.make("cuckoo", config=svc.handle.config))
+    assert svc.metrics.swaps and svc.metrics.swaps[0]["drained_ops"] == \
+        swap["drained_ops"]
+    assert svc.query(_kk(np.arange(1, 40))).result().all()
+
+
+def test_hot_swap_refuses_incompatible_batch_align():
+    svc = _svc(batch_size=64)
+
+    class _Misaligned:
+        name = "misaligned"
+        batch_align = 7
+
+    with pytest.raises(ValueError, match="batch_align"):
+        svc.hot_swap(_Misaligned(), migrate=False)
+    assert svc.handle.name == "cuckoo"      # swap refused before the drain

@@ -1,0 +1,139 @@
+"""Property test: serving-engine schedules match a sequential oracle.
+
+Random interleavings of ``submit`` (including n=0), ``flush``, explicit
+``poll`` with a virtual clock advanced past ``max_delay`` (deadline-
+triggered dispatches), and ``hot_swap`` — every acknowledged submission
+must bit-match a *direct sequential replay*: the same global op stream
+executed submission-by-submission on a bare handle. However the engine
+chops the stream into ladder-shaped micro-batches, pads it, or migrates
+state mid-stream, the per-client scatter is invariant (DESIGN.md §11).
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised in the bare container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from _tuning import examples
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import amq
+from repro.amq.protocol import OpBatch
+from repro.core import keys_from_numpy
+
+CAPACITY = 4096
+UNIVERSE = 8          # tiny key universe -> dense same-key interleavings
+ACTIONS = ("submit", "submit", "submit", "empty", "flush", "tick", "swap")
+
+
+class _Clock:
+    """Virtual service clock: deadlines fire only when ``tick`` advances."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+def _universe(seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return keys_from_numpy(
+        rng.integers(1, 2**63, size=UNIVERSE, dtype=np.uint64))
+
+
+def _replay(submissions, backend="cuckoo", **mk):
+    """Sequential oracle: one padded apply_ops per submission, in order."""
+    handle = amq.make(backend, capacity=CAPACITY, **mk)
+    out = []
+    for keys, ops in submissions:
+        m = keys.shape[0]
+        batch = OpBatch.make(jnp.asarray(keys), jnp.asarray(ops)).pad_to(8)
+        rep = handle.apply_ops(batch)
+        out.append((np.asarray(rep.ok)[:m], np.asarray(rep.routed)[:m]))
+    return out
+
+
+@settings(max_examples=examples(40), deadline=None)
+@given(data=st.data())
+def test_schedules_bit_match_sequential_replay(data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    uni = _universe(seed)
+    clock = _Clock()
+    svc = amq.FilterService(amq.make("cuckoo", capacity=CAPACITY),
+                            batch_size=16, max_delay=0.05, clock=clock)
+    submissions, tickets = [], []
+    for _ in range(data.draw(st.integers(4, 14))):
+        action = data.draw(st.sampled_from(ACTIONS))
+        if action == "submit":
+            m = data.draw(st.integers(1, 6))
+            picks = [data.draw(st.integers(0, UNIVERSE - 1))
+                     for _ in range(m)]
+            ops = np.asarray([data.draw(st.integers(0, 2))
+                              for _ in range(m)], np.int32)
+            keys = uni[np.asarray(picks)]
+            submissions.append((keys, ops))
+            tickets.append(svc.submit(keys, ops))
+        elif action == "empty":
+            t = svc.submit(np.zeros((0,), np.uint64),
+                           np.zeros((0,), np.int32))
+            assert t.dispatched and t.result().shape == (0,)
+        elif action == "flush":
+            svc.flush()
+        elif action == "tick":
+            clock.now += 0.1            # every pending op is now past due
+            svc.poll()
+        elif action == "swap":
+            svc.hot_swap(amq.make("cuckoo", config=svc.handle.config))
+    svc.drain()
+    for i, ((keys, ops), ticket, (ok, routed)) in enumerate(
+            zip(submissions, tickets, _replay(submissions))):
+        np.testing.assert_array_equal(
+            ticket.result(), ok,
+            err_msg=f"submission {i} diverged from sequential replay")
+        np.testing.assert_array_equal(ticket.routed(), routed)
+    assert svc.pending_ops == 0
+    snap = svc.stats()
+    assert snap["ready"]["count"] == sum(k.shape[0]
+                                         for k, _ in submissions)
+
+
+@settings(max_examples=examples(15), deadline=None)
+@given(data=st.data())
+def test_reshard_mid_schedule_bit_matches(data):
+    """K→K′ reshard under queued load: same oracle, zero acked-op loss."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    uni = _universe(seed)
+    svc = amq.FilterService(
+        amq.make("sharded-cuckoo", capacity=CAPACITY, num_shards=1,
+                 partitions_per_shard=2),
+        batch_size=16)
+    submissions, tickets = [], []
+
+    def _submit():
+        m = data.draw(st.integers(1, 6))
+        picks = [data.draw(st.integers(0, UNIVERSE - 1)) for _ in range(m)]
+        ops = np.asarray([data.draw(st.integers(0, 2))
+                          for _ in range(m)], np.int32)
+        keys = uni[np.asarray(picks)]
+        submissions.append((keys, ops))
+        tickets.append(svc.submit(keys, ops))
+
+    for _ in range(data.draw(st.integers(2, 5))):
+        _submit()
+    swap = svc.hot_swap(svc.handle.resharded(num_shards=1))
+    assert swap["migrated"]
+    for _ in range(data.draw(st.integers(2, 5))):
+        _submit()
+    svc.drain()
+    oracle = _replay(submissions, backend="sharded-cuckoo", num_shards=1,
+                     partitions_per_shard=2)
+    for i, ((keys, ops), ticket, (ok, routed)) in enumerate(
+            zip(submissions, tickets, oracle)):
+        np.testing.assert_array_equal(
+            ticket.result() & ticket.routed(), ok & routed,
+            err_msg=f"submission {i} diverged across the reshard")

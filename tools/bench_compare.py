@@ -1,0 +1,99 @@
+"""bench_compare — diff two directories of BENCH_*.json artifacts.
+
+Guards the perf trajectory the bench-smoke artifacts seed: point it at a
+baseline directory (e.g. the committed ``benchmarks/baseline/``) and a
+fresh ``--json-dir`` output, and it reports the per-row delta for every
+suite present in both, flagging rows whose ``us_per_call`` regressed past
+``--threshold`` (relative, default 25%).
+
+    PYTHONPATH=src python tools/bench_compare.py benchmarks/baseline \\
+        bench-json --threshold 0.5 --warn-only
+
+Exit status is 1 when regressions were found, unless ``--warn-only``
+(CI's mode: CPU-runner wall clocks are too noisy to gate merges on, but
+the deltas belong in the log of every run). Rows present on only one
+side are listed, never counted as regressions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_dir(path: pathlib.Path) -> dict:
+    """{suite: {row_name: us_per_call}} for every BENCH_*.json in ``path``."""
+    suites = {}
+    for f in sorted(path.glob("BENCH_*.json")):
+        payload = json.loads(f.read_text())
+        suites[payload.get("suite", f.stem)] = {
+            row["name"]: row["us_per_call"] for row in payload.get("rows", [])
+        }
+    return suites
+
+
+def compare(base: dict, new: dict, threshold: float) -> tuple:
+    """Returns (report_lines, regressions) across the shared suites/rows."""
+    lines, regressions = [], []
+    for suite in sorted(set(base) | set(new)):
+        if suite not in base or suite not in new:
+            side = "baseline" if suite in base else "candidate"
+            lines.append(f"~ {suite}: only in {side}")
+            continue
+        b_rows, n_rows = base[suite], new[suite]
+        for name in sorted(set(b_rows) | set(n_rows)):
+            if name not in b_rows or name not in n_rows:
+                side = "baseline" if name in b_rows else "candidate"
+                lines.append(f"~ {suite}/{name}: only in {side}")
+                continue
+            b_us, n_us = b_rows[name], n_rows[name]
+            if b_us <= 0.0:
+                delta = 0.0 if n_us <= 0.0 else float("inf")
+            else:
+                delta = (n_us - b_us) / b_us
+            mark = " "
+            if delta > threshold:
+                mark = "!"
+                regressions.append((suite, name, delta))
+            elif delta < -threshold:
+                mark = "+"          # improvement past the threshold
+            lines.append(f"{mark} {suite}/{name}: {b_us:.1f} -> {n_us:.1f} "
+                         f"us_per_call ({delta:+.1%})")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="bench_compare", description=__doc__)
+    ap.add_argument("baseline", type=pathlib.Path,
+                    help="directory of baseline BENCH_*.json files")
+    ap.add_argument("candidate", type=pathlib.Path,
+                    help="directory of freshly produced BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative us_per_call increase that counts as a "
+                         "regression (default 0.25 = 25%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="always exit 0 (CI smoke on noisy CPU runners)")
+    args = ap.parse_args(argv)
+
+    base, new = load_dir(args.baseline), load_dir(args.candidate)
+    if not base or not new:
+        empty = args.baseline if not base else args.candidate
+        print(f"bench_compare: no BENCH_*.json under {empty}",
+              file=sys.stderr)
+        return 0 if args.warn_only else 2
+    lines, regressions = compare(base, new, args.threshold)
+    print("\n".join(lines))
+    if regressions:
+        worst = max(regressions, key=lambda r: r[2])
+        print(f"\n{len(regressions)} row(s) regressed past "
+              f"{args.threshold:.0%} (worst: {worst[0]}/{worst[1]} "
+              f"{worst[2]:+.1%})")
+        return 0 if args.warn_only else 1
+    print(f"\nno regressions past {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

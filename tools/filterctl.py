@@ -11,6 +11,8 @@ sizing kwarg fails loudly instead of restoring a corrupt table).
     PYTHONPATH=src python tools/filterctl.py inspect out.npz
     PYTHONPATH=src python tools/filterctl.py load out.npz \\
         --backend cuckoo --capacity 100000 --verify-random 80000
+    PYTHONPATH=src python tools/filterctl.py stats \\
+        bench-json/BENCH_serving_slo.json --cell hot_swap
 
 Sizing kwargs ride along as repeated ``--kw name=value`` flags (values are
 parsed as int/float where possible), e.g. ``--kw fp_bits=8``.
@@ -121,6 +123,49 @@ def cmd_load(args) -> int:
     return 0
 
 
+def cmd_stats(args) -> int:
+    """Pretty-print serving-SLO metrics from a BENCH_*.json artifact.
+
+    Reads the ``data.cells`` payload the serving_slo suite emits (each
+    cell is a :meth:`repro.amq.FilterService.stats` snapshot plus harness
+    context) and renders the operator view: latency percentiles, sustained
+    throughput, dispatch mix, queue bound, padding waste.
+    """
+    import json
+
+    payload = json.loads(pathlib.Path(args.path).read_text())
+    cells = payload.get("data", {}).get("cells", [])
+    if args.cell:
+        cells = [c for c in cells if args.cell in c.get("label", "")]
+    if not cells:
+        print(f"no serving cells in {args.path}"
+              + (f" matching {args.cell!r}" if args.cell else ""))
+        return 1
+    for cell in cells:
+        print(f"cell {cell['label']}")
+        print(f"  enqueue-to-ready: p50={cell['p50_us']:.0f}us "
+              f"p99={cell['p99_us']:.0f}us")
+        print(f"  sustained:        {cell['sustained_ops_per_s']:.0f} ops/s "
+              f"({cell['acked_ops']} acked over {cell['sim_s']:.2f}s)")
+        kinds = ", ".join(f"{k}={v}" for k, v in
+                          sorted(cell.get("dispatch_kinds", {}).items()))
+        print(f"  dispatches:       {kinds or '(none)'}")
+        print(f"  queue depth max:  {cell['queue_depth_max']}"
+              + (f" (bound {cell['max_pending']})"
+                 if "max_pending" in cell else ""))
+        print(f"  padding waste:    {cell['padding_waste']:.1%}")
+        if cell.get("shed_ops") or cell.get("rejected_submissions"):
+            print(f"  refused:          shed_ops={cell['shed_ops']} "
+                  f"rejected={cell['rejected_submissions']}")
+        if "swap" in cell:
+            s = cell["swap"]
+            print(f"  hot swap:         {s['old_backend']} -> "
+                  f"{s['new_backend']} pause={s['pause_s'] * 1e3:.1f}ms "
+                  f"drained={s['drained_ops']} "
+                  f"acked_verified={cell.get('acked_inserts_verified', 0)}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="filterctl", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -155,6 +200,14 @@ def main(argv=None) -> int:
                         "stream (N <= save's --insert-random) and fail on "
                         "any false negative")
     p.set_defaults(fn=cmd_load)
+
+    p = sub.add_parser("stats", help="pretty-print serving-SLO metrics "
+                                     "from a BENCH_*.json artifact")
+    p.add_argument("path", help="BENCH_serving_slo.json (benchmarks.run "
+                                "--json-dir output)")
+    p.add_argument("--cell", default=None,
+                   help="only cells whose label contains this substring")
+    p.set_defaults(fn=cmd_stats)
 
     args = ap.parse_args(argv)
     return args.fn(args)
