@@ -31,6 +31,7 @@ from . import (
     serving_slo,
     sorted_insertion,
     throughput,
+    tiering,
 )
 from .common import JSON_RECORDS, ROWS
 
@@ -47,6 +48,7 @@ SUITES = {
     "lifecycle": lifecycle.run,
     "serving_slo": serving_slo.run,
     "roofline": roofline.run,
+    "tiering": tiering.run,
 }
 
 

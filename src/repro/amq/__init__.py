@@ -32,6 +32,8 @@ from .protocol import (  # noqa: F401
     QueryResult,
     Snapshot,
     SnapshotMismatchError,
+    TieredReport,
+    TierStats,
     fpr_share,
     fpr_tolerance,
     load_factor,
@@ -40,15 +42,16 @@ from .protocol import (  # noqa: F401
 )
 
 _LAZY = ("make", "get", "names", "register", "FilterHandle", "AMQAdapter",
-         "CascadeHandle", "FilterService", "Ticket", "ServiceMetrics",
-         "QueueFullError")
+         "CascadeHandle", "TieredHandle", "ColdLevel", "FilterService",
+         "Ticket", "ServiceMetrics", "QueueFullError")
 
 __all__ = list(_LAZY) + [
     "AMQConfig", "Capabilities", "CascadeReport", "DeleteReport",
     "InsertReport", "LevelStats", "MixedReport", "OpBatch", "OP_QUERY",
     "OP_INSERT", "OP_DELETE", "QueryResult", "Snapshot",
-    "SnapshotMismatchError", "SNAPSHOT_VERSION", "fpr_share",
-    "fpr_tolerance", "load_factor", "load_snapshot", "save_snapshot",
+    "SnapshotMismatchError", "SNAPSHOT_VERSION", "TieredReport",
+    "TierStats", "fpr_share", "fpr_tolerance", "load_factor",
+    "load_snapshot", "save_snapshot",
 ]
 
 
@@ -66,6 +69,10 @@ def __getattr__(name):
         from .cascade import CascadeHandle
 
         return CascadeHandle
+    if name in ("TieredHandle", "ColdLevel"):
+        from . import tiering
+
+        return getattr(tiering, name)
     if name in ("FilterService", "Ticket"):
         from . import service
 

@@ -92,6 +92,16 @@ class AMQAdapter:
     the sharded backend uses it to exclude placement (mesh, shard count)
     from identity, which is what makes restore-onto-a-new-mesh and exact
     resharding legal.
+
+    ``host_query``/``host_delete`` are the cold-tier hooks (DESIGN.md §12):
+    ``host_query(config, arrays, keys) -> bool[n]`` probes the packed
+    snapshot arrays *in host RAM* with vectorized numpy (per-key hash
+    scalars may go through the backend's jax hashing — they are tiny; the
+    table gather must not touch the device), and
+    ``host_delete(config, arrays, keys, valid) -> ok bool[n]`` clears one
+    matching slot per key in the arrays in place (updating ``count``).
+    ``host_query`` is required when ``capabilities.supports_tiering`` is
+    True; ``host_delete`` additionally when the backend supports deletes.
     """
 
     name: str
@@ -109,6 +119,8 @@ class AMQAdapter:
     snapshot: Optional[Callable[..., Any]] = None
     restore: Optional[Callable[..., Any]] = None
     fingerprint: Optional[Callable[[Any], str]] = None
+    host_query: Optional[Callable[..., Any]] = None
+    host_delete: Optional[Callable[..., Any]] = None
 
 
 def _zero_stats(n):
@@ -179,6 +191,103 @@ def state_restore(config, arrays):
     custom hook (``_sharded_restore``)."""
     state_cls, values = _validated_state_arrays(config, arrays)
     return state_cls(*(jnp.asarray(a) for a in values))
+
+
+# ---------------------------------------------------------------------------
+# Cold-tier host probes (DESIGN.md §12): vectorized numpy queries (and
+# slot-clear deletes) over the packed snapshot arrays a demoted level left
+# in host RAM. Per-key hash scalars reuse the backend's own jax hashing
+# (bit-exactness is non-negotiable and the [n]-sized outputs are tiny);
+# only the table-sized gathers must stay host-side.
+# ---------------------------------------------------------------------------
+
+def _np_bucket_tags(table: np.ndarray, buckets: np.ndarray, lay) -> np.ndarray:
+    """Numpy mirror of ``layout.bucket_tags``: -> uint32[n, bucket_size]."""
+    wpb = lay.words_per_bucket
+    base = buckets.astype(np.int64) * wpb
+    words = table[base[:, None] + np.arange(wpb, dtype=np.int64)]  # [n, wpb]
+    shifts = np.arange(lay.tags_per_word, dtype=np.uint32) * np.uint32(
+        lay.fp_bits)
+    tags = (words[:, :, None] >> shifts) & np.uint32(lay.fp_mask)
+    return tags.reshape(words.shape[0], lay.bucket_size)
+
+
+def _cuckoo_host_prepare(config, keys):
+    """Per-key probe scalars (match tags + candidate buckets), as numpy."""
+    tag, i1, i2 = CF.prepare_keys(config, jnp.asarray(keys, jnp.uint32))
+    t1, t2 = config.placement.query_match_tags(tag)
+    return (np.asarray(t1), np.asarray(t2),
+            np.asarray(i1), np.asarray(i2))
+
+
+def _cuckoo_host_query(config, arrays, keys) -> np.ndarray:
+    """Vectorized numpy membership probe over packed snapshot arrays."""
+    lay = config.layout
+    table = np.asarray(arrays["table"])
+    t1, t2, i1, i2 = _cuckoo_host_prepare(config, keys)
+    hit1 = (_np_bucket_tags(table, i1, lay) == t1[:, None]).any(axis=-1)
+    hit2 = (_np_bucket_tags(table, i2, lay) == t2[:, None]).any(axis=-1)
+    return hit1 | hit2
+
+
+def _cuckoo_host_delete(config, arrays, keys, valid=None) -> np.ndarray:
+    """Clear one matching slot per key in the host-RAM table, in place.
+
+    Candidate slots are located with the same vectorized probe as
+    ``host_query``; the actual clears run serially per key so duplicate
+    deletes of one key in a batch consume distinct stored copies, exactly
+    like the device path's per-round claim resolution. Cold-tier deletes
+    are the rare path (DESIGN.md §12) — the loop runs only over keys whose
+    candidate buckets matched at all.
+    """
+    lay = config.layout
+    table = arrays["table"]
+    if not (isinstance(table, np.ndarray) and table.flags.writeable):
+        table = arrays["table"] = np.array(table, np.uint32)
+    n = int(np.asarray(keys).shape[0])
+    v = (np.ones((n,), bool) if valid is None
+         else np.asarray(valid, bool))
+    ok = np.zeros((n,), bool)
+    if not v.any():
+        return ok
+    t1, t2, i1, i2 = _cuckoo_host_prepare(config, keys)
+    cand1 = (_np_bucket_tags(table, i1, lay) == t1[:, None]).any(axis=-1)
+    cand2 = (_np_bucket_tags(table, i2, lay) == t2[:, None]).any(axis=-1)
+    wpb, tpw = lay.words_per_bucket, lay.tags_per_word
+    fp_mask, fp_bits = np.uint32(lay.fp_mask), lay.fp_bits
+    removed = 0
+    for i in np.flatnonzero(v & (cand1 | cand2)):
+        for bucket, t in ((int(i1[i]), int(t1[i])),
+                          (int(i2[i]), int(t2[i]))):
+            done = False
+            for s in range(lay.bucket_size):
+                widx = bucket * wpb + s // tpw
+                shift = np.uint32((s % tpw) * fp_bits)
+                if int((table[widx] >> shift) & fp_mask) == t:
+                    table[widx] &= ~np.uint32(fp_mask << shift)
+                    done = True
+                    break
+            if done:
+                ok[i] = True
+                removed += 1
+                break
+    if removed:
+        count = arrays["count"]
+        arrays["count"] = np.asarray(int(count) - removed,
+                                     np.asarray(count).dtype)
+    return ok
+
+
+def _bloom_host_query(config, arrays, keys) -> np.ndarray:
+    """Vectorized numpy probe of a blocked-Bloom snapshot (k bits all set)."""
+    table = np.asarray(arrays["table"])
+    block, word, mask = BB._bit_positions(config, jnp.asarray(keys,
+                                                              jnp.uint32))
+    block, word, mask = (np.asarray(block), np.asarray(word),
+                         np.asarray(mask))
+    addr = block[:, None].astype(np.int64) * config.words_per_block + word
+    words = table[addr]                                  # [n, k]
+    return ((words & mask) == mask).all(axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +411,8 @@ CUCKOO = AMQAdapter(
     name="cuckoo",
     capabilities=Capabilities(supports_delete=True, supports_bulk=True,
                               counting=True, supports_expand=True,
-                              supports_mixed=True, supports_snapshot=True),
+                              supports_mixed=True, supports_snapshot=True,
+                              supports_tiering=True),
     make_config=_cuckoo_make_config,
     init=lambda cfg: cfg.init(),
     insert=_cuckoo_insert,
@@ -313,6 +423,8 @@ CUCKOO = AMQAdapter(
     growth_sizings=_CUCKOO_SIZINGS,
     snapshot=state_snapshot,
     restore=state_restore,
+    host_query=_cuckoo_host_query,
+    host_delete=_cuckoo_host_delete,
 )
 
 
@@ -336,7 +448,8 @@ def _bloom_query(config, state, keys, *, valid=None):
 BLOOM = AMQAdapter(
     name="bloom",
     capabilities=Capabilities(supports_delete=False, counting=False,
-                              supports_expand=True, supports_snapshot=True),
+                              supports_expand=True, supports_snapshot=True,
+                              supports_tiering=True),
     make_config=lambda capacity, **kw: BB.BloomConfig.for_capacity(
         capacity, **kw),
     init=lambda cfg: cfg.init(),
@@ -345,6 +458,7 @@ BLOOM = AMQAdapter(
     growth_sizings=_BLOOM_SIZINGS,
     snapshot=state_snapshot,
     restore=state_restore,
+    host_query=_bloom_host_query,
 )
 
 

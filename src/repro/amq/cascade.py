@@ -110,8 +110,17 @@ class CascadeHandle:
                  fpr_budget: Optional[float] = None,
                  split_ratio: float = 0.5,
                  max_levels: Optional[int] = None,
+                 max_level_capacity: Optional[int] = None,
                  **base_kwargs: Any):
-        """Build the cascade with a single fresh base-capacity level."""
+        """Build the cascade with a single fresh base-capacity level.
+
+        ``max_level_capacity`` clamps the geometric ladder: level sizes
+        stop growing once they reach it (the tiered wrapper derives it
+        from ``device_budget_bytes`` so the active level always fits on
+        device). Shares keep decaying past the clamp, so clamped levels
+        may exceed their FPR share once the adapter's sizing ladder tops
+        out — visible in ``report()``, never silent.
+        """
         if not adapter.capabilities.supports_expand:
             raise NotImplementedError(
                 f"{adapter.name}: backend cannot auto-expand "
@@ -131,6 +140,13 @@ class CascadeHandle:
         self.watermark = float(watermark)
         self.split_ratio = float(split_ratio)
         self.max_levels = max_levels
+        self.max_level_capacity = (None if max_level_capacity is None
+                                   else int(max_level_capacity))
+        if (self.max_level_capacity is not None
+                and self.max_level_capacity < int(capacity)):
+            raise ValueError(
+                f"max_level_capacity ({self.max_level_capacity}) is below "
+                f"the base capacity ({int(capacity)})")
         self.base_kwargs = dict(base_kwargs)
         if fpr_budget is None:
             # Declared budget: twice the base config's design FPR for level
@@ -169,6 +185,16 @@ class CascadeHandle:
     def state(self):
         """The *active* (newest) level's state pytree."""
         return self.levels[-1].state
+
+    @property
+    def level_shares(self) -> tuple:
+        """Per-live-level FPR shares (oldest first) — tier accounting."""
+        return tuple(self._shares)
+
+    @property
+    def level_alloc_ids(self) -> tuple:
+        """Per-live-level allocation indices (oldest first, monotonic)."""
+        return tuple(self._alloc_ids)
 
     @property
     def num_slots(self) -> int:
@@ -247,12 +273,20 @@ class CascadeHandle:
                 break
         return cfg
 
+    def _level_capacity(self, alloc_index: int) -> int:
+        """Deterministic level sizing: geometric ladder, then the clamp."""
+        capacity = max(1, int(round(
+            self.base_capacity * self.growth ** alloc_index)))
+        if self.max_level_capacity is not None:
+            capacity = min(capacity, self.max_level_capacity)
+        return capacity
+
     def _grow(self) -> bool:
         """Allocate the next level; False if ``max_levels`` forbids it."""
         if self.max_levels is not None and len(self.levels) >= self.max_levels:
             return False
         i = self._allocated
-        capacity = max(1, int(round(self.base_capacity * self.growth ** i)))
+        capacity = self._level_capacity(i)
         share = fpr_share(self.fpr_budget, i, self.split_ratio)
         prev = self.levels[-1].config if self.levels else None
         handle = FilterHandle(self.adapter,
@@ -262,6 +296,43 @@ class CascadeHandle:
         self._alloc_ids.append(i)
         self._allocated += 1
         return True
+
+    # -- tier surgery (DESIGN.md §12) ----------------------------------------
+
+    def detach_oldest(self):
+        """Remove and return the oldest level: ``(handle, share, alloc_id)``.
+
+        The tiered wrapper's demotion primitive: the detached level keeps
+        its FPR share and allocation index so it can be re-attached (or
+        probed cold) with the cascade's budget accounting intact. The
+        active (newest) level can never be detached — the cascade must
+        always have a write target.
+        """
+        if len(self.levels) <= 1:
+            raise ValueError(
+                "cannot detach the active level: a cascade needs at least "
+                "one device-resident write target")
+        self._query_fn = None
+        return (self.levels.pop(0), self._shares.pop(0),
+                self._alloc_ids.pop(0))
+
+    def attach_oldest(self, handle: FilterHandle, share: float,
+                      alloc_id: int) -> None:
+        """Re-attach a previously detached level as the oldest (promotion).
+
+        ``alloc_id`` must predate every live level's — levels are probed
+        newest-first for deletes and the allocation order is what makes
+        tier snapshots reconstructible, so out-of-order attachment fails
+        loudly.
+        """
+        if self._alloc_ids and alloc_id >= self._alloc_ids[0]:
+            raise ValueError(
+                f"attach_oldest: alloc_id {alloc_id} does not predate the "
+                f"oldest live level's ({self._alloc_ids[0]})")
+        self._query_fn = None
+        self.levels.insert(0, handle)
+        self._shares.insert(0, share)
+        self._alloc_ids.insert(0, alloc_id)
 
     # -- lifecycle (DESIGN.md §10) -------------------------------------------
 
@@ -296,7 +367,9 @@ class CascadeHandle:
         meta = {"levels": levels, "allocated": self._allocated,
                 "base_capacity": self.base_capacity, "growth": self.growth,
                 "watermark": self.watermark, "fpr_budget": self.fpr_budget,
-                "split_ratio": self.split_ratio, "count": self.count()}
+                "split_ratio": self.split_ratio,
+                "max_level_capacity": self.max_level_capacity,
+                "count": self.count()}
         return Snapshot(backend=self.name, kind="cascade", fingerprint="",
                         arrays=arrays, meta=meta,
                         configs=tuple(lvl.config for lvl in self.levels))
@@ -323,20 +396,19 @@ class CascadeHandle:
                 f"this cascade is {self.name!r}")
         meta = snap.meta
         for knob in ("base_capacity", "growth", "split_ratio",
-                     "watermark", "fpr_budget"):
-            if getattr(self, knob) != meta[knob]:
+                     "watermark", "fpr_budget", "max_level_capacity"):
+            if getattr(self, knob) != meta.get(knob):
                 raise SnapshotMismatchError(
-                    f"cascade {knob} mismatch: snapshot has {meta[knob]}, "
-                    f"this handle was built with {getattr(self, knob)}")
+                    f"cascade {knob} mismatch: snapshot has "
+                    f"{meta.get(knob)}, this handle was built with "
+                    f"{getattr(self, knob)}")
         levels_meta = meta["levels"]
         configs = snap.configs
         if not configs:  # file-loaded: replay the deterministic sizing
             configs, prev = [], None
             for lm in levels_meta:
-                i = lm["alloc_index"]
-                capacity = max(1, int(round(
-                    self.base_capacity * self.growth ** i)))
-                cfg = self._config_for(capacity, lm["share"], prev)
+                cfg = self._config_for(self._level_capacity(lm["alloc_index"]),
+                                       lm["share"], prev)
                 configs.append(cfg)
                 prev = cfg
         if len(configs) != len(levels_meta):
@@ -546,14 +618,18 @@ class CascadeHandle:
                                    np.asarray(report.rounds))
         return segmented_apply_ops(self, batch)
 
-    def compact(self) -> CascadeReport:
+    def compact(self, *, reset_when_empty: bool = True) -> CascadeReport:
         """Reclaim drained levels; returns the post-compaction report.
 
         Stored tags cannot be rehashed into another level (partial-key
         constraint — the reason the cascade exists), so compaction frees
         levels whose count reached zero instead of merging live ones. A
         fully drained cascade resets to a single fresh base-capacity level
-        and reclaims its whole FPR budget.
+        and reclaims its whole FPR budget — unless
+        ``reset_when_empty=False`` (the tiered wrapper's mode: resetting
+        the allocation counter while demoted cold levels still exist would
+        break the cross-tier allocation ordering, so the drained active
+        level is kept as the write target instead).
 
         Example::
 
@@ -564,11 +640,20 @@ class CascadeHandle:
                 in zip(self.levels, self._shares, self._alloc_ids)
                 if lvl.count() > 0]
         if live:
+            if len(live) != len(self.levels):
+                self._query_fn = None
             self.levels = [lvl for lvl, _, _ in live]
             self._shares = [share for _, share, _ in live]
             self._alloc_ids = [aid for _, _, aid in live]
-        else:
+        elif reset_when_empty:
             self.levels, self._shares, self._alloc_ids = [], [], []
             self._allocated = 0
+            self._query_fn = None
             self._grow()
+        else:
+            if len(self.levels) > 1:
+                self._query_fn = None
+            self.levels = self.levels[-1:]
+            self._shares = self._shares[-1:]
+            self._alloc_ids = self._alloc_ids[-1:]
         return self.report()

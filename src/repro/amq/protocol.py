@@ -65,6 +65,13 @@ class Capabilities:
       zero-downtime ``hot_swap`` (DESIGN.md §10). Restoring onto a
       mismatched config raises :class:`SnapshotMismatchError` — loudly,
       never a silently-corrupt table.
+    * ``supports_tiering`` — frozen levels of this backend can live in host
+      RAM as packed snapshot arrays and still answer queries: the adapter
+      provides a vectorized numpy ``host_query`` (and, when
+      ``supports_delete``, a ``host_delete`` slot-clear) over the arrays
+      its ``snapshot`` hook produces. This is what lets a
+      :class:`~repro.amq.tiering.TieredHandle` demote cold cascade levels
+      off-device for beyond-HBM capacity (DESIGN.md §12).
     """
 
     supports_delete: bool = True
@@ -76,6 +83,7 @@ class Capabilities:
     supports_expand: bool = False
     supports_mixed: bool = False
     supports_snapshot: bool = False
+    supports_tiering: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +337,60 @@ class CascadeReport(NamedTuple):
         return len(self.levels)
 
 
+class TierStats(NamedTuple):
+    """One level of a tiered handle, annotated with its residency.
+
+    ``residency`` is ``"hot"`` (device-resident, write-absorbing) or
+    ``"cold"`` (frozen in host RAM as packed snapshot arrays — DESIGN.md
+    §12). ``alloc_index`` is the cascade allocation index the level was
+    born with: cold levels always carry strictly smaller indices than hot
+    ones (demotion is oldest-first), so sorting by it recovers the full
+    newest-to-oldest delete routing order across tiers.
+    """
+
+    residency: str
+    alloc_index: int
+    num_slots: int
+    count: int
+    load_factor: float
+    table_bytes: int
+    expected_fpr: float
+    fpr_share: float
+
+
+class TieredReport(NamedTuple):
+    """Aggregate view of a GPU-hot / host-cold tiered handle (DESIGN.md §12).
+
+    ``device_bytes`` counts only hot (device-resident) levels and is what
+    the handle keeps under ``device_budget_bytes``; ``host_bytes`` is the
+    cold tier's RAM footprint. ``expected_fpr`` aggregates *all* levels —
+    a query consults both tiers, so the cascade FPR-budget accounting is
+    unchanged by demotion.
+    """
+
+    levels: tuple
+    device_budget_bytes: int
+    device_bytes: int
+    host_bytes: int
+    count: int
+    expected_fpr: float
+    fpr_budget: float
+    demotions: int
+    promotions: int
+    cold_probes: int
+    cold_hits: int
+
+    @property
+    def hot_levels(self) -> tuple:
+        """The device-resident subset of ``levels``."""
+        return tuple(s for s in self.levels if s.residency == "hot")
+
+    @property
+    def cold_levels(self) -> tuple:
+        """The host-RAM subset of ``levels``."""
+        return tuple(s for s in self.levels if s.residency == "cold")
+
+
 def fpr_share(budget: float, level: int, ratio: float = 0.5) -> float:
     """Geometric FPR-budget split: level ``i`` gets ``budget*(1-r)*r^i``.
 
@@ -374,8 +436,10 @@ class Snapshot(NamedTuple):
     """Versioned host-side filter-state payload (DESIGN.md §10).
 
     * ``backend`` — registry name of the producing backend.
-    * ``kind`` — ``"filter"`` (one static handle) or ``"cascade"`` (all
-      live levels of a :class:`~repro.amq.cascade.CascadeHandle`).
+    * ``kind`` — ``"filter"`` (one static handle), ``"cascade"`` (all
+      live levels of a :class:`~repro.amq.cascade.CascadeHandle`), or
+      ``"tiered"`` (both tiers of a
+      :class:`~repro.amq.tiering.TieredHandle`, hot and cold).
     * ``fingerprint`` — the producing config's identity string (see
       ``repro.amq.adapters.config_fingerprint``); restore targets must
       match it exactly. Cascade snapshots keep per-level fingerprints in

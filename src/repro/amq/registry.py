@@ -45,6 +45,21 @@ def _validate(adapter: AMQAdapter) -> None:
         raise ValueError(
             f"{adapter.name!r}: supports_snapshot=True but missing "
             "snapshot/restore hooks (the lifecycle surface it advertises)")
+    if caps.supports_tiering:
+        if not callable(adapter.host_query):
+            raise ValueError(
+                f"{adapter.name!r}: supports_tiering=True but no host_query "
+                "hook (cold levels could never be probed)")
+        if not (caps.supports_snapshot and caps.supports_expand):
+            raise ValueError(
+                f"{adapter.name!r}: supports_tiering=True requires "
+                "supports_snapshot and supports_expand (demotion freezes "
+                "cascade levels through the snapshot path)")
+        if caps.supports_delete and not callable(adapter.host_delete):
+            raise ValueError(
+                f"{adapter.name!r}: supports_tiering with supports_delete "
+                "needs a host_delete hook (cold-tier deletes are host-side "
+                "slot clears)")
 
 
 def register(adapter: AMQAdapter, *, overwrite: bool = False) -> None:
@@ -77,7 +92,7 @@ def names() -> Iterable[str]:
 
 def make(name: str, capacity: Optional[int] = None, *,
          config: Any = None, state: Any = None, snapshot: Any = None,
-         auto_expand=False, **kw):
+         auto_expand=False, tiered: bool = False, **kw):
     """Build a ready-to-use filter handle.
 
     Either pass ``capacity`` (+ backend-specific sizing kwargs, forwarded to
@@ -100,6 +115,14 @@ def make(name: str, capacity: Optional[int] = None, *,
     back to a static handle otherwise (the consumer-friendly default for
     backend-generic callers).
 
+    ``tiered=True`` returns a :class:`repro.amq.tiering.TieredHandle`: an
+    auto-expanding cascade whose device footprint is capped at
+    ``device_budget_bytes`` (required in ``**kw`` unless a tiered
+    ``snapshot`` carries it) — older levels are frozen into host-RAM numpy
+    arrays and probed off-device (DESIGN.md §12). Mutually exclusive with
+    ``auto_expand`` (a tiered handle *is* an auto-expanding cascade).
+    Requires ``capabilities.supports_tiering``.
+
     Example::
 
         >>> h = amq.make("cuckoo", capacity=100_000, auto_expand=True)
@@ -112,6 +135,26 @@ def make(name: str, capacity: Optional[int] = None, *,
         auto_expand = adapter.capabilities.supports_expand
     if snapshot is not None and state is not None:
         raise TypeError("pass state= or snapshot=, not both")
+    if tiered:
+        if auto_expand:
+            raise TypeError(
+                "tiered=True already auto-expands; drop auto_expand=")
+        if config is not None or state is not None:
+            raise TypeError(
+                "tiered=True sizes and allocates levels itself; pass "
+                "capacity=..., not config=/state=")
+        if capacity is None:
+            raise TypeError("make(tiered=True) needs capacity=...")
+        if "device_budget_bytes" not in kw and snapshot is not None:
+            kw["device_budget_bytes"] = snapshot.meta["device_budget_bytes"]
+        if "device_budget_bytes" not in kw:
+            raise TypeError("make(tiered=True) needs device_budget_bytes=...")
+        from .tiering import TieredHandle
+
+        handle = TieredHandle(adapter, capacity, **kw)
+        if snapshot is not None:
+            handle.restore(snapshot)
+        return handle
     if auto_expand:
         if config is not None or state is not None:
             raise TypeError(

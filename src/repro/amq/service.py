@@ -174,6 +174,12 @@ class _ServiceStats(dict):
         out["batch_size"] = svc.batch_size
         out["shape_ladder"] = list(svc._ladder)
         out["backend"] = svc.handle.name
+        tiers = getattr(svc.handle, "tier_stats", None)
+        if callable(tiers):
+            # Tiered handles (DESIGN.md §12): budget utilisation and
+            # cold-probe traffic belong in the SLO snapshot — cold probes
+            # are the service's only off-device work.
+            out["tiers"] = tiers()
         return out
 
 

@@ -1,0 +1,678 @@
+"""Tiered storage: a GPU-hot / host-cold cascade for beyond-HBM capacity.
+
+Device memory caps the keyspace of every handle in this package — a
+cascade grows until HBM runs out, then nothing helps. The classic escape
+is the cascade filter of Bender et al. ("Don't Thrash: How to Cache Your
+Hash on Flash", §3): a small fast filter absorbing writes in front of
+exponentially larger cold levels, with the cold levels living on cheaper,
+bigger storage. :class:`TieredHandle` implements that recipe over the
+PR 3 cascade and the PR 5 snapshot machinery (DESIGN.md §12):
+
+* **Hot tier** — a live :class:`~repro.amq.cascade.CascadeHandle` holding
+  the newest (write-absorbing) levels on device. Inserts land *only*
+  here; queries over it run as the cascade's one fused jit.
+* **Cold tier** — frozen older levels demoted through the snapshot path
+  into packed host-RAM numpy arrays (:class:`ColdLevel`). They are probed
+  with the adapter's vectorized ``host_query`` — table gathers run in
+  numpy against host memory; only tiny per-key hash scalars ever touch
+  the device, so hashing stays bit-identical to the device kernels.
+* **Hot-hit short-circuit** — a query batch first runs the fused device
+  pass; only the slots that *missed* every hot level are probed cold, in
+  one batched host pass per cold level. The common case (recent keys)
+  never leaves the device.
+* **Budget** — ``device_budget_bytes`` bounds the hot tier's footprint.
+  Inserts that grow the cascade past it trigger demotion of the oldest
+  hot level; :meth:`TieredHandle.maintain` performs one bounded
+  demote-or-promote step (background-callable), and
+  :meth:`TieredHandle.promote` pulls the newest cold level back on device
+  when the budget allows.
+* **Deletes** route newest-first across *both* tiers: the hot cascade's
+  query-then-delete pass first, then a host-side slot clear
+  (``host_delete``) on the packed cold arrays.
+
+Levels keep their FPR shares and allocation indices across tier moves, so
+the aggregate false-positive budget and the snapshot-reconstruction order
+are preserved no matter how levels shuffle between device and host.
+
+Example::
+
+    from repro import amq
+
+    h = amq.make("cuckoo", capacity=4096, tiered=True,
+                 device_budget_bytes=256 * 1024)
+    h.insert(keys_1m)                  # hot tier spills old levels to host
+    assert bool(h.query(keys_1m).hits.all())
+    print(h.report().hot_levels, h.report().cold_levels)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from ..core.hashing import normalize_keys
+from .adapters import AMQAdapter, config_fingerprint
+from .cascade import CascadeHandle, _mask
+from .handle import FilterHandle
+from .protocol import (
+    OP_DELETE,
+    OP_QUERY,
+    DeleteReport,
+    InsertReport,
+    MixedReport,
+    OpBatch,
+    QueryResult,
+    Snapshot,
+    SnapshotMismatchError,
+    TieredReport,
+    TierStats,
+)
+
+# Demotion loop backstop: one demotion per excess level, and a cascade
+# cannot hold more levels than this in any realistic configuration.
+_MAX_DEMOTE_ROUNDS = 256
+
+
+def _max_capacity_under(adapter: AMQAdapter, budget: int, floor: int,
+                        base_kwargs: dict) -> int:
+    """Largest level capacity whose sized config fits ``budget`` bytes.
+
+    Sized against the adapter's *tightest* growth sizing (the ladder's
+    last overlay — deep levels tighten fingerprints to hold their FPR
+    share, which grows bytes-per-slot), so a level at the clamp fits the
+    budget whatever overlay the cascade picks for it. Binary search over
+    the adapter's own ``make_config`` (sizing is monotone but not
+    linear — cuckoo configs round buckets to powers of two), floored at
+    the base capacity, which the caller has verified fits loosely sized.
+    """
+    kw = {**base_kwargs, **(adapter.growth_sizings[-1]
+                            if adapter.growth_sizings else {})}
+
+    def _fits(capacity: int) -> bool:
+        return adapter.make_config(capacity, **kw).table_bytes <= budget
+
+    lo = hi = max(1, int(floor))
+    if not _fits(lo):
+        return lo  # tightest sizing of even the base level overflows:
+        # keep levels at base capacity — smaller would break the cascade's
+        # base-capacity floor; the transient overshoot is visible in
+        # report() and bounded by one level's tightest-vs-base ratio.
+    while _fits(hi * 2):
+        hi *= 2
+    hi *= 2  # first known-too-big capacity
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if _fits(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+class ColdLevel:
+    """One frozen cascade level resident in host RAM (DESIGN.md §12).
+
+    Holds the level's static config plus *writable* numpy copies of its
+    packed state arrays (the snapshot payload). Queries go through the
+    adapter's vectorized ``host_query``; deletes clear slots in place via
+    ``host_delete``. The FPR ``share`` and ``alloc_id`` ride along so the
+    level can be promoted back (or snapshotted) with the cascade's budget
+    accounting intact.
+    """
+
+    __slots__ = ("config", "arrays", "share", "alloc_id")
+
+    def __init__(self, config, arrays: dict, share: float, alloc_id: int):
+        """Wrap packed state arrays; copies anything not writable numpy."""
+        self.config = config
+        self.arrays = {
+            k: (v if isinstance(v, np.ndarray) and v.flags.writeable
+                else np.array(v))
+            for k, v in arrays.items()}
+        self.share = float(share)
+        self.alloc_id = int(alloc_id)
+
+    @property
+    def count(self) -> int:
+        """Stored-key count, read off the packed ``count`` array."""
+        return int(np.asarray(self.arrays["count"]).sum())
+
+    @property
+    def table_bytes(self) -> int:
+        """Host-RAM footprint of the packed table."""
+        return self.config.table_bytes
+
+    @property
+    def num_slots(self) -> int:
+        """Nominal slot capacity of the frozen level."""
+        return self.config.num_slots
+
+    @property
+    def load_factor(self) -> float:
+        """Occupancy of the frozen level."""
+        return self.count / self.num_slots
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        """Summarize allocation index, occupancy, and footprint."""
+        return (f"ColdLevel(alloc={self.alloc_id}, count={self.count}, "
+                f"bytes={self.table_bytes})")
+
+
+class TieredHandle:
+    """GPU-hot / host-cold tiered filter under a device-memory budget.
+
+    Obtain via ``amq.make(name, capacity=..., tiered=True,
+    device_budget_bytes=...)``. The surface mirrors
+    :class:`~repro.amq.cascade.CascadeHandle` (``insert`` / ``query`` /
+    ``delete`` / ``apply_ops`` / ``snapshot`` / ``restore`` / ...), so
+    consumers — including :class:`~repro.amq.service.FilterService` —
+    swap cascades for tiered handles without code changes.
+
+    Example::
+
+        >>> h = amq.make("cuckoo", capacity=1024, tiered=True,
+        ...              device_budget_bytes=64 * 1024)
+        >>> _ = h.insert(keys)          # spills past the budget to host RAM
+        >>> bool(h.query(keys).hits.all())
+        True
+    """
+
+    def __init__(self, adapter: AMQAdapter, capacity: int, *,
+                 device_budget_bytes: int,
+                 growth: float = 2.0, watermark: float = 0.85,
+                 fpr_budget: Optional[float] = None,
+                 split_ratio: float = 0.5,
+                 max_levels: Optional[int] = None,
+                 **base_kwargs: Any):
+        """Build a one-level hot cascade under ``device_budget_bytes``."""
+        caps = adapter.capabilities
+        if not caps.supports_tiering or adapter.host_query is None:
+            raise NotImplementedError(
+                f"{adapter.name}: backend cannot tier "
+                "(capabilities.supports_tiering is False / no host_query)")
+        if not caps.supports_snapshot:
+            raise NotImplementedError(
+                f"{adapter.name}: tiering demotes levels through snapshots "
+                "(capabilities.supports_snapshot is False)")
+        budget = int(device_budget_bytes)
+        if budget <= 0:
+            raise ValueError(
+                f"device_budget_bytes must be positive, got {budget}")
+        self.adapter = adapter
+        self.device_budget_bytes = budget
+        base_bytes = adapter.make_config(int(capacity),
+                                         **base_kwargs).table_bytes
+        if base_bytes > budget:
+            raise ValueError(
+                f"device_budget_bytes={budget} cannot hold even the base "
+                f"level ({base_bytes} bytes) — the active level never "
+                "demotes; raise the budget or shrink capacity")
+        # Clamp the geometric ladder so the *active* level always fits the
+        # budget on its own: without the clamp the newest level doubles
+        # without bound and the budget is structurally unenforceable.
+        clamp = _max_capacity_under(adapter, budget, int(capacity),
+                                    base_kwargs)
+        self.hot = CascadeHandle(
+            adapter, capacity, growth=growth, watermark=watermark,
+            fpr_budget=fpr_budget, split_ratio=split_ratio,
+            max_levels=max_levels, max_level_capacity=clamp,
+            **base_kwargs)
+        self.cold: list[ColdLevel] = []
+        self._counters = {"demotions": 0, "promotions": 0,
+                          "cold_probes": 0, "cold_probe_keys": 0,
+                          "cold_hits": 0}
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        """Registry name of the wrapped backend."""
+        return self.adapter.name
+
+    @property
+    def capabilities(self):
+        """The wrapped backend's capability flags."""
+        return self.adapter.capabilities
+
+    @property
+    def config(self):
+        """The hot tier's active (newest) level config."""
+        return self.hot.config
+
+    @property
+    def state(self):
+        """The hot tier's active (newest) level state pytree."""
+        return self.hot.state
+
+    @property
+    def levels(self) -> list:
+        """The *device-resident* level handles (hot cascade's levels).
+
+        Exposed under the cascade's attribute name so device-sync code
+        (``FilterService.hot_swap``) treats tiered handles uniformly; the
+        cold tier is host memory and needs no device sync.
+        """
+        return self.hot.levels
+
+    @property
+    def fpr_budget(self) -> float:
+        """Aggregate FPR budget shared across both tiers."""
+        return self.hot.fpr_budget
+
+    @property
+    def base_capacity(self) -> int:
+        """Level-0 design capacity (the geometric ladder's base)."""
+        return self.hot.base_capacity
+
+    @property
+    def device_bytes(self) -> int:
+        """Current device (hot-tier) footprint."""
+        return self.hot.table_bytes
+
+    @property
+    def host_bytes(self) -> int:
+        """Current host-RAM (cold-tier) footprint."""
+        return sum(c.table_bytes for c in self.cold)
+
+    @property
+    def table_bytes(self) -> int:
+        """Total footprint across both tiers."""
+        return self.device_bytes + self.host_bytes
+
+    @property
+    def num_slots(self) -> int:
+        """Aggregate nominal capacity across both tiers."""
+        return self.hot.num_slots + sum(c.num_slots for c in self.cold)
+
+    @property
+    def load_factor(self) -> float:
+        """Aggregate occupancy across both tiers."""
+        return self.count() / self.num_slots
+
+    def count(self) -> int:
+        """Total stored-key count across both tiers."""
+        return self.hot.count() + sum(c.count for c in self.cold)
+
+    def expected_fpr(self, load_factor: Optional[float] = None) -> float:
+        """Aggregate analytic FPR ``1 - prod(1 - eps_i)`` over both tiers."""
+        miss = 1.0 - self.hot.expected_fpr(load_factor)
+        for c in self.cold:
+            lf = c.load_factor if load_factor is None else load_factor
+            miss *= 1.0 - c.config.expected_fpr(lf)
+        return 1.0 - miss
+
+    def report(self) -> TieredReport:
+        """Per-level residency-annotated stats (a :class:`TieredReport`)."""
+        stats = []
+        for c in self.cold:
+            lf = c.load_factor
+            stats.append(TierStats("cold", c.alloc_id, c.num_slots, c.count,
+                                   lf, c.table_bytes,
+                                   c.config.expected_fpr(lf), c.share))
+        for lvl, share, aid in zip(self.hot.levels, self.hot.level_shares,
+                                   self.hot.level_alloc_ids):
+            cnt, lf = lvl.count(), lvl.load_factor
+            stats.append(TierStats("hot", aid, lvl.config.num_slots, cnt,
+                                   lf, lvl.config.table_bytes,
+                                   lvl.config.expected_fpr(lf), share))
+        c = self._counters
+        return TieredReport(tuple(stats), self.device_budget_bytes,
+                            self.device_bytes, self.host_bytes,
+                            self.count(), self.expected_fpr(),
+                            self.fpr_budget, c["demotions"],
+                            c["promotions"], c["cold_probes"],
+                            c["cold_hits"])
+
+    def tier_stats(self) -> dict:
+        """JSON-able tier summary (surfaced by ``FilterService.stats``)."""
+        return {"device_budget_bytes": self.device_budget_bytes,
+                "device_bytes": self.device_bytes,
+                "host_bytes": self.host_bytes,
+                "hot_levels": len(self.hot.levels),
+                "cold_levels": len(self.cold),
+                **self._counters}
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        """Summarize backend, tier shape, and budget utilisation."""
+        return (f"TieredHandle({self.adapter.name!r}, "
+                f"hot={len(self.hot.levels)}, cold={len(self.cold)}, "
+                f"device={self.device_bytes}/{self.device_budget_bytes}B, "
+                f"host={self.host_bytes}B)")
+
+    # -- tier movement -------------------------------------------------------
+
+    def demote(self) -> Optional[ColdLevel]:
+        """Freeze the oldest hot level into host RAM; None if impossible.
+
+        The level's state is pulled through the snapshot path into
+        writable numpy arrays and detached from the cascade (its FPR share
+        and allocation index travel with it). The active level never
+        demotes — a cascade needs a device-resident write target.
+        """
+        if len(self.hot.levels) <= 1:
+            return None
+        lvl, share, aid = self.hot.detach_oldest()
+        arrays = {k: np.array(v) for k, v
+                  in self.adapter.snapshot(lvl.config, lvl.state).items()}
+        cold = ColdLevel(lvl.config, arrays, share, aid)
+        self.cold.append(cold)
+        self._counters["demotions"] += 1
+        return cold
+
+    def promote(self, *, force: bool = False) -> bool:
+        """Move the newest cold level back on device; False if refused.
+
+        Refuses (without ``force``) when the promoted level would push the
+        hot tier past ``device_budget_bytes`` — by construction that is
+        exactly when :meth:`maintain` would immediately demote it again,
+        so the budget check doubles as ping-pong protection.
+        """
+        if not self.cold:
+            return False
+        lvl = self.cold[-1]
+        if (not force and self.hot.table_bytes + lvl.table_bytes
+                > self.device_budget_bytes):
+            return False
+        state = self.adapter.restore(lvl.config, lvl.arrays)
+        self.hot.attach_oldest(FilterHandle(self.adapter, lvl.config, state),
+                               lvl.share, lvl.alloc_id)
+        self.cold.pop()
+        self._counters["promotions"] += 1
+        return True
+
+    def maintain(self) -> dict:
+        """One bounded rebalance step — safe to call from a background loop.
+
+        Demotes the oldest hot level when the hot tier exceeds the budget;
+        otherwise promotes the newest cold level if it fits. Returns an
+        action record (``{"action": "demote" | "promote" | "none", ...}``)
+        so callers can log or stop iterating once the tier is balanced.
+        """
+        if (self.hot.table_bytes > self.device_budget_bytes
+                and len(self.hot.levels) > 1):
+            cold = self.demote()
+            return {"action": "demote", "alloc_index": cold.alloc_id,
+                    "bytes": cold.table_bytes}
+        if self.cold and (self.hot.table_bytes + self.cold[-1].table_bytes
+                          <= self.device_budget_bytes):
+            aid = self.cold[-1].alloc_id
+            nbytes = self.cold[-1].table_bytes
+            self.promote()
+            return {"action": "promote", "alloc_index": aid, "bytes": nbytes}
+        return {"action": "none"}
+
+    def compact(self) -> TieredReport:
+        """Reclaim drained levels in both tiers; returns the tier report.
+
+        Cold levels whose count reached zero are dropped (host RAM freed);
+        the hot cascade compacts in non-resetting mode while cold levels
+        remain — resetting its allocation counter would break the
+        cross-tier allocation ordering that snapshots rely on.
+        """
+        self.cold = [c for c in self.cold if c.count > 0]
+        self.hot.compact(reset_when_empty=not self.cold)
+        return self.report()
+
+    def _enforce_budget(self) -> None:
+        """Demote oldest hot levels until the budget holds (or one left)."""
+        for _ in range(_MAX_DEMOTE_ROUNDS):
+            if (self.hot.table_bytes <= self.device_budget_bytes
+                    or len(self.hot.levels) <= 1):
+                return
+            self.demote()
+
+    # -- cold-tier probes ----------------------------------------------------
+
+    def _cold_query(self, keys_np: np.ndarray) -> np.ndarray:
+        """One vectorized host probe per cold level, OR-reduced."""
+        hits = np.zeros((keys_np.shape[0],), bool)
+        for c in reversed(self.cold):
+            hits |= np.asarray(
+                self.adapter.host_query(c.config, c.arrays, keys_np))
+        self._counters["cold_probes"] += 1
+        self._counters["cold_probe_keys"] += int(keys_np.shape[0])
+        self._counters["cold_hits"] += int(hits.sum())
+        return hits
+
+    def _cold_delete(self, keys_np: np.ndarray,
+                     pending: np.ndarray) -> np.ndarray:
+        """Newest-first host-side slot clear across cold levels."""
+        ok = np.zeros((keys_np.shape[0],), bool)
+        for c in reversed(self.cold):
+            if not pending.any():
+                break
+            done = np.asarray(self.adapter.host_delete(
+                c.config, c.arrays, keys_np, pending))
+            ok |= pending & done
+            pending = pending & ~done
+        return ok
+
+    # -- ops -----------------------------------------------------------------
+
+    def insert(self, keys, *, bulk: bool = False,
+               dedup_within_batch: bool = False,
+               valid=None) -> InsertReport:
+        """Insert into the hot tier, demoting old levels past the budget.
+
+        Writes never touch the cold tier: the hot cascade grows under the
+        watermark as usual, and any growth that pushes the device
+        footprint past ``device_budget_bytes`` immediately demotes the
+        oldest hot level(s) to host RAM.
+        """
+        report = self.hot.insert(keys, bulk=bulk,
+                                 dedup_within_batch=dedup_within_batch,
+                                 valid=valid)
+        self._enforce_budget()
+        return report
+
+    def query(self, keys, *, valid=None) -> QueryResult:
+        """Membership across both tiers with hot-hit short-circuit.
+
+        One fused device pass over all hot levels first; only the slots
+        that missed every hot level are gathered into a (usually much
+        smaller) host batch and probed against the cold levels in one
+        vectorized pass each. The common case — recently inserted keys —
+        never leaves the device.
+        """
+        keys = normalize_keys(keys)
+        qr = self.hot.query(keys, valid=valid)
+        if not self.cold:
+            return qr
+        hits = np.array(np.asarray(qr.hits), bool)
+        pend = _mask(keys, valid) & ~hits
+        if pend.any():
+            sub = np.asarray(keys, np.uint32)[pend]
+            hits[pend] = self._cold_query(sub)
+        return QueryResult(hits, np.asarray(qr.routed))
+
+    def delete(self, keys, *, valid=None) -> DeleteReport:
+        """Delete one stored copy per key, newest tier first.
+
+        The hot cascade's query-then-delete pass runs first (newest level
+        first); keys it could not find are cleared host-side from the
+        packed cold arrays, again newest level first, so duplicate keys
+        spanning tiers resolve in recency order exactly like a flat
+        cascade would.
+        """
+        if not self.adapter.capabilities.supports_delete:
+            raise NotImplementedError(
+                f"{self.name}: append-only structure "
+                "(capabilities.supports_delete is False)")
+        keys = normalize_keys(keys)
+        dr = self.hot.delete(keys, valid=valid)
+        if not self.cold:
+            return dr
+        ok = np.array(np.asarray(dr.ok), bool)
+        pend = _mask(keys, valid) & ~ok
+        if pend.any():
+            ok |= self._cold_delete(np.asarray(keys, np.uint32), pend)
+        return DeleteReport(ok, np.asarray(dr.routed))
+
+    def apply_ops(self, batch: OpBatch) -> MixedReport:
+        """Execute a mixed op stream across both tiers (DESIGN.md §9/§12).
+
+        The hot cascade runs the whole batch on its fused padded path
+        first (inserts always resolve there). Query/delete slots the hot
+        tier missed fall through to the cold tier: with no cold-routed
+        deletes in the batch, all missed queries run as a single batched
+        host probe; when a missed delete is present, the missed slots are
+        replayed host-side in batch order so same-key query/delete
+        interleavings keep exact positional semantics.
+        """
+        report = self.hot.apply_ops(batch)
+        self._enforce_budget()
+        if not self.cold:
+            return report
+        ok = np.array(np.asarray(report.ok), bool)
+        valid = np.asarray(batch.valid, bool)
+        ops = np.asarray(batch.ops)
+        miss = valid & ~ok & ((ops == OP_QUERY) | (ops == OP_DELETE))
+        if not miss.any():
+            return report
+        keys_np = np.asarray(batch.keys, np.uint32)
+        deletes = miss & (ops == OP_DELETE)
+        if deletes.any():
+            ok |= self._cold_replay(keys_np, ops, miss)
+        else:
+            ok[miss] = self._cold_query(keys_np[miss])
+        return MixedReport(ok, np.asarray(report.routed),
+                           np.asarray(report.evictions),
+                           np.asarray(report.rounds))
+
+    def _cold_replay(self, keys_np: np.ndarray, ops: np.ndarray,
+                     miss: np.ndarray) -> np.ndarray:
+        """Sequential host replay of hot-missed slots, in batch order.
+
+        Only taken when a batch routes a delete to the cold tier — a
+        later query of the same key must observe that delete, so the
+        missed slots cannot be batched into one probe. Exactness over
+        throughput on this rare path.
+        """
+        ok = np.zeros((keys_np.shape[0],), bool)
+        one = np.ones((1,), bool)
+        for i in np.flatnonzero(miss):
+            key = keys_np[i:i + 1]
+            if ops[i] == OP_DELETE:
+                ok[i] = bool(self._cold_delete(key, one.copy())[0])
+            else:
+                ok[i] = bool(self._cold_query(key)[0])
+        return ok
+
+    # -- lifecycle (DESIGN.md §10/§12) ---------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Snapshot the full tier layout as one versioned host payload.
+
+        Hot level ``i``'s arrays live under ``hot/level<i>/``, cold level
+        ``i``'s under ``cold/level<i>/``; ``meta`` records each level's
+        fingerprint, share, allocation index, and residency plus the
+        cascade knobs and the device budget — enough for :meth:`restore`
+        to rebuild both tiers exactly (and fail loudly on drift).
+        """
+        arrays, cold_meta, hot_meta = {}, [], []
+        for i, c in enumerate(self.cold):
+            for k, v in c.arrays.items():
+                arrays[f"cold/level{i}/{k}"] = v
+            cold_meta.append(self._level_meta(
+                c.config, c.share, c.alloc_id, c.count, "cold"))
+        for i, lvl in enumerate(self.hot.levels):
+            for k, v in self.adapter.snapshot(lvl.config, lvl.state).items():
+                arrays[f"hot/level{i}/{k}"] = v
+            hot_meta.append(self._level_meta(
+                lvl.config, self.hot.level_shares[i],
+                self.hot.level_alloc_ids[i], lvl.count(), "hot"))
+        hot = self.hot
+        meta = {"hot_levels": hot_meta, "cold_levels": cold_meta,
+                "device_budget_bytes": self.device_budget_bytes,
+                "allocated": hot._allocated,
+                "base_capacity": hot.base_capacity, "growth": hot.growth,
+                "watermark": hot.watermark, "fpr_budget": hot.fpr_budget,
+                "split_ratio": hot.split_ratio, "count": self.count()}
+        configs = tuple(c.config for c in self.cold) + tuple(
+            lvl.config for lvl in hot.levels)
+        return Snapshot(backend=self.name, kind="tiered", fingerprint="",
+                        arrays=arrays, meta=meta, configs=configs)
+
+    def _level_meta(self, config, share: float, alloc_id: int,
+                    count: int, residency: str) -> dict:
+        """One level's snapshot/CLI metadata record."""
+        return {"fingerprint": config_fingerprint(self.adapter, config),
+                "share": share, "alloc_index": alloc_id, "count": count,
+                "num_slots": config.num_slots,
+                "table_bytes": config.table_bytes, "residency": residency}
+
+    def restore(self, snap: Snapshot) -> "TieredHandle":
+        """Rebuild both tiers from a tiered snapshot — validated.
+
+        Level configs come from the snapshot when taken in-process;
+        file-loaded snapshots replay the cascade's deterministic sizing
+        over the *combined* allocation chain (cold then hot — allocation
+        order by construction) and verify every config against its
+        recorded fingerprint, raising
+        :class:`~repro.amq.protocol.SnapshotMismatchError` on any drift.
+        Returns ``self``.
+        """
+        if snap.kind != "tiered":
+            raise SnapshotMismatchError(
+                f"cannot restore a {snap.kind!r} snapshot onto a tiered "
+                "handle (use auto_expand/static handles for those kinds)")
+        if snap.backend != self.name:
+            raise SnapshotMismatchError(
+                f"snapshot is from backend {snap.backend!r}, "
+                f"this handle is {self.name!r}")
+        meta = snap.meta
+        if meta["device_budget_bytes"] != self.device_budget_bytes:
+            raise SnapshotMismatchError(
+                f"device_budget_bytes mismatch: snapshot has "
+                f"{meta['device_budget_bytes']}, this handle was built "
+                f"with {self.device_budget_bytes}")
+        hot = self.hot
+        for knob in ("base_capacity", "growth", "split_ratio",
+                     "watermark", "fpr_budget"):
+            if getattr(hot, knob) != meta[knob]:
+                raise SnapshotMismatchError(
+                    f"cascade {knob} mismatch: snapshot has {meta[knob]}, "
+                    f"this handle was built with {getattr(hot, knob)}")
+        cold_meta, hot_meta = meta["cold_levels"], meta["hot_levels"]
+        chain = list(cold_meta) + list(hot_meta)
+        configs = snap.configs
+        if not configs:  # file-loaded: replay the deterministic sizing
+            configs, prev = [], None
+            for lm in chain:
+                cfg = hot._config_for(hot._level_capacity(lm["alloc_index"]),
+                                      lm["share"], prev)
+                configs.append(cfg)
+                prev = cfg
+        if len(configs) != len(chain):
+            raise SnapshotMismatchError(
+                f"snapshot carries {len(configs)} level configs for "
+                f"{len(chain)} recorded levels")
+        for i, (cfg, lm) in enumerate(zip(configs, chain)):
+            got = config_fingerprint(self.adapter, cfg)
+            if got != lm["fingerprint"]:
+                raise SnapshotMismatchError(
+                    f"tier level {i} config fingerprint mismatch:\n"
+                    f"  snapshot: {lm['fingerprint']}\n  rebuilt:  {got}")
+        n_cold = len(cold_meta)
+        cold = []
+        for i, (cfg, lm) in enumerate(zip(configs[:n_cold], cold_meta)):
+            prefix = f"cold/level{i}/"
+            arrays = {k[len(prefix):]: v for k, v in snap.arrays.items()
+                      if k.startswith(prefix)}
+            cold.append(ColdLevel(cfg, arrays, lm["share"],
+                                  lm["alloc_index"]))
+        levels = []
+        for i, cfg in enumerate(configs[n_cold:]):
+            prefix = f"hot/level{i}/"
+            arrays = {k[len(prefix):]: v for k, v in snap.arrays.items()
+                      if k.startswith(prefix)}
+            state = self.adapter.restore(cfg, arrays)
+            levels.append(FilterHandle(self.adapter, cfg, state))
+        self.cold = cold
+        hot.levels = levels
+        hot._shares = [lm["share"] for lm in hot_meta]
+        hot._alloc_ids = [lm["alloc_index"] for lm in hot_meta]
+        hot._allocated = meta["allocated"]
+        hot._query_fn = None
+        return self

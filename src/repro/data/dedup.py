@@ -223,19 +223,28 @@ class StreamingDeduper:
 def make_deduper(capacity: int, backend: str = "cuckoo", *,
                  auto_expand: bool = True, service_batch: int = 512,
                  service_kw: Optional[dict] = None,
+                 device_budget_bytes: Optional[int] = None,
                  **kw) -> StreamingDeduper:
     """Build a :class:`StreamingDeduper` on any registry backend.
 
     ``capacity`` is the initial window size; with ``auto_expand`` (the
     default, where the backend supports it) the filter grows online, so
     streaming jobs no longer need to guess their dedup volume up front.
-    ``service_kw`` flows to the underlying :class:`repro.amq.FilterService`
-    (deadline, admission policy, queue bound — DESIGN.md §11).
+    ``device_budget_bytes`` upgrades the handle to a GPU-hot / host-cold
+    :class:`~repro.amq.tiering.TieredHandle` (DESIGN.md §12): the dedup
+    keyset may grow far past device memory, with old levels frozen into
+    host RAM and probed off the padded hot path. ``service_kw`` flows to
+    the underlying :class:`repro.amq.FilterService` (deadline, admission
+    policy, queue bound — DESIGN.md §11).
     """
+    if device_budget_bytes is not None:
+        handle = amq.make(backend, capacity=capacity, tiered=True,
+                          device_budget_bytes=device_budget_bytes, **kw)
+    else:
+        handle = amq.make(backend, capacity=capacity,
+                          auto_expand="auto" if auto_expand else False, **kw)
     return StreamingDeduper(
-        amq.make(backend, capacity=capacity,
-                 auto_expand="auto" if auto_expand else False, **kw),
-        service_batch=service_batch, service_kw=service_kw)
+        handle, service_batch=service_batch, service_kw=service_kw)
 
 
 # Backwards-compat convenience mirroring the original module surface.

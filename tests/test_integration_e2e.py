@@ -54,4 +54,4 @@ def test_benchmark_harness_importable():
 
     assert set(br.SUITES) == {"fig3", "fig4", "fig5_6", "fig7", "fig8",
                               "s463", "expansion", "mixed", "lifecycle",
-                              "serving_slo", "roofline"}
+                              "serving_slo", "roofline", "tiering"}

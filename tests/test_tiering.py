@@ -1,0 +1,258 @@
+"""Property tests: the tiered GPU-hot / host-cold handle vs a flat oracle.
+
+Random schedules of insert / query / delete / demote / promote /
+maintain / compact / snapshot-roundtrip run against a
+:class:`~repro.amq.tiering.TieredHandle` while a flat host-side oracle (a
+plain key multiset — the reference a single right-sized filter would
+answer from) tracks the true membership. At *every* step:
+
+* zero false negatives — every live key answers positive, wherever its
+  level currently resides (device or host RAM);
+* the empirical FPR on a disjoint probe set stays within the cascade's
+  declared budget band (``fpr_tolerance``);
+* the device footprint respects ``device_budget_bytes`` (DESIGN.md §12).
+
+Plus deterministic units for the wiring: registry validation, budget
+enforcement, tier surgery guards, service stats, snapshot files.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised in the bare container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from _tuning import examples
+
+import numpy as np
+import pytest
+
+from repro import amq
+from repro.core import keys_from_numpy
+
+CAPACITY = 256
+BUDGET = 8 * 1024                 # a few small levels' worth of device RAM
+UNIVERSE = 2048                   # insertable keys
+N_NEG = 2048                      # disjoint probe set for the FPR band
+ACTIONS = ("insert", "insert", "insert", "delete", "demote", "promote",
+           "maintain", "compact", "snapshot")
+
+
+def _keyspace(seed: int):
+    """(universe, absent) uint32[n, 2] keys — globally distinct uint64s."""
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(1, 2**63, size=2 * (UNIVERSE + N_NEG),
+                                 dtype=np.uint64))[:UNIVERSE + N_NEG]
+    assert raw.size == UNIVERSE + N_NEG
+    return (keys_from_numpy(raw[:UNIVERSE]),
+            keys_from_numpy(raw[UNIVERSE:]))
+
+
+def _mk(snapshot=None):
+    return amq.make("cuckoo", capacity=CAPACITY, tiered=True,
+                    device_budget_bytes=BUDGET, snapshot=snapshot)
+
+
+def _check_invariants(h, universe, live, absent) -> None:
+    """Zero FN over live keys, FPR band over absent keys, budget held."""
+    hits = np.asarray(h.query(universe).hits)
+    fn = live & ~hits
+    assert not fn.any(), (
+        f"false negatives on live keys at {np.flatnonzero(fn)[:8]} "
+        f"(tiers: {h.tier_stats()})")
+    fp = float(np.asarray(h.query(absent).hits).mean())
+    _, hi = amq.fpr_tolerance(h.fpr_budget, N_NEG)
+    assert fp <= hi, f"FPR {fp} above budget band {hi}"
+    assert h.device_bytes <= h.device_budget_bytes, (
+        f"device footprint {h.device_bytes} exceeds budget "
+        f"{h.device_budget_bytes}")
+
+
+@settings(max_examples=examples(40), deadline=None)
+@given(st.data())
+def test_tiered_schedules_match_flat_oracle(data):
+    """Random tier-shuffling schedules keep flat-filter semantics."""
+    universe, absent = _keyspace(data.draw(st.integers(0, 2**16)))
+    h = _mk()
+    live = np.zeros((UNIVERSE,), bool)   # the flat oracle: the true set
+    for step in range(data.draw(st.integers(2, 10))):
+        action = data.draw(st.sampled_from(ACTIONS))
+        if action == "insert":
+            want = data.draw(st.integers(1, 400))
+            idx = np.flatnonzero(~live)[:want]
+            if idx.size:
+                rep = h.insert(universe[idx])
+                landed = np.asarray(rep.ok) & np.asarray(rep.routed)
+                live[idx[landed]] = True
+                assert landed.all(), "tiered insert refused keys"
+        elif action == "delete":
+            want = data.draw(st.integers(1, 200))
+            idx = np.flatnonzero(live)[:want]
+            if idx.size:
+                dr = h.delete(universe[idx])
+                gone = np.asarray(dr.ok) & np.asarray(dr.routed)
+                assert gone.all(), "delete missed a live key"
+                live[idx] = False
+        elif action == "demote":
+            before = len(h.hot.levels)
+            cold = h.demote()
+            assert (cold is None) == (before <= 1)
+        elif action == "promote":
+            if h.promote(force=bool(data.draw(st.integers(0, 1)))):
+                assert h.cold == [] or (
+                    h.cold[-1].alloc_id < h.hot.level_alloc_ids[0])
+        elif action == "maintain":
+            for _ in range(8):
+                if h.maintain()["action"] == "none":
+                    break
+        elif action == "compact":
+            h.compact()
+            assert all(c.count > 0 for c in h.cold)
+        elif action == "snapshot":
+            h = _mk(snapshot=h.snapshot())
+        if action == "promote":
+            # force=True may legitimately overshoot the budget; rebalance
+            # before asserting it, as a background maintainer would.
+            while h.maintain()["action"] == "demote":
+                pass
+        _check_invariants(h, universe, live, absent)
+    assert h.count() == int(live.sum()), (
+        f"count drift: {h.count()} vs {int(live.sum())}")
+
+
+def test_beyond_budget_capacity_with_zero_false_negatives():
+    """The tiered handle holds a keyset far past the device budget."""
+    rng = np.random.default_rng(7)
+    raw = np.unique(rng.integers(1, 2**63, size=40_000, dtype=np.uint64))
+    keys, absent = (keys_from_numpy(raw[:32_000]),
+                    keys_from_numpy(raw[32_000:32_000 + N_NEG]))
+    h = _mk()
+    rep = h.insert(keys)
+    assert bool((np.asarray(rep.ok) & np.asarray(rep.routed)).all())
+    assert h.device_bytes <= h.device_budget_bytes
+    assert h.table_bytes > 4 * h.device_budget_bytes   # genuinely tiered
+    assert len(h.cold) >= 1
+    assert bool(np.asarray(h.query(keys).hits).all())
+    _, hi = amq.fpr_tolerance(h.fpr_budget, N_NEG)
+    assert float(np.asarray(h.query(absent).hits).mean()) <= hi
+
+
+def test_mixed_ops_route_across_tiers():
+    """apply_ops: hot misses fall through to cold; deletes stay exact."""
+    universe, _ = _keyspace(11)
+    h = _mk()
+    h.insert(universe)
+    assert len(h.cold) >= 1
+    # Cold-resident keys: the oldest inserted ones.
+    probe = universe[:16]
+    ops = np.array([amq.OP_QUERY, amq.OP_DELETE, amq.OP_QUERY] * 16,
+                   np.int32)
+    batch = amq.OpBatch.make(np.repeat(probe, 3, axis=0), ops)
+    rep = h.apply_ops(batch)
+    ok = np.asarray(rep.ok).reshape(16, 3)
+    assert ok[:, 0].all(), "pre-delete query missed a cold key"
+    assert ok[:, 1].all(), "cold-routed delete failed"
+    assert not ok[:, 2].any(), "post-delete query still hits"
+    stats = h.tier_stats()
+    assert stats["cold_probe_keys"] > 0
+
+
+def test_snapshot_file_roundtrip(tmp_path):
+    """Tiered snapshots survive the .npz file path with tiers intact."""
+    universe, _ = _keyspace(3)
+    h = _mk()
+    h.insert(universe)
+    path = tmp_path / "tiered.npz"
+    amq.save_snapshot(path, h.snapshot())
+    snap = amq.load_snapshot(path)
+    assert snap.kind == "tiered"
+    h2 = _mk(snapshot=snap)
+    assert h2.count() == h.count()
+    assert len(h2.cold) == len(h.cold)
+    assert bool(np.asarray(h2.query(universe).hits).all())
+    # Budget can also come from the snapshot itself.
+    h3 = amq.make("cuckoo", capacity=CAPACITY, tiered=True, snapshot=snap)
+    assert h3.device_budget_bytes == BUDGET
+
+
+def test_snapshot_knob_mismatch_fails_loudly():
+    universe, _ = _keyspace(5)
+    h = _mk()
+    h.insert(universe[:512])
+    snap = h.snapshot()
+    other = amq.make("cuckoo", capacity=CAPACITY, tiered=True,
+                     device_budget_bytes=2 * BUDGET)
+    with pytest.raises(amq.SnapshotMismatchError):
+        other.restore(snap)
+    flat = amq.make("cuckoo", capacity=CAPACITY, auto_expand=True)
+    with pytest.raises(amq.SnapshotMismatchError):
+        flat.restore(snap)
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError):
+        amq.make("cuckoo", capacity=CAPACITY, tiered=True,
+                 device_budget_bytes=0)
+    with pytest.raises(ValueError):
+        # Base level alone cannot fit a 16-byte budget.
+        amq.make("cuckoo", capacity=1 << 16, tiered=True,
+                 device_budget_bytes=16)
+    with pytest.raises(TypeError):
+        amq.make("cuckoo", capacity=CAPACITY, tiered=True)
+    with pytest.raises(TypeError):
+        amq.make("cuckoo", capacity=CAPACITY, tiered=True,
+                 auto_expand=True, device_budget_bytes=BUDGET)
+
+
+def test_tier_surgery_guards():
+    h = _mk()
+    with pytest.raises(ValueError):      # the active level never detaches
+        h.hot.detach_oldest()
+    assert h.demote() is None
+    assert not h.promote()
+    universe, _ = _keyspace(9)
+    h.insert(universe)
+    lvl, share, aid = h.hot.detach_oldest() if len(h.hot.levels) > 1 else (
+        None, None, None)
+    if lvl is not None:
+        with pytest.raises(ValueError):  # out-of-order re-attachment
+            h.hot.attach_oldest(lvl, share, aid + 10_000)
+        h.hot.attach_oldest(lvl, share, aid)
+
+
+def test_bloom_tiers_without_delete():
+    """Append-only backends tier too; deletes stay capability-gated."""
+    universe, absent = _keyspace(13)
+    h = amq.make("bloom", capacity=CAPACITY, tiered=True,
+                 device_budget_bytes=BUDGET)
+    h.insert(universe)
+    assert h.device_bytes <= h.device_budget_bytes
+    assert bool(np.asarray(h.query(universe).hits).all())
+    with pytest.raises(NotImplementedError):
+        h.delete(universe[:4])
+
+
+def test_service_surfaces_tier_stats():
+    h = _mk()
+    svc = amq.FilterService(h, batch_size=64)
+    universe, _ = _keyspace(17)
+    t = svc.insert(universe[:1500])
+    svc.flush()
+    assert bool(np.asarray(t.result()).all())
+    stats = svc.stats()
+    assert stats["tiers"]["device_budget_bytes"] == BUDGET
+    assert stats["tiers"]["demotions"] >= 0
+    q = svc.query(universe[:1500])
+    svc.flush()
+    assert bool(np.asarray(q.result()).all())
+
+
+def test_capability_flag_matches_hooks():
+    """Every supports_tiering backend has the host probes it advertises."""
+    for name in amq.names():
+        ad = amq.get(name)
+        if ad.capabilities.supports_tiering:
+            assert callable(ad.host_query)
+            if ad.capabilities.supports_delete:
+                assert callable(ad.host_delete)

@@ -9,10 +9,17 @@ suite present in both, flagging rows whose ``us_per_call`` regressed past
     PYTHONPATH=src python tools/bench_compare.py benchmarks/baseline \\
         bench-json --threshold 0.5 --warn-only
 
-Exit status is 1 when regressions were found, unless ``--warn-only``
-(CI's mode: CPU-runner wall clocks are too noisy to gate merges on, but
-the deltas belong in the log of every run). Rows present on only one
-side are listed, never counted as regressions.
+Suites or rows present on only one side are reported as ``added``
+(candidate-only — a new benchmark) or ``removed`` (baseline-only — lost
+coverage) and are never counted as perf regressions; ``--fail-on-missing``
+turns *removed* entries into failures so CI catches a suite silently
+dropping out of the smoke run. ``--suites a,b`` restricts the comparison
+(and the missing check) to named suites — the gating invocation compares
+the stable suites strictly while the full set stays warn-only.
+
+Exit status is 1 when regressions (or, with ``--fail-on-missing``,
+removals) were found, unless ``--warn-only`` (CI's log-everything mode:
+CPU-runner wall clocks are too noisy to gate merges on across the board).
 """
 
 from __future__ import annotations
@@ -35,18 +42,30 @@ def load_dir(path: pathlib.Path) -> dict:
 
 
 def compare(base: dict, new: dict, threshold: float) -> tuple:
-    """Returns (report_lines, regressions) across the shared suites/rows."""
-    lines, regressions = [], []
+    """Returns (report_lines, regressions, removed) across the suite union.
+
+    ``regressions`` are shared rows past ``threshold``; ``removed`` are
+    baseline suites/rows absent from the candidate (lost coverage —
+    ``--fail-on-missing``'s subject). Candidate-only entries are reported
+    as added and never counted.
+    """
+    lines, regressions, removed = [], [], []
     for suite in sorted(set(base) | set(new)):
-        if suite not in base or suite not in new:
-            side = "baseline" if suite in base else "candidate"
-            lines.append(f"~ {suite}: only in {side}")
+        if suite not in new:
+            lines.append(f"~ {suite}: removed (baseline-only)")
+            removed.append((suite, None))
+            continue
+        if suite not in base:
+            lines.append(f"~ {suite}: added (candidate-only)")
             continue
         b_rows, n_rows = base[suite], new[suite]
         for name in sorted(set(b_rows) | set(n_rows)):
-            if name not in b_rows or name not in n_rows:
-                side = "baseline" if name in b_rows else "candidate"
-                lines.append(f"~ {suite}/{name}: only in {side}")
+            if name not in n_rows:
+                lines.append(f"~ {suite}/{name}: removed (baseline-only)")
+                removed.append((suite, name))
+                continue
+            if name not in b_rows:
+                lines.append(f"~ {suite}/{name}: added (candidate-only)")
                 continue
             b_us, n_us = b_rows[name], n_rows[name]
             if b_us <= 0.0:
@@ -61,7 +80,7 @@ def compare(base: dict, new: dict, threshold: float) -> tuple:
                 mark = "+"          # improvement past the threshold
             lines.append(f"{mark} {suite}/{name}: {b_us:.1f} -> {n_us:.1f} "
                          f"us_per_call ({delta:+.1%})")
-    return lines, regressions
+    return lines, regressions, removed
 
 
 def main(argv=None) -> int:
@@ -73,6 +92,12 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="relative us_per_call increase that counts as a "
                          "regression (default 0.25 = 25%%)")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated suite names to compare; others "
+                         "are ignored on both sides")
+    ap.add_argument("--fail-on-missing", action="store_true",
+                    help="baseline suites/rows absent from the candidate "
+                         "fail the comparison (CI coverage guard)")
     ap.add_argument("--warn-only", action="store_true",
                     help="always exit 0 (CI smoke on noisy CPU runners)")
     args = ap.parse_args(argv)
@@ -83,13 +108,33 @@ def main(argv=None) -> int:
         print(f"bench_compare: no BENCH_*.json under {empty}",
               file=sys.stderr)
         return 0 if args.warn_only else 2
-    lines, regressions = compare(base, new, args.threshold)
+    if args.suites is not None:
+        keep = {s.strip() for s in args.suites.split(",") if s.strip()}
+        unknown = keep - (set(base) | set(new))
+        if unknown:
+            print(f"bench_compare: --suites names not found on either "
+                  f"side: {sorted(unknown)}", file=sys.stderr)
+            return 0 if args.warn_only else 2
+        # A suite filtered to one side only is *lost coverage*, not an
+        # empty input: fall through so compare() reports it as removed.
+        base = {s: r for s, r in base.items() if s in keep}
+        new = {s: r for s, r in new.items() if s in keep}
+    lines, regressions, removed = compare(base, new, args.threshold)
     print("\n".join(lines))
+    failed = False
     if regressions:
         worst = max(regressions, key=lambda r: r[2])
         print(f"\n{len(regressions)} row(s) regressed past "
               f"{args.threshold:.0%} (worst: {worst[0]}/{worst[1]} "
               f"{worst[2]:+.1%})")
+        failed = True
+    if removed and args.fail_on_missing:
+        names = ", ".join(s if n is None else f"{s}/{n}"
+                          for s, n in removed[:8])
+        print(f"\n{len(removed)} baseline entr(ies) missing from the "
+              f"candidate: {names}")
+        failed = True
+    if failed:
         return 0 if args.warn_only else 1
     print(f"\nno regressions past {args.threshold:.0%}")
     return 0

@@ -14,6 +14,15 @@ sizing kwarg fails loudly instead of restoring a corrupt table).
     PYTHONPATH=src python tools/filterctl.py stats \\
         bench-json/BENCH_serving_slo.json --cell hot_swap
 
+``--device-budget-bytes N`` on ``save``/``load`` builds a tiered GPU-hot /
+host-cold handle (DESIGN.md §12); ``tiers`` prints a tiered snapshot's
+per-level residency table without touching a device:
+
+    PYTHONPATH=src python tools/filterctl.py save tiered.npz \\
+        --backend cuckoo --capacity 4096 --device-budget-bytes 65536 \\
+        --insert-random 60000
+    PYTHONPATH=src python tools/filterctl.py tiers tiered.npz
+
 Sizing kwargs ride along as repeated ``--kw name=value`` flags (values are
 parsed as int/float where possible), e.g. ``--kw fp_bits=8``.
 """
@@ -70,9 +79,33 @@ def _load_keys(args) -> np.ndarray:
     return np.zeros((0,), np.uint64)
 
 
-def _make(args):
+def _make(args, snapshot=None):
+    kw = _parse_kw(args.kw)
+    budget = getattr(args, "device_budget_bytes", None)
+    if budget is not None:
+        kw.update(tiered=True, device_budget_bytes=budget)
+    if snapshot is not None:
+        kw["snapshot"] = snapshot
+        if snapshot.kind == "tiered" and budget is None:
+            kw["tiered"] = True   # budget comes from the snapshot meta
     return amq.make(args.backend or "cuckoo", capacity=args.capacity,
-                    **_parse_kw(args.kw))
+                    **kw)
+
+
+def _tier_table(meta: dict) -> None:
+    """Render a tiered snapshot's per-level table (tier, occupancy, bytes)."""
+    rows = list(meta.get("cold_levels", ())) + list(meta.get("hot_levels", ()))
+    print(f"{'tier':<6} {'alloc':>5} {'count':>10} {'slots':>10} "
+          f"{'load':>6} {'bytes':>10} {'fpr_share':>10}")
+    for lm in rows:
+        load = lm["count"] / lm["num_slots"] if lm["num_slots"] else 0.0
+        print(f"{lm['residency']:<6} {lm['alloc_index']:>5} "
+              f"{lm['count']:>10} {lm['num_slots']:>10} {load:>6.3f} "
+              f"{lm['table_bytes']:>10} {lm['share']:>10.2e}")
+    device = sum(lm["table_bytes"] for lm in meta.get("hot_levels", ()))
+    host = sum(lm["table_bytes"] for lm in meta.get("cold_levels", ()))
+    print(f"device: {device} B of {meta.get('device_budget_bytes', '?')} B "
+          f"budget; host: {host} B; total keys: {meta.get('count', '?')}")
 
 
 def cmd_save(args) -> int:
@@ -99,18 +132,36 @@ def cmd_inspect(args) -> int:
     print(f"format:      v{snap.version}")
     print(f"fingerprint: {snap.fingerprint or '(per-level, see meta)'}")
     for k, v in sorted(snap.meta.items()):
+        if k in ("hot_levels", "cold_levels"):
+            continue   # rendered as the tier table below
         print(f"meta.{k}: {v}")
+    if snap.kind == "tiered":
+        _tier_table(snap.meta)
     for name in sorted(snap.arrays):
         a = snap.arrays[name]
         print(f"array {name}: {a.dtype}{list(a.shape)} ({a.nbytes} B)")
     return 0
 
 
+def cmd_tiers(args) -> int:
+    """Print a tiered snapshot's per-level residency table (host-only)."""
+    snap = load_snapshot(args.path)
+    if snap.kind != "tiered":
+        print(f"{args.path}: kind={snap.kind!r} — not a tiered snapshot "
+              "(take one from amq.make(..., tiered=True).snapshot())",
+              file=sys.stderr)
+        return 2
+    print(f"backend: {snap.backend} (format v{snap.version})")
+    _tier_table(snap.meta)
+    return 0
+
+
 def cmd_load(args) -> int:
     """Restore a snapshot onto a freshly built config and sanity-check it."""
     snap = load_snapshot(args.path)
-    handle = amq.make(args.backend or snap.backend, capacity=args.capacity,
-                      snapshot=snap, **_parse_kw(args.kw))
+    if args.backend is None:
+        args.backend = snap.backend
+    handle = _make(args, snapshot=snap)
     print(f"restored {handle.name}: count={handle.count()} "
           f"load={handle.load_factor:.3f}")
     if args.verify_random:
@@ -180,6 +231,9 @@ def main(argv=None) -> int:
         p.add_argument("--kw", action="append", metavar="NAME=VALUE",
                        help="backend sizing kwarg (repeatable)")
         p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--device-budget-bytes", type=int, default=None,
+                       help="build a tiered GPU-hot / host-cold handle "
+                            "under this device budget (DESIGN.md §12)")
 
     p = sub.add_parser("save", help="build + populate + snapshot to file")
     common(p, True)
@@ -192,6 +246,11 @@ def main(argv=None) -> int:
     p = sub.add_parser("inspect", help="print snapshot header (no device)")
     p.add_argument("path")
     p.set_defaults(fn=cmd_inspect)
+
+    p = sub.add_parser("tiers", help="per-tier level table of a tiered "
+                                     "snapshot (no device)")
+    p.add_argument("path", help="tiered snapshot file (.npz)")
+    p.set_defaults(fn=cmd_tiers)
 
     p = sub.add_parser("load", help="restore onto a freshly built config")
     common(p, True)

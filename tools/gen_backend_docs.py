@@ -52,7 +52,10 @@ same-op runs. Backends with the `snapshot` capability round-trip their
 state through versioned host-side snapshots (`handle.snapshot()` /
 `handle.restore()` / `amq.make(..., snapshot=...)`, DESIGN.md §10) —
 the substrate for persistence, exact resharding, and the serving layer's
-zero-downtime `FilterService.hot_swap`.
+zero-downtime `FilterService.hot_swap`. Backends with the `tiering`
+capability additionally split their cascade across a GPU-hot /
+host-cold residency boundary for beyond-HBM capacity
+(`amq.make(..., tiered=True, device_budget_bytes=...)`, DESIGN.md §12).
 """
 
 
@@ -121,7 +124,8 @@ def render() -> str:
              "supports_sharding": "sharding", "counting": "counting",
              "exact": "exact", "serial_insert": "serial insert",
              "supports_expand": "expand", "supports_mixed": "mixed",
-             "supports_snapshot": "snapshot"}
+             "supports_snapshot": "snapshot",
+             "supports_tiering": "tiering"}
     lines.append("| backend | " + " | ".join(short[f] for f in cap_fields)
                  + " |")
     lines.append("|---" * (len(cap_fields) + 1) + "|")
