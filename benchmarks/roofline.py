@@ -19,7 +19,13 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 def run(fast: bool = False):
     files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
     if not files:
-        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        # No dry-run artifacts (the default in CI): skip cleanly instead of
+        # emitting a junk `roofline_missing` row into the suite's JSON —
+        # the filter roofline rows (roofline_filters.py) carry the suite.
+        import sys
+        print("# roofline: no results/dryrun artifacts, skipping projection "
+              "rows (run repro.launch.dryrun to produce them)",
+              file=sys.stderr)
         return
     for f in files:
         d = json.load(open(f))

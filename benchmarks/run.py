@@ -28,6 +28,7 @@ from . import (
     lifecycle,
     mixed_workload,
     roofline,
+    roofline_filters,
     serving_slo,
     sorted_insertion,
     throughput,
@@ -47,7 +48,10 @@ SUITES = {
     "mixed": mixed_workload.run,
     "lifecycle": lifecycle.run,
     "serving_slo": serving_slo.run,
-    "roofline": roofline.run,
+    # One BENCH_roofline.json: the dryrun-projection rows (skipped cleanly
+    # when no artifacts exist — the CI default) plus the filter roofline
+    # suite's achieved-vs-model-minimal rows.
+    "roofline": lambda fast: (roofline.run(fast), roofline_filters.run(fast)),
     "tiering": tiering.run,
 }
 

@@ -183,6 +183,35 @@ class OpBatch(NamedTuple):
                     f"{keys.shape[0]} keys (want a bool[n] mask)")
         return OpBatch(keys, ops, ensure_valid(keys, valid))
 
+    @staticmethod
+    def make_padded(keys, ops, n: int) -> "OpBatch":
+        """Build an ``n``-slot batch with the padding done host-side.
+
+        The steady-state dispatch path (``FilterService._dispatch``) holds
+        host numpy arrays and needs a ladder-shaped batch on device.
+        ``make(...).pad_to(n)`` would transfer the ragged arrays and then
+        run three device-side concatenates per dispatch; this constructor
+        pads in numpy instead, so each channel crosses the host→device
+        boundary exactly once, already at its final shape — zero extra
+        device copies on the hot path. Semantically identical to
+        ``make(keys, ops).pad_to(n)``.
+        """
+        from ..core.hashing import normalize_keys
+
+        keys = np.asarray(normalize_keys(keys, arg="keys"), np.uint32)
+        ops = np.asarray(normalize_ops(ops, keys.shape[0]), np.int32)
+        m = keys.shape[0]
+        pad = n - m
+        if pad < 0:
+            raise ValueError(f"batch of {m} cannot pad to {n}")
+        if pad:
+            keys = np.concatenate([keys, np.zeros((pad, 2), np.uint32)])
+            ops = np.concatenate([ops, np.full((pad,), OP_QUERY, np.int32)])
+        valid = np.zeros((n,), bool)
+        valid[:m] = True
+        return OpBatch(jnp.asarray(keys), jnp.asarray(ops),
+                       jnp.asarray(valid))
+
     @property
     def size(self) -> int:
         """Number of slots in the batch (including padding)."""

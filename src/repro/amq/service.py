@@ -485,8 +485,9 @@ class FilterService:
         now = self._clock()
         keys, ops, enqueued_at, claims = self._queue.take(m)
         shape = rung_for(m, self._ladder)
-        batch = OpBatch.make(jnp.asarray(keys), jnp.asarray(ops)).pad_to(
-            shape)
+        # Host-side padding: each channel crosses host->device once, at
+        # its final ladder shape (no device concatenates per dispatch).
+        batch = OpBatch.make_padded(keys, ops, shape)
         report = self.handle.apply_ops(batch)  # async: not concretised here
         dispatch = Dispatch(report, self.metrics, self._clock, enqueued_at)
         self.stats["dispatches"] += 1

@@ -3,6 +3,12 @@
 Handles padding to block multiples, key packing conventions, and backend
 selection: kernels run compiled on TPU and in interpret mode elsewhere
 (CPU validation per DESIGN.md; the kernel body is identical).
+
+``block_keys`` defaults to ``None`` on the cuckoo wrappers, meaning "ask
+:mod:`.autotune`": the tuned tile for this (op, backend, geometry) cell if
+a sweep recorded one, else the static per-op default. Resolution happens
+*outside* the jit boundary so a later sweep takes effect on the next call
+instead of being baked into a cached trace.
 """
 
 from __future__ import annotations
@@ -14,10 +20,11 @@ import jax.numpy as jnp
 
 from ..core.cuckoo_filter import CuckooConfig, CuckooState, prepare_keys
 from ..filters.blocked_bloom import BloomConfig, BloomState
+from . import autotune
 from .bloom import bloom_insert_pallas, bloom_query_pallas
 from .cuckoo_insert import cuckoo_insert_bulk_pallas, cuckoo_insert_pallas
 from .cuckoo_mixed import cuckoo_mixed_pallas
-from .cuckoo_query import cuckoo_query_pallas
+from .cuckoo_query import cuckoo_query_fused_pallas, cuckoo_query_pallas
 from .hash64 import hash64_pallas
 from .kmer_pack import kmer_pack_pallas
 
@@ -35,25 +42,34 @@ def _pad_to(x: jnp.ndarray, multiple: int, fill=0):
     return jnp.concatenate([x, pad]), n
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def cuckoo_query(config: CuckooConfig, state: CuckooState,
-                 keys: jnp.ndarray, block_keys: int = 1024) -> jnp.ndarray:
-    """Kernel-backed batch query. keys: uint32[n, 2] -> bool[n]."""
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _cuckoo_query_jit(config: CuckooConfig, state: CuckooState,
+                      keys: jnp.ndarray, block_keys: int,
+                      fused: bool) -> jnp.ndarray:
     keys, n = _pad_to(keys, block_keys)
-    out = cuckoo_query_pallas(config, state.table, keys[:, 0], keys[:, 1],
-                              block_keys=block_keys,
-                              interpret=not _on_tpu())
+    kern = cuckoo_query_fused_pallas if fused else cuckoo_query_pallas
+    out = kern(config, state.table, keys[:, 0], keys[:, 1],
+               block_keys=block_keys, interpret=not _on_tpu())
     return out[:n].astype(bool)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
-def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
-                         keys: jnp.ndarray, block_keys: int = 256):
-    """Kernel-backed direct insert (no eviction). -> (state', ok bool[n]).
+def cuckoo_query(config: CuckooConfig, state: CuckooState,
+                 keys: jnp.ndarray, block_keys: int = None,
+                 fused: bool = True) -> jnp.ndarray:
+    """Kernel-backed batch query. keys: uint32[n, 2] -> bool[n].
 
-    Failed keys (ok==False) should be retried through the eviction-capable
-    core.cuckoo_filter.insert.
+    ``fused=True`` (default) runs the single-gather SWAR kernel;
+    ``fused=False`` keeps the unpack-based variant measurable (the
+    roofline suite's pre-fusion comparison row).
     """
+    if block_keys is None:
+        block_keys = autotune.resolve_block_keys(config, "query")
+    return _cuckoo_query_jit(config, state, keys, block_keys, fused)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def _cuckoo_insert_direct_jit(config: CuckooConfig, state: CuckooState,
+                              keys: jnp.ndarray, block_keys: int):
     n0 = keys.shape[0]
     keys, n = _pad_to(keys, block_keys, fill=0)
     valid = (jnp.arange(keys.shape[0]) < n0).astype(jnp.uint32)
@@ -65,16 +81,21 @@ def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
     return CuckooState(table, count), ok[:n].astype(bool)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
-def cuckoo_insert_bulk(config: CuckooConfig, state: CuckooState,
-                       keys: jnp.ndarray, block_keys: int = 256):
-    """Kernel-backed bucket-major direct insert. -> (state', ok bool[n]).
+def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
+                         keys: jnp.ndarray, block_keys: int = None):
+    """Kernel-backed direct insert (no eviction). -> (state', ok bool[n]).
 
-    Sorts the batch by primary bucket once (the bulk-build order, DESIGN.md
-    §6) so the kernel streams whole bucket segments; ``ok`` comes back in
-    the original batch order. Failed keys need the eviction-capable
-    core.cuckoo_filter path.
+    Failed keys (ok==False) should be retried through the eviction-capable
+    core.cuckoo_filter.insert.
     """
+    if block_keys is None:
+        block_keys = autotune.resolve_block_keys(config, "insert")
+    return _cuckoo_insert_direct_jit(config, state, keys, block_keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def _cuckoo_insert_bulk_jit(config: CuckooConfig, state: CuckooState,
+                            keys: jnp.ndarray, block_keys: int):
     n0 = keys.shape[0]
     _, i1, _ = prepare_keys(config, keys)
     order = jnp.argsort(i1.astype(jnp.int32), stable=True)
@@ -88,17 +109,24 @@ def cuckoo_insert_bulk(config: CuckooConfig, state: CuckooState,
     return CuckooState(table, count), ok.astype(bool)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
-def cuckoo_apply_ops(config: CuckooConfig, state: CuckooState,
-                     keys: jnp.ndarray, ops: jnp.ndarray,
-                     block_keys: int = 256):
-    """Kernel-backed fused mixed-op pass. -> (state', ok bool[n]).
+def cuckoo_insert_bulk(config: CuckooConfig, state: CuckooState,
+                       keys: jnp.ndarray, block_keys: int = None):
+    """Kernel-backed bucket-major direct insert. -> (state', ok bool[n]).
 
-    ``ops``: int32[n] op codes (0 query / 1 insert / 2 delete). The kernel
-    realises exact sequential in-batch semantics (DESIGN.md §9); inserts
-    are direct-only — failed insert slots (ok==False) should be retried
-    through the eviction-capable ``core.cuckoo_filter`` path.
+    Sorts the batch by primary bucket once (the bulk-build order, DESIGN.md
+    §6) so the kernel streams whole bucket segments; ``ok`` comes back in
+    the original batch order. Failed keys need the eviction-capable
+    core.cuckoo_filter path.
     """
+    if block_keys is None:
+        block_keys = autotune.resolve_block_keys(config, "bulk_insert")
+    return _cuckoo_insert_bulk_jit(config, state, keys, block_keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
+def _cuckoo_apply_ops_jit(config: CuckooConfig, state: CuckooState,
+                          keys: jnp.ndarray, ops: jnp.ndarray,
+                          block_keys: int):
     n0 = keys.shape[0]
     keys, n = _pad_to(keys, block_keys, fill=0)
     ops_p, _ = _pad_to(ops.astype(jnp.int32), block_keys, fill=0)
@@ -111,6 +139,21 @@ def cuckoo_apply_ops(config: CuckooConfig, state: CuckooState,
     delta = (jnp.sum(ok & (ops == 1), dtype=jnp.int32)
              - jnp.sum(ok & (ops == 2), dtype=jnp.int32))
     return CuckooState(table, state.count + delta), ok
+
+
+def cuckoo_apply_ops(config: CuckooConfig, state: CuckooState,
+                     keys: jnp.ndarray, ops: jnp.ndarray,
+                     block_keys: int = None):
+    """Kernel-backed fused mixed-op pass. -> (state', ok bool[n]).
+
+    ``ops``: int32[n] op codes (0 query / 1 insert / 2 delete). The kernel
+    realises exact sequential in-batch semantics (DESIGN.md §9); inserts
+    are direct-only — failed insert slots (ok==False) should be retried
+    through the eviction-capable ``core.cuckoo_filter`` path.
+    """
+    if block_keys is None:
+        block_keys = autotune.resolve_block_keys(config, "apply_ops")
+    return _cuckoo_apply_ops_jit(config, state, keys, ops, block_keys)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))

@@ -79,6 +79,65 @@ def cuckoo_insert_ref(config: CuckooConfig, table: jnp.ndarray,
                              (table, jnp.zeros((n,), jnp.uint32)))
 
 
+def cuckoo_mixed_ref(config: CuckooConfig, table: jnp.ndarray,
+                     keys_lo: jnp.ndarray, keys_hi: jnp.ndarray,
+                     ops: jnp.ndarray, valid: jnp.ndarray = None):
+    """Oracle for kernels.cuckoo_mixed — exact sequential op-stream semantics.
+
+    One key at a time in batch order: QUERY is a match scan over both
+    buckets, INSERT a first-empty-slot claim (i1 preferred, no eviction),
+    DELETE a first-match clear; operation ``i`` observes every mutation of
+    operations ``j < i``. Returns (table', ok uint32[n]).
+    """
+    import jax
+
+    lay = config.layout
+    pol = config.placement
+    from ..core.cuckoo_filter import prepare_keys
+
+    keys = _pack_keys(keys_lo, keys_hi)
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    tag1 = pol.place_tag(base_tag, jnp.zeros(base_tag.shape, bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones(base_tag.shape, bool))
+    t1, t2 = pol.query_match_tags(base_tag)
+    start = L.scan_start(base_tag, lay)
+    n = keys_lo.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint32)
+    ops = ops.astype(jnp.int32)
+
+    def body(i, carry):
+        table, ok = carry
+        opc = ops[i]
+        live = valid[i] != 0
+        is_i = opc == 1
+        is_d = opc == 2
+        words1 = L.gather_bucket_words(table, i1[i], lay)
+        words2 = L.gather_bucket_words(table, i2[i], lay)
+        lanes1 = L.unpack_words(words1, lay.fp_bits)
+        lanes2 = L.unpack_words(words2, lay.fp_bits)
+        flags1 = jnp.where(is_i, lanes1 == 0, lanes1 == t1[i])
+        flags2 = jnp.where(is_i, lanes2 == 0, lanes2 == t2[i])
+        f1, s1 = L.first_true_circular(flags1, start[i])
+        f2, s2 = L.first_true_circular(flags2, start[i])
+        hit = f1 | f2
+        bucket = jnp.where(f1, i1[i], i2[i])
+        slot = jnp.where(f1, s1, s2)
+        store_tag = jnp.where(is_i, jnp.where(f1, tag1[i], tag2[i]), _U32(0))
+        widx, sw = L.slot_to_word(slot, lay)
+        word = jnp.where(f1, words1, words2)[widx]
+        desired = L.replace_tag(word, sw, store_tag, lay.fp_bits)
+        addr = L.word_addr(bucket, widx, lay)
+        ok_i = live & hit
+        do_write = ok_i & (is_i | is_d)
+        table = jnp.where(do_write, table.at[addr].set(desired), table)
+        ok = ok.at[i].set(ok_i.astype(jnp.uint32))
+        return table, ok
+
+    return jax.lax.fori_loop(0, n, body,
+                             (table, jnp.zeros((n,), jnp.uint32)))
+
+
 def bloom_query_ref(config: BloomConfig, table: jnp.ndarray,
                     keys_lo: jnp.ndarray, keys_hi: jnp.ndarray) -> jnp.ndarray:
     state = BloomState(table, jnp.zeros((), jnp.int32))

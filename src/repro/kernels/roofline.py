@@ -1,0 +1,225 @@
+"""Minimal-bytes-per-op roofline model for the filter kernels (DESIGN.md §13).
+
+The paper's central claim is cast in bytes: a Cuckoo filter embraces random
+access and still saturates global memory bandwidth (PAPER.md §1), and
+"High-Performance Filters for GPUs" makes bytes-per-op the standard scale
+for comparing dynamic AMQs. This module computes, purely from a backend's
+static config (layout widths, bucket geometry, probe counts), the *minimal*
+bytes each operation must move — the denominator of every achieved-bandwidth
+number the roofline suite reports (benchmarks/roofline_filters.py) and the
+quantity the HLO cross-check pins (launch/filter_roofline.py,
+tests/test_roofline_model.py).
+
+Two residency regimes are modelled explicitly (the paper's §5.2 L2-resident
+vs DRAM-resident split, mapped to our substrate):
+
+* ``table_resident=False`` (default): the table lives in main memory and
+  every per-key bucket probe is charged at word granularity — the paper's
+  own accounting, and the right model for the XLA core paths (and any
+  table too large to pin).
+* ``table_resident=True``: the table is pinned in fast memory for the
+  kernel's duration (the Pallas VMEM regime) — main-memory traffic is the
+  key/result streams plus ONE table load (and one store for mutating ops);
+  the per-key random access happens against the pinned copy and is *free*
+  at the HBM tier.
+
+All figures are lower bounds by construction: sort/permutation traffic of
+the bulk path, eviction-chain re-reads past the first probe, and padding
+are deliberately excluded — achieved/minimal is then a fraction ≤ 1 of the
+bandwidth ceiling with equality only for a perfect kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Bytes of one packed key on the stream (uint32[2] — the 64-bit key pair).
+KEY_BYTES = 8
+# Bytes of one per-op result lane (uint32 ok/hit in the kernel paths; the
+# core paths return bool[n] but XLA materializes predicates word-wide too).
+RESULT_BYTES = 4
+
+# Op names accepted by the per-backend models.
+OPS = ("query", "insert", "bulk_insert", "delete", "apply_ops")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTraffic:
+    """Per-key minimal traffic, split by direction and residency tier.
+
+    ``stream_read``/``stream_write`` cross main memory in every regime
+    (keys in, results out). ``table_read``/``table_write`` are the per-key
+    probe bytes against the table — main-memory traffic when the table is
+    memory-resident, fast-tier traffic when it is pinned.
+    """
+
+    stream_read: float
+    stream_write: float
+    table_read: float
+    table_write: float
+
+    @property
+    def per_key(self) -> float:
+        """Total bytes per key with a memory-resident table."""
+        return (self.stream_read + self.stream_write
+                + self.table_read + self.table_write)
+
+    def batch_bytes(self, n: int, table_bytes: int = 0,
+                    table_resident: bool = False) -> float:
+        """Minimal bytes for an ``n``-key batch.
+
+        ``table_resident=True`` charges the table once (one load, plus one
+        store when the op writes) instead of per-key probe traffic.
+        """
+        stream = n * (self.stream_read + self.stream_write)
+        if table_resident:
+            spill = table_bytes * (2 if self.table_write else 1)
+            return stream + spill
+        return stream + n * (self.table_read + self.table_write)
+
+
+def _mix(q: float, i: float, d: float):
+    total = q + i + d
+    if total <= 0:
+        raise ValueError("op mix must have a positive total")
+    return q / total, i / total, d / total
+
+
+# ---------------------------------------------------------------------------
+# Cuckoo (core contribution): packed fingerprints, two candidate buckets.
+# ---------------------------------------------------------------------------
+
+def cuckoo_op_traffic(config, op: str, *,
+                      op_mix: Optional[tuple] = None,
+                      batch: Optional[int] = None) -> OpTraffic:
+    """Minimal per-key traffic for one cuckoo op, from the packed layout.
+
+    * ``query``: read both candidate buckets (``2 * words_per_bucket``
+      uint32 words — the §4.2 vectorized bucket loads), no table write.
+    * ``insert`` / ``delete``: same two bucket reads plus exactly one
+      word read-modify-write (the claimed/cleared slot's word).
+    * ``bulk_insert``: the bucket-major stream amortizes the *primary*
+      bucket load/flush over the expected run of keys per bucket
+      (``batch / num_buckets`` when ``batch`` is given) — the whole point
+      of sorting first (DESIGN.md §6). Sort traffic itself is excluded
+      (lower bound).
+    * ``apply_ops``: op-mix-weighted blend, ``op_mix=(query, insert,
+      delete)`` fractions (default the uniform read-heavy 80/15/5).
+    """
+    lay = config.layout
+    bucket_bytes = lay.words_per_bucket * 4
+
+    if op == "query":
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes, 0.0)
+    if op == "insert":
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes, 4.0)
+    if op == "delete":
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes, 4.0)
+    if op == "bulk_insert":
+        seg = max(1.0, (batch or 1) / config.num_buckets)
+        # Primary bucket: one load + one flush per segment; secondary
+        # bucket: per-key load, one word write for spilled keys (charged
+        # fully — a lower bound need not model the spill rate).
+        table_read = bucket_bytes / seg + bucket_bytes
+        table_write = bucket_bytes / seg + 4.0
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, table_read, table_write)
+    if op == "apply_ops":
+        q, i, d = _mix(*(op_mix or (0.80, 0.15, 0.05)))
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes,
+                         4.0 * (i + d))
+    raise ValueError(f"unknown cuckoo op {op!r} (want one of {OPS})")
+
+
+# ---------------------------------------------------------------------------
+# Blocked Bloom: one cache-line-style block per key.
+# ---------------------------------------------------------------------------
+
+def bloom_op_traffic(config, op: str, *,
+                     op_mix: Optional[tuple] = None,
+                     batch: Optional[int] = None) -> OpTraffic:
+    """Minimal per-key traffic for the blocked-Bloom baseline.
+
+    Every probe touches exactly one block (``words_per_block`` uint32
+    words — the GPU-cache-line layout that makes Blocked Bloom the
+    bandwidth yardstick); inserts additionally write the ≤ k distinct
+    words carrying the set bits. Deletes are unsupported (append-only).
+    """
+    del batch
+    block_bytes = config.words_per_block * 4
+    write_words = min(config.k, config.words_per_block)
+
+    if op == "query":
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, block_bytes, 0.0)
+    if op in ("insert", "bulk_insert"):
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, block_bytes,
+                         4.0 * write_words)
+    if op == "apply_ops":
+        q, i, d = _mix(*(op_mix or (0.80, 0.20, 0.0)))
+        if d:
+            raise ValueError("bloom: append-only — delete fraction must be 0")
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, block_bytes,
+                         4.0 * write_words * i)
+    raise ValueError(f"unknown bloom op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# BCHT (exact membership): full 64-bit keys + occupancy lanes per slot.
+# ---------------------------------------------------------------------------
+
+_BCHT_SLOT_BYTES = 9  # 8B key + 1B used lane (matches BCHTConfig.table_bytes)
+
+
+def bcht_op_traffic(config, op: str, *,
+                    op_mix: Optional[tuple] = None,
+                    batch: Optional[int] = None) -> OpTraffic:
+    """Minimal per-key traffic for the bucketed cuckoo hash table.
+
+    Exactness costs bandwidth: a probe compares full 64-bit keys across
+    both candidate buckets (``2 * bucket_size`` slots at 9 B/slot), and a
+    mutation rewrites one whole slot — the bytes-per-op gap to the packed
+    fingerprint filter is the point of measuring both.
+    """
+    del batch
+    bucket_bytes = config.bucket_size * _BCHT_SLOT_BYTES
+
+    if op == "query":
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes, 0.0)
+    if op in ("insert", "bulk_insert", "delete"):
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes,
+                         float(_BCHT_SLOT_BYTES))
+    if op == "apply_ops":
+        q, i, d = _mix(*(op_mix or (0.80, 0.15, 0.05)))
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes,
+                         _BCHT_SLOT_BYTES * (i + d))
+    raise ValueError(f"unknown bcht op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch by config type (duck-typed on the distinguishing fields).
+# ---------------------------------------------------------------------------
+
+def op_traffic(config, op: str, **kw) -> OpTraffic:
+    """Route a backend config to its bytes model by its layout fields."""
+    if hasattr(config, "words_per_block"):           # BloomConfig
+        return bloom_op_traffic(config, op, **kw)
+    if hasattr(config, "fp_bits") and hasattr(config, "layout"):
+        return cuckoo_op_traffic(config, op, **kw)   # CuckooConfig
+    if hasattr(config, "bucket_size"):               # BCHTConfig
+        return bcht_op_traffic(config, op, **kw)
+    inner = getattr(config, "inner", None)           # ShardedAMQConfig
+    if inner is not None:
+        shard = getattr(inner, "shard", None)
+        if shard is not None:
+            return op_traffic(shard, op, **kw)
+    raise TypeError(
+        f"no bytes model for config type {type(config).__name__}")
+
+
+def min_batch_bytes(config, op: str, n: int, *,
+                    table_resident: bool = False, **kw) -> float:
+    """Minimal bytes an ``n``-key batch of ``op`` must move (see module
+    docstring for the residency regimes)."""
+    t = op_traffic(config, op, batch=n, **kw)
+    return t.batch_bytes(n, table_bytes=int(config.table_bytes),
+                         table_resident=table_resident)

@@ -1,0 +1,118 @@
+"""Roofline plumbing for the filter ops (DESIGN.md §13).
+
+Three pieces connect the analytic bytes model (kernels/roofline.py) to
+numbers a benchmark can report honestly:
+
+* :func:`measured_copy_bandwidth` — an empirical STREAM-style ceiling: the
+  bytes/s of a device-resident array copy, measured on *this* machine and
+  backend. Achieved fractions are quoted against this, never against a
+  datasheet — the CPU container and a TPU core get the same treatment.
+* :func:`lowered_cost` — lower + compile a jitted filter op and run the
+  text-based HLO cost model (launch/hlo_cost.py) over the result: what XLA
+  actually materializes, trip-count-scaled.
+* :func:`cross_check` — the guard rail: the HLO-parsed bytes of a lowered
+  query/insert/mixed program, divided by the model's minimal bytes. The
+  ratio must stay ≥ 1 (a *minimal* model can't exceed what the compiled
+  program moves) and inside a recorded band (tests/test_roofline_model.py)
+  — if the bytes model drifts (a layout change, a probe-count change the
+  model missed), the roofline suite's denominators go stale and this ratio
+  moves first.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cuckoo_filter as CF
+from ..kernels import roofline as RM
+from . import hlo_cost as HC
+
+
+def measured_copy_bandwidth(nbytes: int = 1 << 26, iters: int = 5) -> float:
+    """Empirical memory-bandwidth ceiling: device copy bytes/s.
+
+    Times ``y = x + 0`` over a ``nbytes`` uint32 array (one read + one
+    write per element — 2x ``nbytes`` moved per call) and returns the
+    median bytes/s. This is the peak the roofline fractions are quoted
+    against; re-measured per process so container/TPU runs self-calibrate.
+    """
+    n = max(1, nbytes // 4)
+    x = jnp.zeros((n,), jnp.uint32)
+    copy = jax.jit(lambda a: a + jnp.uint32(0))
+    jax.block_until_ready(copy(x))  # compile + warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(copy(x))
+        times.append(time.perf_counter() - t0)
+    return 2.0 * n * 4 / float(np.median(times))
+
+
+def lowered_cost(fn, *args, n_devices: int = 1) -> Dict:
+    """Lower + compile ``fn(*args)`` and run the HLO cost parse over it.
+
+    Returns the :func:`repro.launch.hlo_cost.analyse_text` dict (flops,
+    bytes, collectives, n_computations) of the *compiled* program — the
+    same machinery the model dry-run uses, pointed at a filter op.
+    """
+    compiled = jax.jit(fn).lower(*args).compile()
+    return HC.analyse_text(compiled.as_text(), n_devices)
+
+
+def _mixed_ops_array(n: int, op_mix=(0.80, 0.15, 0.05)) -> jnp.ndarray:
+    """Deterministic op-code array realizing ``op_mix`` fractions."""
+    q, i, d = op_mix
+    n_i = int(round(n * i / (q + i + d)))
+    n_d = int(round(n * d / (q + i + d)))
+    codes = np.zeros((n,), np.int32)
+    codes[:n_i] = 1
+    codes[n_i:n_i + n_d] = 2
+    rng = np.random.default_rng(0)
+    rng.shuffle(codes)
+    return jnp.asarray(codes)
+
+
+def cross_check(config, op: str, n: int = 1024, *,
+                op_mix=(0.80, 0.15, 0.05)) -> Dict:
+    """Model-vs-HLO bytes for one lowered cuckoo program.
+
+    Lowers the *core* jit path (the XLA program every backend dispatches
+    outside the Pallas regime), parses its materialized HBM bytes, and
+    returns ``{"model_bytes", "hlo_bytes", "ratio", "flops"}`` with
+    ``ratio = hlo_bytes / model_bytes``. The model is a lower bound, so a
+    correct pairing keeps ``ratio ≥ 1``; the upper edge is pinned by
+    tests/test_roofline_model.py per op.
+    """
+    state = config.init()
+    keys = jnp.zeros((n, 2), jnp.uint32)
+    if op == "query":
+        fn = functools.partial(CF.query, config)
+        cost = lowered_cost(fn, state, keys)
+    elif op == "insert":
+        fn = functools.partial(CF.insert, config)
+        cost = lowered_cost(fn, state, keys)
+    elif op == "bulk_insert":
+        fn = functools.partial(CF.insert_bulk, config)
+        cost = lowered_cost(fn, state, keys)
+    elif op == "delete":
+        fn = functools.partial(CF.delete, config)
+        cost = lowered_cost(fn, state, keys)
+    elif op == "apply_ops":
+        fn = functools.partial(CF.apply_ops, config)
+        cost = lowered_cost(fn, state, keys, _mixed_ops_array(n, op_mix))
+    else:
+        raise ValueError(f"unknown op {op!r} (want one of {RM.OPS})")
+    kw = {"op_mix": op_mix} if op == "apply_ops" else {}
+    model = RM.min_batch_bytes(config, op, n, **kw)
+    return {
+        "model_bytes": float(model),
+        "hlo_bytes": float(cost["bytes"]),
+        "ratio": float(cost["bytes"]) / float(model),
+        "flops": float(cost["flops"]),
+    }

@@ -1,0 +1,221 @@
+"""tools/bench_compare.py: diff mode, trend mode, and the CI exit codes.
+
+The bench-smoke gate hangs off this tool's exit status, so the contract is
+pinned end-to-end: 0 = clean, 1 = regressions (or removals with
+``--fail-on-missing``), 2 = empty/missing inputs — and ``--warn-only``
+flattens everything to 0. Trend mode (a baseline directory holding a run
+history) must ratchet on ``--agg min``, tolerate outliers on ``median``,
+and collapse to plain diff mode for a flat single-run directory.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", _ROOT / "tools" / "bench_compare.py")
+bc = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bc)
+
+
+def write_suite(dirpath: pathlib.Path, suite: str, rows: dict) -> None:
+    dirpath.mkdir(parents=True, exist_ok=True)
+    payload = {"suite": suite,
+               "rows": [{"name": k, "us_per_call": v, "derived": ""}
+                        for k, v in rows.items()]}
+    (dirpath / f"BENCH_{suite}.json").write_text(json.dumps(payload))
+
+
+# ---------------------------------------------------------------------------
+# load_history / aggregate
+# ---------------------------------------------------------------------------
+
+def test_flat_dir_is_single_run(tmp_path):
+    write_suite(tmp_path, "a", {"r": 10.0})
+    runs = bc.load_history(tmp_path)
+    assert len(runs) == 1
+    assert runs[0] == {"a": {"r": 10.0}}
+
+
+def test_history_orders_top_then_sorted_subdirs(tmp_path):
+    write_suite(tmp_path, "a", {"r": 30.0})
+    write_suite(tmp_path / "run-2026-02", "a", {"r": 20.0})
+    write_suite(tmp_path / "run-2026-01", "a", {"r": 10.0})
+    runs = bc.load_history(tmp_path)
+    assert [r["a"]["r"] for r in runs] == [30.0, 10.0, 20.0]
+
+
+def test_history_skips_empty_subdirs(tmp_path):
+    write_suite(tmp_path / "run-1", "a", {"r": 5.0})
+    (tmp_path / "empty").mkdir()
+    assert len(bc.load_history(tmp_path)) == 1
+
+
+def test_aggregate_min_is_best_ever():
+    runs = [{"a": {"r": 30.0}}, {"a": {"r": 10.0}}, {"a": {"r": 20.0}}]
+    assert bc.aggregate(runs, "min") == {"a": {"r": 10.0}}
+
+
+def test_aggregate_median_tolerates_outlier():
+    runs = [{"a": {"r": 30.0}}, {"a": {"r": 10.0}}, {"a": {"r": 20.0}}]
+    assert bc.aggregate(runs, "median") == {"a": {"r": 20.0}}
+
+
+def test_aggregate_last_is_newest_run_only():
+    runs = [{"a": {"r": 30.0}, "b": {"x": 1.0}}, {"a": {"r": 20.0}}]
+    # b disappeared from the newest run: "last" must not resurrect it.
+    assert bc.aggregate(runs, "last") == {"a": {"r": 20.0}}
+
+
+def test_aggregate_row_added_mid_history():
+    runs = [{"a": {"old": 10.0}}, {"a": {"old": 12.0, "new": 7.0}}]
+    agg = bc.aggregate(runs, "min")
+    assert agg["a"] == {"old": 10.0, "new": 7.0}
+
+
+def test_aggregate_rejects_unknown_agg():
+    with pytest.raises(ValueError):
+        bc.aggregate([{"a": {"r": 1.0}}], "mean")
+
+
+# ---------------------------------------------------------------------------
+# compare(): threshold edges, added/removed
+# ---------------------------------------------------------------------------
+
+def test_threshold_edge_exact_is_not_regression():
+    base = {"a": {"r": 100.0}}
+    new = {"a": {"r": 125.0}}   # exactly +25%: > is strict, so no flag
+    _, regressions, _ = bc.compare(base, new, 0.25)
+    assert regressions == []
+
+
+def test_threshold_edge_just_past_is_regression():
+    base = {"a": {"r": 100.0}}
+    new = {"a": {"r": 125.1}}
+    _, regressions, _ = bc.compare(base, new, 0.25)
+    assert [(s, n) for s, n, _ in regressions] == [("a", "r")]
+
+
+def test_added_rows_never_count():
+    base = {"a": {"r": 100.0}}
+    new = {"a": {"r": 100.0, "shiny": 1e9}, "b": {"x": 1e9}}
+    _, regressions, removed = bc.compare(base, new, 0.25)
+    assert regressions == [] and removed == []
+
+
+def test_removed_rows_reported():
+    base = {"a": {"r": 100.0, "gone": 5.0}, "z": {"x": 1.0}}
+    new = {"a": {"r": 100.0}}
+    _, regressions, removed = bc.compare(base, new, 0.25)
+    assert regressions == []
+    assert ("a", "gone") in removed and ("z", None) in removed
+
+
+# ---------------------------------------------------------------------------
+# main(): exit codes the CI gate hangs off
+# ---------------------------------------------------------------------------
+
+def _main(base, cand, *extra):
+    return bc.main([str(base), str(cand), *extra])
+
+
+def test_exit_0_clean(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 100.0})
+    write_suite(tmp_path / "cand", "a", {"r": 101.0})
+    assert _main(tmp_path / "base", tmp_path / "cand") == 0
+
+
+def test_exit_1_on_regression(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 100.0})
+    write_suite(tmp_path / "cand", "a", {"r": 300.0})
+    assert _main(tmp_path / "base", tmp_path / "cand") == 1
+
+
+def test_exit_2_on_missing_baseline(tmp_path):
+    (tmp_path / "base").mkdir()
+    write_suite(tmp_path / "cand", "a", {"r": 1.0})
+    assert _main(tmp_path / "base", tmp_path / "cand") == 2
+
+
+def test_exit_2_on_missing_candidate(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 1.0})
+    (tmp_path / "cand").mkdir()
+    assert _main(tmp_path / "base", tmp_path / "cand") == 2
+
+
+def test_warn_only_flattens_everything_to_0(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 100.0})
+    write_suite(tmp_path / "cand", "a", {"r": 900.0})
+    assert _main(tmp_path / "base", tmp_path / "cand", "--warn-only") == 0
+    (tmp_path / "empty").mkdir()
+    assert _main(tmp_path / "empty", tmp_path / "cand", "--warn-only") == 0
+
+
+def test_fail_on_missing_gates_removals(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 100.0, "gone": 1.0})
+    write_suite(tmp_path / "cand", "a", {"r": 100.0})
+    assert _main(tmp_path / "base", tmp_path / "cand") == 0
+    assert _main(tmp_path / "base", tmp_path / "cand",
+                 "--fail-on-missing") == 1
+
+
+def test_suites_filter_unknown_name_exit_2(tmp_path):
+    write_suite(tmp_path / "base", "a", {"r": 1.0})
+    write_suite(tmp_path / "cand", "a", {"r": 1.0})
+    assert _main(tmp_path / "base", tmp_path / "cand",
+                 "--suites", "nope") == 2
+
+
+# ---------------------------------------------------------------------------
+# Trend mode through main(): the ratchet the CI gate runs
+# ---------------------------------------------------------------------------
+
+def _history(tmp_path):
+    base = tmp_path / "base"
+    write_suite(base, "a", {"r": 100.0})                 # oldest (flat)
+    write_suite(base / "run-02", "a", {"r": 60.0})       # best ever
+    write_suite(base / "run-03", "a", {"r": 90.0})       # newest
+    return base
+
+
+def test_trend_min_ratchets_on_best_run(tmp_path):
+    base = _history(tmp_path)
+    # 100us would pass vs the newest run (90us) but fails vs best-ever
+    # 60us at threshold 0.5 (60 * 1.5 = 90 < 100): the ratchet.
+    write_suite(tmp_path / "cand", "a", {"r": 100.0})
+    assert _main(base, tmp_path / "cand", "--threshold", "0.5") == 1
+    assert _main(base, tmp_path / "cand", "--threshold", "0.5",
+                 "--agg", "last") == 0
+
+
+def test_trend_median_tolerates_one_fast_outlier(tmp_path):
+    base = _history(tmp_path)                            # median = 90us
+    write_suite(tmp_path / "cand", "a", {"r": 100.0})
+    assert _main(base, tmp_path / "cand", "--threshold", "0.5",
+                 "--agg", "median") == 0
+
+
+def test_trend_flat_dir_equals_diff_mode(tmp_path):
+    # No subdirectories: every agg sees the same single run.
+    write_suite(tmp_path / "base", "a", {"r": 100.0})
+    write_suite(tmp_path / "cand", "a", {"r": 120.0})
+    for agg in ("min", "median", "last"):
+        assert _main(tmp_path / "base", tmp_path / "cand",
+                     "--agg", agg) == 0
+
+
+def test_trend_row_only_in_old_run_is_removed_coverage(tmp_path):
+    base = tmp_path / "base"
+    write_suite(base / "run-01", "a", {"r": 10.0, "legacy": 5.0})
+    write_suite(base / "run-02", "a", {"r": 10.0})
+    write_suite(tmp_path / "cand", "a", {"r": 10.0})
+    # min-agg keeps the union, so legacy counts as lost coverage.
+    assert _main(base, tmp_path / "cand", "--fail-on-missing") == 1
+    # last-agg sees only run-02, where legacy was already gone.
+    assert _main(base, tmp_path / "cand", "--fail-on-missing",
+                 "--agg", "last") == 0

@@ -1,0 +1,182 @@
+"""The bytes model (kernels/roofline.py) vs real lowered HLO programs.
+
+Two layers of defence against the roofline suite silently reporting
+nonsense:
+
+* **Model algebra** — the per-op minimal-bytes figures must obey the
+  structural facts they encode (two bucket reads per cuckoo probe, one
+  block per bloom probe, bulk amortization, residency regimes, mix
+  blending). These are exact, fast, and catch layout-change drift.
+* **HLO cross-check** — ``launch.filter_roofline.cross_check`` lowers the
+  actual core programs and parses their materialized bytes with
+  ``launch.hlo_cost``. The model is a *lower bound*, so ``ratio =
+  hlo_bytes / model_bytes >= 1`` must hold for every op; for query (a
+  simple two-gather program) the compiled program is also pinned to stay
+  within an order of magnitude of the model — if either edge moves, the
+  denominators of every achieved-bandwidth number have gone stale.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cuckoo_filter import CuckooConfig
+from repro.filters.bcht import BCHTConfig
+from repro.filters.blocked_bloom import BloomConfig
+from repro.kernels import roofline as RM
+from repro.launch import filter_roofline as FR
+
+
+CFG = CuckooConfig(num_buckets=1 << 8, fp_bits=16)
+
+
+# ---------------------------------------------------------------------------
+# Model algebra.
+# ---------------------------------------------------------------------------
+
+def test_cuckoo_query_reads_both_buckets():
+    t = RM.cuckoo_op_traffic(CFG, "query")
+    bucket_bytes = CFG.layout.words_per_bucket * 4
+    assert t.table_read == 2 * bucket_bytes
+    assert t.table_write == 0.0
+    assert t.stream_read == RM.KEY_BYTES
+    assert t.stream_write == RM.RESULT_BYTES
+
+
+def test_cuckoo_mutations_add_one_word_write():
+    for op in ("insert", "delete"):
+        t = RM.cuckoo_op_traffic(CFG, op)
+        assert t.table_write == 4.0
+        assert t.table_read == RM.cuckoo_op_traffic(CFG, "query").table_read
+
+
+def test_bulk_insert_amortizes_primary_bucket():
+    # A batch spanning every bucket many times amortizes the primary
+    # bucket load; a tiny batch cannot beat the per-key insert model.
+    big = RM.cuckoo_op_traffic(CFG, "bulk_insert",
+                               batch=64 * CFG.num_buckets)
+    ins = RM.cuckoo_op_traffic(CFG, "insert")
+    assert big.per_key < ins.per_key
+    small = RM.cuckoo_op_traffic(CFG, "bulk_insert", batch=1)
+    assert small.per_key >= ins.per_key
+
+
+def test_apply_ops_blends_mix():
+    q_only = RM.cuckoo_op_traffic(CFG, "apply_ops", op_mix=(1.0, 0.0, 0.0))
+    assert q_only.table_write == 0.0
+    heavy = RM.cuckoo_op_traffic(CFG, "apply_ops", op_mix=(0.0, 1.0, 0.0))
+    assert heavy.table_write == 4.0
+    mixed = RM.cuckoo_op_traffic(CFG, "apply_ops", op_mix=(0.5, 0.5, 0.0))
+    assert 0.0 < mixed.table_write < 4.0
+
+
+def test_fp_bits_scale_probe_bytes():
+    # Wider fingerprints = more words per bucket = more probe traffic.
+    per_key = [RM.cuckoo_op_traffic(
+        CuckooConfig(num_buckets=1 << 8, fp_bits=fb), "query").per_key
+        for fb in (8, 16, 32)]
+    assert per_key[0] < per_key[1] < per_key[2]
+
+
+def test_bloom_reads_one_block():
+    cfg = BloomConfig(num_blocks=1 << 8, words_per_block=16, k=8)
+    t = RM.bloom_op_traffic(cfg, "query")
+    assert t.table_read == 16 * 4
+    assert RM.bloom_op_traffic(cfg, "insert").table_write == 8 * 4
+
+
+def test_bloom_rejects_delete_fraction():
+    cfg = BloomConfig(num_blocks=1 << 8, words_per_block=16, k=8)
+    with pytest.raises(ValueError, match="append-only"):
+        RM.bloom_op_traffic(cfg, "apply_ops", op_mix=(0.8, 0.1, 0.1))
+
+
+def test_bcht_costs_full_slots():
+    cfg = BCHTConfig(num_buckets=1 << 8, bucket_size=16)
+    t = RM.bcht_op_traffic(cfg, "query")
+    assert t.table_read == 2 * 16 * 9
+    assert RM.bcht_op_traffic(cfg, "insert").table_write == 9.0
+
+
+def test_dispatch_routes_by_config_type():
+    assert RM.op_traffic(CFG, "query").table_read > 0
+    bloom = BloomConfig(num_blocks=1 << 8, words_per_block=16, k=8)
+    assert RM.op_traffic(bloom, "query").table_read == 64
+    bcht = BCHTConfig(num_buckets=1 << 8, bucket_size=16)
+    assert RM.op_traffic(bcht, "query").table_read == 288
+    with pytest.raises(TypeError, match="no bytes model"):
+        RM.op_traffic(object(), "query")
+
+
+def test_unknown_op_raises():
+    with pytest.raises(ValueError, match="unknown cuckoo op"):
+        RM.cuckoo_op_traffic(CFG, "frobnicate")
+
+
+def test_min_batch_bytes_linear_in_n():
+    b1 = RM.min_batch_bytes(CFG, "query", 1024)
+    b2 = RM.min_batch_bytes(CFG, "query", 2048)
+    assert b2 == 2 * b1
+
+
+def test_table_resident_regime():
+    n = 1024
+    resident = RM.min_batch_bytes(CFG, "query", n, table_resident=True)
+    streaming = RM.min_batch_bytes(CFG, "query", n)
+    stream_only = n * (RM.KEY_BYTES + RM.RESULT_BYTES)
+    # Pinned: streams + exactly one table load (query writes nothing).
+    assert resident == stream_only + CFG.table_bytes
+    # Mutating ops spill the table back: one load + one store.
+    res_ins = RM.min_batch_bytes(CFG, "insert", n, table_resident=True)
+    assert res_ins == stream_only + 2 * CFG.table_bytes
+    # Both regimes are lower-bounded by the key/result streams.
+    assert streaming > stream_only
+
+
+def test_model_floor_is_the_stream():
+    for op in RM.OPS:
+        t = RM.op_traffic(CFG, op, batch=4096)
+        assert t.per_key >= RM.KEY_BYTES + RM.RESULT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# HLO cross-check: the model vs actually-lowered programs.
+# ---------------------------------------------------------------------------
+
+XCFG = CuckooConfig(num_buckets=1 << 8, fp_bits=16)
+
+
+@pytest.mark.parametrize("op", ["query", "insert", "apply_ops"])
+def test_model_is_lower_bound_of_lowered_hlo(op):
+    r = FR.cross_check(XCFG, op, n=512)
+    assert r["model_bytes"] > 0
+    assert r["hlo_bytes"] > 0
+    # A *minimal* model can never exceed what the compiled program moves.
+    assert r["ratio"] >= 1.0, r
+
+
+def test_query_hlo_stays_near_model():
+    # The lowered query is two gathers + compares; XLA materializes
+    # operand-sized buffers so the ratio is > 1, but it must stay within
+    # an order of magnitude (measured ~4-5x) — a blowout here means the
+    # model (or the core query) changed shape without the other.
+    r = FR.cross_check(XCFG, "query", n=512)
+    assert 1.0 <= r["ratio"] < 50.0, r
+
+
+def test_cross_check_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown op"):
+        FR.cross_check(XCFG, "nope", n=64)
+
+
+def test_lowered_cost_parses_flops_and_bytes():
+    import functools
+
+    import jax.numpy as jnp
+
+    from repro.core import cuckoo_filter as CF
+
+    state = XCFG.init()
+    keys = jnp.zeros((256, 2), jnp.uint32)
+    cost = FR.lowered_cost(functools.partial(CF.query, XCFG), state, keys)
+    assert cost["bytes"] > 0 and cost["n_computations"] >= 1

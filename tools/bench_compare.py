@@ -17,9 +17,23 @@ dropping out of the smoke run. ``--suites a,b`` restricts the comparison
 (and the missing check) to named suites — the gating invocation compares
 the stable suites strictly while the full set stays warn-only.
 
-Exit status is 1 when regressions (or, with ``--fail-on-missing``,
-removals) were found, unless ``--warn-only`` (CI's log-everything mode:
-CPU-runner wall clocks are too noisy to gate merges on across the board).
+**Trend mode**: a baseline directory may hold a *history* — flat
+``BENCH_*.json`` files (the oldest run) plus any number of run
+subdirectories (``benchmarks/baseline/run-YYYYMMDD/...``), ordered by
+sorted subdirectory name. The candidate is then compared against the
+``--agg`` aggregate of every run a row appears in:
+
+* ``min`` (default) — the best time ever recorded: a monotone ratchet.
+  A candidate must stay within ``--threshold`` of the best-known run, so
+  perf can only be lost once before CI complains.
+* ``median`` — the typical run: tolerant of one lucky outlier run.
+* ``last`` — the newest run only: plain drift detection.
+
+A baseline directory with no subdirectories is a one-run history, so diff
+mode is unchanged. Exit status is 1 when regressions (or, with
+``--fail-on-missing``, removals) were found, unless ``--warn-only``
+(CI's log-everything mode: CPU-runner wall clocks are too noisy to gate
+merges on across the board); 2 on empty/missing inputs.
 """
 
 from __future__ import annotations
@@ -27,7 +41,10 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import statistics
 import sys
+
+AGGS = ("min", "median", "last")
 
 
 def load_dir(path: pathlib.Path) -> dict:
@@ -39,6 +56,46 @@ def load_dir(path: pathlib.Path) -> dict:
             row["name"]: row["us_per_call"] for row in payload.get("rows", [])
         }
     return suites
+
+
+def load_history(path: pathlib.Path) -> list:
+    """Ordered run history under ``path`` (oldest first).
+
+    The top-level flat ``BENCH_*.json`` files (when present) are the
+    first run; each immediate subdirectory containing ``BENCH_*.json``
+    is a later run, in sorted name order (date-stamped names sort
+    chronologically). Returns ``[{suite: {row: us}}, ...]``.
+    """
+    runs = []
+    top = load_dir(path)
+    if top:
+        runs.append(top)
+    if path.is_dir():
+        for sub in sorted(p for p in path.iterdir() if p.is_dir()):
+            d = load_dir(sub)
+            if d:
+                runs.append(d)
+    return runs
+
+
+def aggregate(runs: list, agg: str) -> dict:
+    """Collapse a run history into one {suite: {row: us}} per ``agg``.
+
+    Each row aggregates over the runs it appears in — a row added halfway
+    through the history ratchets on its own runs only.
+    """
+    if agg not in AGGS:
+        raise ValueError(f"agg must be one of {AGGS}, got {agg!r}")
+    if agg == "last":
+        runs = runs[-1:]
+    series = {}
+    for run in runs:
+        for suite, rows in run.items():
+            for name, us in rows.items():
+                series.setdefault(suite, {}).setdefault(name, []).append(us)
+    fold = min if agg == "min" else statistics.median
+    return {suite: {name: float(fold(vals)) for name, vals in rows.items()}
+            for suite, rows in series.items()}
 
 
 def compare(base: dict, new: dict, threshold: float) -> tuple:
@@ -95,6 +152,10 @@ def main(argv=None) -> int:
     ap.add_argument("--suites", default=None,
                     help="comma-separated suite names to compare; others "
                          "are ignored on both sides")
+    ap.add_argument("--agg", default="min", choices=AGGS,
+                    help="how to collapse a multi-run baseline history: "
+                         "min = best-ever (ratchet, default), median = "
+                         "typical run, last = newest run only")
     ap.add_argument("--fail-on-missing", action="store_true",
                     help="baseline suites/rows absent from the candidate "
                          "fail the comparison (CI coverage guard)")
@@ -102,12 +163,15 @@ def main(argv=None) -> int:
                     help="always exit 0 (CI smoke on noisy CPU runners)")
     args = ap.parse_args(argv)
 
-    base, new = load_dir(args.baseline), load_dir(args.candidate)
-    if not base or not new:
-        empty = args.baseline if not base else args.candidate
+    base_runs, new = load_history(args.baseline), load_dir(args.candidate)
+    if not base_runs or not new:
+        empty = args.baseline if not base_runs else args.candidate
         print(f"bench_compare: no BENCH_*.json under {empty}",
               file=sys.stderr)
         return 0 if args.warn_only else 2
+    base = aggregate(base_runs, args.agg)
+    if len(base_runs) > 1:
+        print(f"# baseline history: {len(base_runs)} runs, agg={args.agg}")
     if args.suites is not None:
         keep = {s.strip() for s in args.suites.split(",") if s.strip()}
         unknown = keep - (set(base) | set(new))
