@@ -1,11 +1,20 @@
-"""Paper Figs. 5 + 6: BFS vs DFS eviction at increasing load factors.
+"""Paper Figs. 5 + 6: insertion engines vs load factor (DESIGN.md §14).
 
 Methodology follows §5.4.1: pre-fill to 3/4 of the target load, then measure
 only the contended final quarter — tail eviction-chain percentiles and batch
-loop rounds (Fig. 5) and insertion throughput (Fig. 6), for both eviction
-policies up to 0.95+ load. Each cell also lands as a structured JSON record
-in ``BENCH_fig5_6.json`` (``common.emit_json``) so the committed baseline
-can trend-compare the eviction behaviour, not just the wall clocks.
+loop rounds (Fig. 5) and insertion throughput (Fig. 6). Four engines share
+the sweep:
+
+* ``dfs`` / ``bfs`` — the legacy round-loop (``insert_engine="legacy"``
+  pinned, so these rows keep measuring the committed baseline's path even
+  now that ``auto`` routes elsewhere);
+* ``frontier`` — the batched BFS frontier search (incremental ``insert``);
+* ``orient`` — the graph-orientation bulk build (``insert_bulk``).
+
+Every cell lands as a structured JSON record in ``BENCH_fig5_6.json`` with
+its failed-insert *rate*; any failure at load ≤ 0.95 raises (a suite error
+makes every row go missing, which the CI ratchet's ``--fail-on-missing``
+turns into a loud failure rather than a silently absent cell).
 """
 
 from __future__ import annotations
@@ -22,19 +31,28 @@ from .common import bench, emit, emit_json, rand_keys, throughput_m_per_s
 
 SUITE = "fig5_6"
 
+# label -> (eviction policy, insert_engine, bulk entry point?)
+ENGINES = {
+    "dfs": ("dfs", "legacy", False),
+    "bfs": ("bfs", "legacy", False),
+    "frontier": ("bfs", "frontier", False),
+    "orient": ("bfs", "orientation", True),
+}
+
 
 def run(fast: bool = False):
-    # Fast mode shrinks the table, not the sweep: the bfs-vs-dfs contrast
+    # Fast mode shrinks the table, not the sweep: the engine contrast
     # lives at high load, so 0.95 stays in the CI cell set.
     slots = 1 << 14 if fast else 1 << 16
     loads = [0.75, 0.85, 0.95] if fast else [0.75, 0.85, 0.90, 0.95, 0.98]
     records = []
-    for evic in ("dfs", "bfs"):
+    for label, (evic, engine, bulk) in ENGINES.items():
         cfg = CuckooConfig(
             num_buckets=slots // 16, fp_bits=16, bucket_size=16,
             policy="xor", eviction=evic, hash_kind="fmix32",
-            max_evictions=256)
-        jins = jax.jit(functools.partial(CF.insert, cfg))
+            max_evictions=256, insert_engine=engine)
+        entry = CF.insert_bulk if bulk else CF.insert
+        jins = jax.jit(functools.partial(entry, cfg))
         for load in loads:
             n = int(slots * load)
             pre, hot = 3 * n // 4, n - 3 * n // 4
@@ -46,17 +64,24 @@ def run(fast: bool = False):
             ev = np.asarray(stats.evictions)
             rounds = int(np.asarray(stats.rounds))
             fails = int((~np.asarray(ok)).sum())
+            fail_rate = fails / hot
+            if load <= 0.95 and fails:
+                raise RuntimeError(
+                    f"engine {label!r} failed {fails}/{hot} inserts at "
+                    f"load {load} — high-load engines must be failure-free "
+                    f"up to 0.95 (DESIGN.md §14)")
             p90, p95, p99 = np.percentile(ev, [90, 95, 99])
-            emit(f"fig5_evictions_{evic}_load{int(load * 100)}", 0.0,
+            emit(f"fig5_evictions_{label}_load{int(load * 100)}", 0.0,
                  f"p90={p90:.0f}_p95={p95:.0f}_p99={p99:.0f}"
                  f"_rounds={rounds}_fail={fails}")
 
             us = bench(lambda s=state: jins(s, keys[pre:]))
-            emit(f"fig6_insert_{evic}_load{int(load * 100)}", us,
+            emit(f"fig6_insert_{label}_load{int(load * 100)}", us,
                  throughput_m_per_s(hot, us))
             records.append({
-                "eviction": evic, "load": load, "slots": slots,
-                "hot_keys": hot, "rounds": rounds, "fails": fails,
+                "engine": label, "eviction": evic, "load": load,
+                "slots": slots, "hot_keys": hot, "rounds": rounds,
+                "fails": fails, "fail_rate": fail_rate,
                 "evictions_p90": float(p90), "evictions_p95": float(p95),
                 "evictions_p99": float(p99), "insert_us": us,
                 "m_keys_per_s": hot / us,

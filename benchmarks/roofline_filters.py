@@ -10,19 +10,22 @@ bloom, and bcht backends:
     achieved_bytes_per_s = model_min_bytes(batch) / wall_time
     frac_of_peak         = achieved_bytes_per_s / measured_copy_bandwidth
 
-plus two Pallas kernel rows — the fused-SWAR query kernel and the pre-fusion
-unpack variant — so the committed baseline pins fused >= pre-fusion, and an
-autotune row recording the block_keys sweep winner. Everything lands in
-``BENCH_roofline.json`` (rows + a structured ``data`` payload with the
-model/HLO cross-check ratios), which CI's bench-smoke job ratchets on.
+plus fused-vs-pre-fusion Pallas kernel row pairs for query *and* insert
+(the committed baseline pins fused >= pre-fusion for both), and autotune
+rows recording the block_keys sweep winner per op (query / insert /
+bulk_insert). Everything lands in ``BENCH_roofline.json`` (rows + a
+structured ``data`` payload with the model/HLO cross-check ratios — the
+graph-orientation bulk engine included), which CI's bench-smoke job
+ratchets on.
 """
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro import amq
-from repro.core.cuckoo_filter import CuckooConfig
+from repro.core.cuckoo_filter import CuckooConfig, CuckooState
 from repro.kernels import autotune, ops, roofline as RM
 from repro.launch import filter_roofline as FR
 
@@ -111,23 +114,45 @@ def run(fast: bool = False):
         records.append(_row(f"roofline_query_kernel_{label}", us, kbytes,
                             peak))
 
-    # -- autotune: the cached block_keys sweep (tentpole observability) -----
+    # -- Pallas insert kernels: fused SWAR free-slot scan vs pre-fusion -----
+    # The insert wrapper donates its state, so each timed call gets a fresh
+    # copy of the half-loaded table (copy cost identical for both rows).
+    ikeys = rand_keys(kn, seed=37)
+    itable = np.asarray(kstate.table)
+    icount = int(kstate.count)
+    ibytes = RM.min_batch_bytes(kcfg, "insert", kn, table_resident=True)
+
+    def _ins(fused):
+        st = CuckooState(jnp.asarray(itable), jnp.int32(icount))
+        return ops.cuckoo_insert_direct(kcfg, st, ikeys, fused=fused)
+
+    for fused, label in ((True, "fused"), (False, "prepr")):
+        us = bench(lambda f=fused: _ins(f))
+        records.append(_row(f"roofline_insert_kernel_{label}", us, ibytes,
+                            peak))
+
+    # -- autotune: the cached block_keys sweeps (tentpole observability) ----
     autotune.clear()
-    best = autotune.autotune(kcfg, "query", n=kn,
-                             candidates=(512, 1024) if fast
-                             else (256, 512, 1024, 2048),
-                             iters=2 if fast else 3)
-    emit("roofline_autotune_query", 0.0, f"block_keys={best}")
+    tuned = {}
+    for op in ("query", "insert", "bulk_insert"):
+        tuned[op] = autotune.autotune(kcfg, op, n=kn,
+                                      candidates=(512, 1024) if fast
+                                      else (256, 512, 1024, 2048),
+                                      iters=2 if fast else 3)
+        emit(f"roofline_autotune_{op}", 0.0, f"block_keys={tuned[op]}")
 
     # -- model vs lowered-HLO cross-check (launch/filter_roofline.py) -------
     xcfg = CuckooConfig(num_buckets=1 << 10, fp_bits=16)
     cross = {op: FR.cross_check(xcfg, op, n=1024)
-             for op in ("query", "insert", "apply_ops")}
+             for op in ("query", "insert", "apply_ops",
+                        "orient_bulk_insert")}
 
     emit_json(SUITE, {
         "n": n,
         "peak_copy_bytes_per_s": peak,
-        "autotuned_query_block_keys": int(best),
+        "autotuned_query_block_keys": int(tuned["query"]),
+        "autotuned_insert_block_keys": int(tuned["insert"]),
+        "autotuned_bulk_insert_block_keys": int(tuned["bulk_insert"]),
         "records": records,
         "hlo_cross_check": cross,
     })

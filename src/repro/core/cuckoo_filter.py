@@ -53,10 +53,19 @@ class CuckooState(NamedTuple):
 
 
 class InsertStats(NamedTuple):
-    """Per-key insertion statistics (feeds the Fig. 5/6 benchmarks)."""
+    """Per-key insertion statistics (feeds the Fig. 5/6 benchmarks).
+
+    ``failed``/``load`` are the loud failure report: callers that drop the
+    ``ok`` mask still get an explicit count of keys the engine could not
+    place (table effectively full — grow or rebuild) plus the post-batch
+    load factor that explains *why*. :meth:`CuckooFilter.insert` turns a
+    non-zero ``failed`` into a ``RuntimeWarning``.
+    """
 
     evictions: jnp.ndarray  # int32[n] eviction-chain length per key
     rounds: jnp.ndarray     # int32[]  rounds the batch loop ran
+    failed: jnp.ndarray     # int32[]  valid keys left unplaced (failures)
+    load: jnp.ndarray       # float32[] post-batch load factor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +85,21 @@ class CuckooConfig:
     max_evictions: int = 64
     max_rounds: Optional[int] = None
     seed: int = 0
+    # High-load insertion engine (DESIGN.md §14):
+    #   "auto"        — insert_bulk takes the graph-orientation bulk build;
+    #                   incremental insert takes the batched BFS frontier
+    #                   when eviction == "bfs", else the legacy round loop.
+    #   "legacy"      — the original lock-step eviction round loop.
+    #   "frontier"    — fixed-depth batched BFS frontier search.
+    #   "orientation" — graph-orientation bulk build (+ round-loop residue).
+    insert_engine: str = "auto"
+    frontier_depth: int = 2      # chain hops per frontier commit (>= 1)
+    # Max edge-flip sweeps before committing. Small on purpose: the
+    # two-phase commit gives every edge a second chance on its opposite
+    # bucket and the residue loop can truly evict, so a handful of sweeps
+    # already reaches zero failures at 0.95 load — extra sweeps only
+    # oscillate on contended buckets and cost wall-clock.
+    orient_sweeps: int = 4
 
     @property
     def layout(self) -> L.BucketLayout:
@@ -169,6 +193,25 @@ def _resolve_claims(addr1: jnp.ndarray, addr2: jnp.ndarray, invalid: int):
     return win_flat[0::2], win_flat[1::2]
 
 
+def _resolve_claims_multi(addrs: jnp.ndarray, invalid: int) -> jnp.ndarray:
+    """K-column generalisation of :func:`_resolve_claims`.
+
+    addrs: int32[n, K] flat word addresses (``invalid`` = no claim).
+    Returns win: bool[n, K]. Claims are interleaved so the flat priority of
+    key ``i``'s column ``k`` is ``i * K + k`` — the lowest pending key with
+    any action still wins *all* of its claims, preserving the round-loop
+    progress guarantee for multi-word transactions (frontier chains).
+    """
+    n, k = addrs.shape
+    flat = addrs.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    sa = flat[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+    win_sorted = first & (sa != invalid)
+    win = jnp.zeros((n * k,), bool).at[order].set(win_sorted)
+    return win.reshape(n, k)
+
+
 def _masked_write(table, addr, desired, mask, invalid):
     a = jnp.where(mask, addr, invalid)
     return table.at[a].set(desired, mode="drop")
@@ -208,23 +251,16 @@ def _batch_dedup(keys: jnp.ndarray, valid: jnp.ndarray):
 _DIRECT, _EVICT, _RELOC = 0, 1, 2
 
 
-def insert(
+def _insert_rounds(
     config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
     valid: Optional[jnp.ndarray] = None,
     *, dedup_within_batch: bool = False,
 ) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
-    """Insert a batch of keys. Returns (state', ok[n], stats).
+    """The legacy lock-step eviction round loop (Alg. 1 + §4.6.1 BFS).
 
-    ``ok[i]`` False means the table was too full for key i (paper Alg. 1
-    "Failure — caller will have to rebuild"). ``valid`` masks padding keys
-    (used by the sharded filter's fixed-capacity routing).
-
-    Duplicate semantics: by default the filter is a *multiset* — two equal
-    keys in one batch insert two copies (each needs its own ``delete``),
-    exactly like two sequential single-key inserts. With
-    ``dedup_within_batch=True`` (a static flag) only the first occurrence of
-    each 64-bit key value is inserted; later copies report the first copy's
-    ``ok`` (idempotent set semantics within the batch). See DESIGN.md §4.
+    Kept reachable via ``insert_engine="legacy"`` — it is the oracle the
+    new engines are differentially tested against, and the benchmark
+    baseline the frontier/orientation rows are compared with.
     """
     lay = config.layout
     pol = config.placement
@@ -437,7 +473,459 @@ def insert(
     ok = success & ~pending
     if dedup_within_batch:
         ok = jnp.where(first, ok, ok[rep] & valid0)
-    return CuckooState(table, count), ok, InsertStats(n_evict, rnd)
+    failed = jnp.sum(valid0 & ~ok, dtype=jnp.int32)
+    load = count.astype(jnp.float32) / lay.num_slots
+    return CuckooState(table, count), ok, InsertStats(n_evict, rnd, failed,
+                                                      load)
+
+
+# ---------------------------------------------------------------------------
+# Batched BFS frontier insertion (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+def _insert_frontier(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+    *, dedup_within_batch: bool = False,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Fixed-depth, width-``bucket_size`` frontier search per round.
+
+    Where the legacy loop advances one eviction hop per *global* round (the
+    whole batch waits on the longest chain), a frontier round resolves an
+    entire chain in one multi-word transaction: a stuck key picks a root
+    bucket, treats each of its ``b`` occupied slots as a branch, expands
+    the branch set one gather per depth level (all slots of every frontier
+    bucket inspected at once), and commits the shortest free path found —
+    up to ``frontier_depth + 1`` word writes, won all-or-nothing through
+    the claim election. Chains therefore cost O(depth) data-parallel steps
+    instead of O(chain length) rounds.
+
+    A key whose shortest eviction chain exceeds ``frontier_depth`` can
+    never commit here no matter how many salted retries it gets, so the
+    round loop exits once a few consecutive rounds make no progress and
+    the stragglers spill to the legacy round loop, which walks chains up
+    to ``max_evictions`` — the frontier engine keeps the oracle's
+    placement guarantees without paying its per-hop global rounds on the
+    fast path.
+    """
+    lay = config.layout
+    pol = config.placement
+    n = keys.shape[0]
+    invalid = lay.num_words
+    b = config.bucket_size
+    wpb = lay.words_per_bucket
+    depth = max(1, config.frontier_depth)
+    K = depth + 1  # claim columns: root write + one per chain hop
+    max_rounds = config.max_rounds or (4 * config.max_evictions + 64)
+
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((n,), bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones((n,), bool))
+
+    def gather_words(table, bucket):
+        return L.gather_bucket_words(table, bucket, lay)
+
+    def round_fn(carry):
+        table, count, pending, success, n_evict, rnd, stall = carry
+
+        # --- direct phase: identical to the legacy scan of (i1, i2).
+        words1 = gather_words(table, i1)                       # [n, wpb]
+        words2 = gather_words(table, i2)
+        tags_1 = L.unpack_words(words1, lay.fp_bits)           # [n, b]
+        tags_2 = L.unpack_words(words2, lay.fp_bits)
+
+        start = L.scan_start(base_tag, lay)
+        found1, slot1 = L.first_true_circular(tags_1 == 0, start)
+        found2, slot2 = L.first_true_circular(tags_2 == 0, start)
+        direct_found = found1 | found2
+
+        d_bucket = jnp.where(found1, i1, i2)
+        d_slot = jnp.where(found1, slot1, slot2)
+        d_tag = jnp.where(found1, tag1, tag2)
+        d_widx, d_sw = L.slot_to_word(d_slot, lay)
+        d_words = jnp.where(found1[:, None], words1, words2)
+        d_word = jnp.take_along_axis(d_words, d_widx[:, None], axis=1)[:, 0]
+        d_desired = L.replace_tag(d_word, d_sw, d_tag, lay.fp_bits)
+        d_addr = L.word_addr(d_bucket, d_widx, lay)
+
+        is_direct = pending & direct_found
+        needs_chain = pending & ~direct_found
+
+        def frontier_actions(_):
+            # Both candidate buckets are full for every chaining key, so the
+            # root (picked by a salted coin) is a full bucket: each of its b
+            # occupied slots seeds one branch of the frontier.
+            coin = (_prng(base_tag, rnd) & _U32(1)).astype(bool)
+            e_bucket = jnp.where(coin, i2, i1)
+            e_tag = jnp.where(coin, tag2, tag1)
+            e_words = jnp.where(coin[:, None], words2, words1)
+            e_tags = jnp.where(coin[:, None], tags_2, tags_1)
+
+            branch = jnp.broadcast_to(
+                jnp.arange(b, dtype=jnp.int32), (n, b))
+            # Lanes the chain displaces so far — the cycle guard kills any
+            # branch whose next victim revisits one (a revisit would make
+            # two writes race on one lane and silently drop a resident tag).
+            pos_b = [jnp.broadcast_to(
+                e_bucket.astype(jnp.int32)[:, None], (n, b))]
+            pos_s = [branch]
+            move = pol.on_relocate(e_tags)          # tag entering level 1
+            nxt = pol.alt_bucket(e_bucket[:, None], e_tags)        # [n, b]
+            alive = jnp.ones((n, b), bool)
+            lv_bucket, lv_words, lv_found, lv_slot, lv_move, lv_vic = (
+                [], [], [], [], [], [])
+            for d in range(1, depth + 1):
+                wds = gather_words(table, nxt)                 # [n, b, wpb]
+                tgs = L.unpack_words(wds, lay.fp_bits)         # [n, b, b]
+                fnd, fslot = L.first_true_circular(
+                    tgs == 0, L.scan_start(move, lay))
+                fnd = fnd & alive
+                lv_bucket.append(nxt)
+                lv_words.append(wds)
+                lv_found.append(fnd)
+                lv_slot.append(fslot)
+                lv_move.append(move)
+                if d < depth:
+                    vic = (_prng(move ^ nxt.astype(jnp.uint32), rnd + d)
+                           % _U32(b)).astype(jnp.int32)        # [n, b]
+                    clash = jnp.zeros((n, b), bool)
+                    for pb, ps in zip(pos_b, pos_s):
+                        clash = clash | ((pb == nxt.astype(jnp.int32))
+                                         & (ps == vic))
+                    alive = alive & ~clash
+                    pos_b.append(nxt.astype(jnp.int32))
+                    pos_s.append(vic)
+                    lv_vic.append(vic)
+                    vtag = jnp.take_along_axis(
+                        tgs, vic[:, :, None], axis=2)[:, :, 0]
+                    move = pol.on_relocate(vtag)
+                    nxt = pol.alt_bucket(nxt, vtag)
+
+            # Shortest free path: first level with any live branch found.
+            taken = jnp.zeros((n,), bool)
+            use_lv = []
+            for fnd in lv_found:
+                fa = jnp.any(fnd, axis=1)
+                use_lv.append(fa & ~taken)
+                taken = taken | fa
+            has_chain = needs_chain & taken
+            jstar = jnp.zeros((n,), jnp.int32)
+            depth_star = jnp.zeros((n,), jnp.int32)
+            for d in reversed(range(depth)):
+                jd = jnp.argmax(lv_found[d], axis=1).astype(jnp.int32)
+                jstar = jnp.where(use_lv[d], jd, jstar)
+                depth_star = jnp.where(use_lv[d], d + 1, depth_star)
+            depth_star = jnp.where(has_chain, depth_star, 0)
+
+            take1 = lambda a, j: jnp.take_along_axis(
+                a, j[:, None], axis=1)[:, 0]
+            take2 = lambda a, j: jnp.take_along_axis(
+                a, j[:, None, None], axis=1)[:, 0]
+
+            # Column 0: the root slot receives the key's own tag.
+            r_widx, r_sw = L.slot_to_word(jstar, lay)
+            r_word = jnp.take_along_axis(
+                e_words, r_widx[:, None], axis=1)[:, 0]
+            r_addr = L.word_addr(e_bucket, r_widx, lay)
+            addrs = [jnp.where(has_chain, r_addr, invalid)]
+            sws, wtags, cwords = [r_sw], [e_tag], [r_word]
+
+            # Columns 1..depth: hop t shifts the displaced tag one level
+            # deeper; the final hop lands it in the free slot found there.
+            for t in range(1, depth + 1):
+                lvl = t - 1
+                bkt = take1(lv_bucket[lvl], jstar)
+                wds = take2(lv_words[lvl], jstar)              # [n, wpb]
+                mv = take1(lv_move[lvl], jstar)
+                lane_free = take1(lv_slot[lvl], jstar)
+                lane_vic = (take1(lv_vic[lvl], jstar) if t < depth
+                            else jnp.zeros((n,), jnp.int32))
+                lane = jnp.where(depth_star == t, lane_free, lane_vic)
+                used = has_chain & (depth_star >= t)
+                widx, sw = L.slot_to_word(lane, lay)
+                word = jnp.take_along_axis(wds, widx[:, None], axis=1)[:, 0]
+                addr = L.word_addr(bkt, widx, lay)
+                addrs.append(jnp.where(used, addr, invalid))
+                sws.append(sw)
+                wtags.append(mv)
+                cwords.append(word)
+
+            A = jnp.stack(addrs, axis=1)                       # [n, K]
+            # Same-word composition: every write of the chain that targets
+            # this address folds into one desired word (all lanes distinct
+            # by the cycle guard, so the fold order is immaterial).
+            desired = []
+            for k in range(K):
+                w = cwords[k]
+                for j in range(K):
+                    hit = (A[:, j] == A[:, k]) & (A[:, j] != invalid)
+                    w = jnp.where(
+                        hit, L.replace_tag(w, sws[j], wtags[j], lay.fp_bits),
+                        w)
+                desired.append(w)
+            # Only the last claim per duplicated address scatters (it holds
+            # the fully-composed word); earlier duplicates drop out.
+            scat = []
+            for k in range(K):
+                superseded = jnp.zeros((n,), bool)
+                for j in range(k + 1, K):
+                    superseded = superseded | (A[:, j] == A[:, k])
+                scat.append(jnp.where(superseded, invalid, A[:, k]))
+            return (has_chain, jnp.stack(scat, axis=1),
+                    jnp.stack(desired, axis=1), depth_star)
+
+        def no_chain(_):
+            return (jnp.zeros((n,), bool),
+                    jnp.full((n, K), invalid, jnp.int32),
+                    jnp.zeros((n, K), jnp.uint32),
+                    jnp.zeros((n,), jnp.int32))
+
+        has_chain, c_addrs, c_desired, depth_star = jax.lax.cond(
+            jnp.any(needs_chain), frontier_actions, no_chain, None)
+
+        # --- one claim matrix for the whole batch: direct keys use column
+        #     0 alone; chain keys use their (deduped) chain columns.
+        addr0 = jnp.where(is_direct, d_addr, c_addrs[:, 0])
+        des0 = jnp.where(is_direct, d_desired, c_desired[:, 0])
+        all_addrs = jnp.concatenate([addr0[:, None], c_addrs[:, 1:]], axis=1)
+        all_des = jnp.concatenate([des0[:, None], c_desired[:, 1:]], axis=1)
+        all_addrs = jnp.where(pending[:, None], all_addrs, invalid)
+
+        win = _resolve_claims_multi(all_addrs, invalid)
+        valid_claim = all_addrs != invalid
+        has_action = is_direct | (pending & has_chain)
+        commit = has_action & jnp.all(win | ~valid_claim, axis=1)
+
+        for k in range(K):
+            table = _masked_write(table, all_addrs[:, k], all_des[:, k],
+                                  commit & valid_claim[:, k], invalid)
+
+        success = success | commit
+        count = count + jnp.sum(commit, dtype=jnp.int32)
+        pending = pending & ~commit
+        n_evict = n_evict + jnp.where(commit, depth_star, 0)
+        stall = jnp.where(jnp.any(commit), jnp.int32(0), stall + 1)
+        return table, count, pending, success, n_evict, rnd + 1, stall
+
+    # Consecutive no-commit rounds before giving up on the frontier: each
+    # round re-salts the coin and the victim lanes, so a handful of
+    # retries resolves transient claim contention — anything still stuck
+    # after that is depth-limited and belongs to the residue loop.
+    stall_limit = jnp.int32(8)
+
+    def cond_fn(carry):
+        return (jnp.any(carry[2]) & (carry[5] < max_rounds)
+                & (carry[6] < stall_limit))
+
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    valid0 = pending0
+    if dedup_within_batch:
+        first, rep = _batch_dedup(keys, valid0)
+        pending0 = pending0 & first
+    carry0 = (state.table, state.count, pending0,
+              jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32),
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    table, count, pending, success, n_evict, rnd, _ = jax.lax.while_loop(
+        cond_fn, round_fn, carry0)
+
+    # Residue: chains longer than ``depth`` (or claim-starved stragglers)
+    # take the legacy eviction loop — a no-op when nothing is pending.
+    state2, ok_res, res_stats = _insert_rounds(
+        config, CuckooState(table, count), keys, valid=pending)
+
+    ok = (success & ~pending) | ok_res
+    if dedup_within_batch:
+        ok = jnp.where(first, ok, ok[rep] & valid0)
+    failed = jnp.sum(valid0 & ~ok, dtype=jnp.int32)
+    load = state2.count.astype(jnp.float32) / lay.num_slots
+    stats = InsertStats(n_evict + res_stats.evictions,
+                        rnd + res_stats.rounds, failed, load)
+    return state2, ok, stats
+
+
+# ---------------------------------------------------------------------------
+# Graph-orientation bulk build (DESIGN.md §14; SNIPPETS.md Snippet 1).
+# ---------------------------------------------------------------------------
+
+def _insert_orient(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+    *, dedup_within_batch: bool = False,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Orient the batch's bucket-graph edges, then commit conflict-free.
+
+    Each key is a directed edge ``i1 -> i2`` of the bucket graph; its
+    orientation picks the bucket it will occupy. Sweeps flip edges incident
+    to over-full vertices (vectorized scatter-add indegree against each
+    bucket's *actual* free capacity, masked flip selection preferring edges
+    whose other endpoint has headroom) until every indegree fits, then a
+    single sorted pass commits every tag conflict-free — no eviction loop.
+    Existing table entries never move during orientation, so keys that
+    would require a true eviction (both candidate buckets already full)
+    are excluded from the sweep up front and spill to the round-loop
+    residue pass, which can evict. The sweep exits early at feasibility
+    *or* at a fixed point (no productive flips left) — both are salt-
+    independent, so contended regimes don't burn the full sweep budget.
+    """
+    lay = config.layout
+    pol = config.placement
+    n = keys.shape[0]
+    b = config.bucket_size
+    nb = config.num_buckets
+    sweeps = max(1, config.orient_sweeps)
+
+    pending = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    valid0 = pending
+    if dedup_within_batch:
+        first, rep = _batch_dedup(keys, valid0)
+        pending = pending & first
+
+    base_tag, i1, i2 = prepare_keys(config, keys)
+    i1s = i1.astype(jnp.int32)
+    i2s = i2.astype(jnp.int32)
+    aliased = i1s == i2s  # XOR degenerate: both endpoints coincide
+
+    tags_flat = L.unpack_words(state.table, lay.fp_bits)     # per-slot view
+    occ = jnp.sum(tags_flat.reshape(nb, b) != 0, axis=1, dtype=jnp.int32)
+    free = jnp.int32(b) - occ                                # [nb]
+
+    # Edges whose candidate buckets are both already full can never be
+    # placed by orientation (existing entries never move); dropping them
+    # from the sweep keeps the feasibility exit reachable — they go
+    # straight to the residue pass. Active edges start pointing at an
+    # endpoint that actually has headroom.
+    active = pending & ((free[i1s] > 0) | (free[i2s] > 0))
+    orient0 = active & (free[i1s] == 0) & ~aliased
+
+    def sweep_body(carry):
+        orient, _, s = carry
+        dest = jnp.where(orient, i2s, i1s)
+        other = jnp.where(orient, i1s, i2s)
+        dkey = jnp.where(active, dest, nb)
+        indeg = jnp.zeros((nb + 1,), jnp.int32).at[dkey].add(1)[:nb]
+        done = ~jnp.any(indeg > free)
+
+        # Flip priority within an over-full bucket: edges whose other
+        # endpoint still has headroom net of its own inflow move first
+        # (spare, bit 31), then edges whose other endpoint is at least
+        # non-full (flippable, bit 30); ties break pseudo-randomly (salted
+        # per sweep so repeated sweeps explore new orientations).
+        flippable = free[other] > 0
+        spare = (free[other] - indeg[other]) > 0
+        r = _prng(base_tag, s) >> _U32(2)
+        score = (r
+                 | jnp.where(spare, _U32(0x80000000), _U32(0))
+                 | jnp.where(flippable, _U32(0x40000000), _U32(0)))
+
+        sort_key = jnp.where(active, dest, nb)
+        order = jnp.lexsort((score, sort_key))
+        sd = sort_key[order]
+        rank = L.segment_ranks(sd)
+        cap = free[jnp.minimum(sd, nb - 1)]
+        flip_s = (rank >= cap) & (sd < nb)
+        flip = jnp.zeros((n,), bool).at[order].set(flip_s)
+        # A flip into a full bucket is pointless; masking it makes "no
+        # flips happened" salt-independent (flippable edges always outrank
+        # non-flippable ones), i.e. a true fixed point — the second exit.
+        flip = flip & ~aliased & flippable
+        return orient ^ flip, done | ~jnp.any(flip), s + 1
+
+    def sweep_cond(carry):
+        return (~carry[1]) & (carry[2] < sweeps)
+
+    orient, _, _ = jax.lax.while_loop(
+        sweep_cond, sweep_body,
+        (orient0, jnp.zeros((), bool), jnp.zeros((), jnp.int32)))
+
+    # Conflict-free commit of the oriented edges, then a second chance on
+    # the opposite bucket for the few keys an unconverged sweep left over.
+    dest = jnp.where(orient, i2s, i1s)
+    stored = pol.place_tag(base_tag, orient)
+    tags_flat, placed1 = _bulk_place_phase(
+        config, tags_flat, dest, stored, pending)
+    pending = pending & ~placed1
+    dest2 = jnp.where(orient, i1s, i2s)
+    stored2 = pol.place_tag(base_tag, ~orient)
+    tags_flat, placed2 = _bulk_place_phase(
+        config, tags_flat, dest2, stored2, pending)
+    pending = pending & ~placed2
+
+    table = L.pack_tags(tags_flat, lay.fp_bits)
+    placed = placed1 | placed2
+    count = state.count + jnp.sum(placed, dtype=jnp.int32)
+
+    # Residue: both candidate buckets genuinely full — these keys need a
+    # real eviction, which orientation (by construction) never performs.
+    # The round loop handles them regardless of the eviction policy: its
+    # per-round claim pass is much cheaper at full batch width than the
+    # frontier's gather tree, and the residue is a small tail.
+    state2, ok_res, res_stats = _insert_rounds(
+        config, CuckooState(table, count), keys, valid=pending)
+
+    ok = placed | ok_res
+    if dedup_within_batch:
+        ok = jnp.where(first, ok, ok[rep] & valid0)
+    failed = jnp.sum(valid0 & ~ok, dtype=jnp.int32)
+    load = state2.count.astype(jnp.float32) / lay.num_slots
+    stats = InsertStats(res_stats.evictions, res_stats.rounds + 2, failed,
+                        load)
+    return state2, ok, stats
+
+
+# ---------------------------------------------------------------------------
+# Engine routing.
+# ---------------------------------------------------------------------------
+
+INSERT_ENGINES = ("auto", "legacy", "frontier", "orientation")
+
+
+def resolve_engine(config: CuckooConfig, bulk: bool) -> str:
+    """The concrete engine a (config, entry point) pair routes to."""
+    eng = config.insert_engine
+    if eng not in INSERT_ENGINES:
+        raise ValueError(f"unknown insert_engine {eng!r} "
+                         f"(want one of {INSERT_ENGINES})")
+    if eng == "auto":
+        if bulk:
+            return "orientation"
+        return "frontier" if config.eviction == "bfs" else "legacy"
+    return eng
+
+
+_ENGINE_FNS = {"legacy": _insert_rounds, "frontier": _insert_frontier,
+               "orientation": _insert_orient}
+
+
+def insert(
+    config: CuckooConfig, state: CuckooState, keys: jnp.ndarray,
+    valid: Optional[jnp.ndarray] = None,
+    *, dedup_within_batch: bool = False,
+) -> Tuple[CuckooState, jnp.ndarray, InsertStats]:
+    """Insert a batch of keys. Returns (state', ok[n], stats).
+
+    ``ok[i]`` False means the table was too full for key i (paper Alg. 1
+    "Failure — caller will have to rebuild"). The same information is
+    surfaced loudly in ``stats.failed`` (count of unplaced valid keys) and
+    ``stats.load`` (post-batch load factor) — the round loop gives up after
+    ``max_rounds`` (default ``4 * max_evictions + 64``) rounds, which near
+    ~0.98 load silently turned into failures callers could ignore by
+    dropping the ``ok`` mask. ``valid`` masks padding keys (used by the
+    sharded filter's fixed-capacity routing).
+
+    Engine routing (``config.insert_engine``, DESIGN.md §14): ``"auto"``
+    runs the batched BFS frontier when ``eviction == "bfs"`` and the legacy
+    round loop otherwise; the other values force one engine.
+
+    Duplicate semantics: by default the filter is a *multiset* — two equal
+    keys in one batch insert two copies (each needs its own ``delete``),
+    exactly like two sequential single-key inserts. With
+    ``dedup_within_batch=True`` (a static flag) only the first occurrence of
+    each 64-bit key value is inserted; later copies report the first copy's
+    ``ok`` (idempotent set semantics within the batch). See DESIGN.md §4.
+    """
+    fn = _ENGINE_FNS[resolve_engine(config, bulk=False)]
+    return fn(config, state, keys, valid,
+              dedup_within_batch=dedup_within_batch)
 
 
 # ---------------------------------------------------------------------------
@@ -507,7 +995,18 @@ def insert_bulk(
 
     ``stats.rounds`` counts the two bulk phases plus the residue loop's
     rounds, so it is directly comparable with :func:`insert`'s round count.
+
+    Engine routing (``config.insert_engine``, DESIGN.md §14): ``"auto"``
+    and ``"orientation"`` take the graph-orientation bulk build —
+    :func:`_insert_orient` replaces the eviction loop entirely for this
+    entry point; ``"legacy"``/``"frontier"`` keep the two sorted phases
+    here and spill the residue through that engine's round loop.
     """
+    eng = resolve_engine(config, bulk=True)
+    if eng == "orientation":
+        return _insert_orient(config, state, keys, valid,
+                              dedup_within_batch=dedup_within_batch)
+    residue_fn = _ENGINE_FNS[eng]
     lay = config.layout
     pol = config.placement
     n = keys.shape[0]
@@ -537,13 +1036,16 @@ def insert_bulk(
 
     # Residue: both candidate buckets full — hand the stragglers to the
     # eviction-capable round loop against the bulk-updated table.
-    state2, ok_res, res_stats = insert(
+    state2, ok_res, res_stats = residue_fn(
         config, CuckooState(table, count), keys, valid=pending)
 
     ok = placed | ok_res
     if dedup_within_batch:
         ok = jnp.where(first, ok, ok[rep] & valid0)
-    stats = InsertStats(res_stats.evictions, res_stats.rounds + 2)
+    failed = jnp.sum(valid0 & ~ok, dtype=jnp.int32)
+    load = state2.count.astype(jnp.float32) / lay.num_slots
+    stats = InsertStats(res_stats.evictions, res_stats.rounds + 2, failed,
+                        load)
     return state2, ok, stats
 
 
@@ -695,7 +1197,9 @@ def apply_ops(
     n = keys.shape[0]
     if n == 0:  # static: the segmented scans assume at least one slot
         return state, jnp.zeros((0,), bool), InsertStats(
-            jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32))
+            jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            state.count.astype(jnp.float32) / config.num_slots)
     v = (jnp.ones((n,), bool) if valid is None else valid.astype(bool))
     ops = ops.astype(jnp.int32)
     is_ins = v & (ops == OP_INSERT)
@@ -807,7 +1311,9 @@ def apply_ops(
                   jnp.where(is_del,
                             d_ok_prov & jnp.where(net_del, del_ok, True),
                             False)))
-    return state, ok, InsertStats(evictions, rounds)
+    failed = jnp.sum(net_ins & ~ins_ok, dtype=jnp.int32)
+    load = state.count.astype(jnp.float32) / config.num_slots
+    return state, ok, InsertStats(evictions, rounds, failed, load)
 
 
 # ---------------------------------------------------------------------------
@@ -840,11 +1346,29 @@ class CuckooFilter:
     def insert(self, keys, *, bulk: bool = False,
                dedup_within_batch: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, InsertStats]:
-        """Insert a batch; ``bulk=True`` takes the bucket-sorted fast path."""
+        """Insert a batch; ``bulk=True`` takes the bucket-sorted fast path.
+
+        A batch the engine could not fully place raises a loud
+        ``RuntimeWarning`` carrying the failure count and the load factor
+        (``stats.failed`` / ``stats.load``) — the round loop's
+        ``max_rounds`` budget (default ``4 * max_evictions + 64``) means
+        near-full tables fail keys rather than spin, and that must never
+        pass silently just because the caller dropped the ``ok`` mask.
+        """
+        import warnings
+
         dd = (self._default_dedup if dedup_within_batch is None
               else dedup_within_batch)
         fn = self._op(insert_bulk if bulk else insert, dedup_within_batch=dd)
         self.state, ok, stats = fn(self.state, normalize_keys(keys))
+        failed = int(stats.failed)
+        if failed:
+            warnings.warn(
+                f"cuckoo insert left {failed} of {ok.shape[0]} keys "
+                f"unplaced at load factor {float(stats.load):.3f} — the "
+                f"filter is effectively full; grow it "
+                f"(CuckooConfig.for_capacity) or rebuild",
+                RuntimeWarning, stacklevel=2)
         return ok, stats
 
     def insert_bulk(self, keys) -> Tuple[jnp.ndarray, InsertStats]:

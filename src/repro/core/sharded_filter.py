@@ -164,19 +164,24 @@ class ShardedCuckooConfig:
         ``capacity_factor``) fixed, so all levels of a cascade share one
         all-to-all routing pattern. ``fp_bits`` optionally tightens the
         level's fingerprints to meet a smaller FPR share (DESIGN.md §8).
+
+        Every per-partition field other than the sizing ones is carried
+        over verbatim via ``dataclasses.replace`` — a grown level keeps the
+        parent's eviction policy, insert-engine routing, frontier depth,
+        etc. without this method having to enumerate (and silently drop)
+        new ``CuckooConfig`` knobs.
         """
+        sized = CuckooConfig.for_capacity(
+            int(np.ceil(self.shard.num_slots * factor)),
+            load_factor=1.0,  # num_slots is already post-load sizing
+            fp_bits=self.shard.fp_bits if fp_bits is None else fp_bits,
+            bucket_size=self.shard.bucket_size,
+            policy=self.shard.policy)
+        grown_shard = dataclasses.replace(
+            self.shard, num_buckets=sized.num_buckets,
+            fp_bits=sized.fp_bits)
         return ShardedCuckooConfig(
-            CuckooConfig.for_capacity(
-                int(np.ceil(self.shard.num_slots * factor)),
-                load_factor=1.0,  # num_slots is already post-load sizing
-                fp_bits=self.shard.fp_bits if fp_bits is None else fp_bits,
-                bucket_size=self.shard.bucket_size,
-                policy=self.shard.policy,
-                hash_kind=self.shard.hash_kind,
-                eviction=self.shard.eviction,
-                max_evictions=self.shard.max_evictions,
-                max_rounds=self.shard.max_rounds,
-                seed=self.shard.seed),
+            grown_shard,
             self.num_shards, self.axis_name, self.capacity_factor,
             self.num_partitions)
 

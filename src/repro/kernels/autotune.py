@@ -136,10 +136,15 @@ def autotune(config, op: str, *, n: int = 4096,
     keys = jnp.asarray(rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32))
     opcodes = jnp.asarray(rng.integers(0, 3, size=(n,), dtype=np.int32))
     state0 = config.init()
-    if op == "query":
-        # Query against a half-loaded table so matches actually occur.
+    if op in ("query", "insert", "bulk_insert", "apply_ops"):
+        # Sweep against a half-loaded table: query needs matches to occur,
+        # and the mutating kernels' free-slot scan lengths (so the tile
+        # optimum) depend on occupancy — an empty-table sweep would tune
+        # for a regime the serving paths never run in.
+        fill = jnp.asarray(
+            rng.integers(0, 2**32, size=(n // 2, 2), dtype=np.uint32))
         state0, _ = ops.cuckoo_insert_bulk(
-            config, state0, keys[: n // 2],
+            config, state0, fill,
             block_keys=DEFAULT_BLOCK_KEYS["bulk_insert"])
     table0 = jnp.array(state0.table)     # donation-proof master copy
     count0 = jnp.array(state0.count)

@@ -122,6 +122,105 @@ def cuckoo_insert_pallas(config: CuckooConfig, table: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Fused-SWAR variant (joins the fused kernel family, DESIGN.md §13/§14).
+# ---------------------------------------------------------------------------
+
+def _insert_fused_kernel(config: CuckooConfig, block_keys: int,
+                         table_in_ref, keys_lo_ref, keys_hi_ref, valid_ref,
+                         table_out_ref, ok_ref):
+    """Fused hash + double-bucket load + SWAR free-slot scan.
+
+    Versus ``_insert_kernel``: both candidate buckets are read as one
+    ``2 * words_per_bucket`` packed row and the free-lane search runs the
+    §4.3 SWAR zero-mask directly on the packed words — no per-bucket
+    unpack-to-lanes pass — then a single circular-preference scan (bucket
+    i1's slots from the fingerprint-derived start, then i2's) picks the
+    slot, exactly the order the unfused kernel and the core scan use.
+    """
+    lay = config.layout
+    pol = config.placement
+    wpb = lay.words_per_bucket
+    b = config.bucket_size
+
+    keys = jnp.stack([keys_lo_ref[...], keys_hi_ref[...]], axis=-1)
+    hi, lo = hash_key(keys, config.hash_kind, config.seed)
+    base_tag = pol.make_tag(hi)
+    i1, i2 = pol.initial_buckets(lo, base_tag)
+    tag1 = pol.place_tag(base_tag, jnp.zeros((block_keys,), bool))
+    tag2 = pol.place_tag(base_tag, jnp.ones((block_keys,), bool))
+    start = L.scan_start(base_tag, lay)
+    slots = jnp.arange(b, dtype=jnp.int32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        table_out_ref[...] = table_in_ref[...]
+
+    def body(i, _):
+        base1 = i1[i].astype(jnp.int32) * wpb
+        base2 = i2[i].astype(jnp.int32) * wpb
+        words = jnp.concatenate([table_out_ref[pl.ds(base1, wpb)],
+                                 table_out_ref[pl.ds(base2, wpb)]])
+        free = L.swar_mask_to_bools(
+            L.swar_zero_mask(words, lay.fp_bits), lay.fp_bits).reshape(2 * b)
+        # Circular preference order: i1's slots from start[i], then i2's.
+        rot = (start[i] + slots) % b
+        positions = jnp.concatenate([rot, b + rot])
+        cand = free[positions]
+        found = jnp.any(cand) & (valid_ref[i] != 0)
+        abs_slot = positions[jnp.argmax(cand)]
+        in_b2 = abs_slot >= b
+        slot = abs_slot - jnp.where(in_b2, b, 0)
+        widx, sw = L.slot_to_word(slot, lay)
+        word = words[jnp.where(in_b2, wpb, 0) + widx]
+        desired = L.replace_tag(
+            word, sw, jnp.where(in_b2, tag2[i], tag1[i]), lay.fp_bits)
+        addr = jnp.where(in_b2, base2, base1) + widx
+        current = table_out_ref[pl.ds(addr, 1)]
+        table_out_ref[pl.ds(addr, 1)] = jnp.where(found, desired[None],
+                                                  current)
+        ok_ref[pl.ds(i, 1)] = found.astype(jnp.uint32)[None]
+        return 0
+
+    jax.lax.fori_loop(0, block_keys, body, 0)
+
+
+def cuckoo_insert_fused_pallas(config: CuckooConfig, table: jnp.ndarray,
+                               keys_lo: jnp.ndarray, keys_hi: jnp.ndarray,
+                               valid: jnp.ndarray | None = None,
+                               *, block_keys: int = 256,
+                               interpret: bool = True):
+    """Fused-SWAR variant of :func:`cuckoo_insert_pallas` — same contract,
+    bit-identical results (the roofline suite measures both)."""
+    n = keys_lo.shape[0]
+    assert n % block_keys == 0, (n, block_keys)
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint32)
+    grid = (n // block_keys,)
+    kernel = functools.partial(_insert_fused_kernel, config, block_keys)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+        name="cuckoo_insert_fused",
+    )(table, keys_lo, keys_hi, valid)
+
+
+# ---------------------------------------------------------------------------
 # Bucket-major tile variant (bulk-build fast path, DESIGN.md §6).
 # ---------------------------------------------------------------------------
 

@@ -22,7 +22,11 @@ from ..core.cuckoo_filter import CuckooConfig, CuckooState, prepare_keys
 from ..filters.blocked_bloom import BloomConfig, BloomState
 from . import autotune
 from .bloom import bloom_insert_pallas, bloom_query_pallas
-from .cuckoo_insert import cuckoo_insert_bulk_pallas, cuckoo_insert_pallas
+from .cuckoo_insert import (
+    cuckoo_insert_bulk_pallas,
+    cuckoo_insert_fused_pallas,
+    cuckoo_insert_pallas,
+)
 from .cuckoo_mixed import cuckoo_mixed_pallas
 from .cuckoo_query import cuckoo_query_fused_pallas, cuckoo_query_pallas
 from .hash64 import hash64_pallas
@@ -67,30 +71,36 @@ def cuckoo_query(config: CuckooConfig, state: CuckooState,
     return _cuckoo_query_jit(config, state, keys, block_keys, fused)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(1,))
 def _cuckoo_insert_direct_jit(config: CuckooConfig, state: CuckooState,
-                              keys: jnp.ndarray, block_keys: int):
+                              keys: jnp.ndarray, block_keys: int,
+                              fused: bool):
     n0 = keys.shape[0]
     keys, n = _pad_to(keys, block_keys, fill=0)
     valid = (jnp.arange(keys.shape[0]) < n0).astype(jnp.uint32)
-    table, ok = cuckoo_insert_pallas(config, state.table,
-                                     keys[:, 0], keys[:, 1], valid,
-                                     block_keys=block_keys,
-                                     interpret=not _on_tpu())
+    kern = cuckoo_insert_fused_pallas if fused else cuckoo_insert_pallas
+    table, ok = kern(config, state.table,
+                     keys[:, 0], keys[:, 1], valid,
+                     block_keys=block_keys,
+                     interpret=not _on_tpu())
     count = state.count + jnp.sum(ok[:n], dtype=jnp.int32)
     return CuckooState(table, count), ok[:n].astype(bool)
 
 
 def cuckoo_insert_direct(config: CuckooConfig, state: CuckooState,
-                         keys: jnp.ndarray, block_keys: int = None):
+                         keys: jnp.ndarray, block_keys: int = None,
+                         fused: bool = True):
     """Kernel-backed direct insert (no eviction). -> (state', ok bool[n]).
 
+    ``fused=True`` (default) runs the single-row SWAR free-slot kernel;
+    ``fused=False`` keeps the unpack-based variant measurable (the
+    roofline suite's pre-fusion comparison row). Both are bit-identical.
     Failed keys (ok==False) should be retried through the eviction-capable
     core.cuckoo_filter.insert.
     """
     if block_keys is None:
         block_keys = autotune.resolve_block_keys(config, "insert")
-    return _cuckoo_insert_direct_jit(config, state, keys, block_keys)
+    return _cuckoo_insert_direct_jit(config, state, keys, block_keys, fused)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))

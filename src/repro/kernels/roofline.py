@@ -40,8 +40,11 @@ KEY_BYTES = 8
 # core paths return bool[n] but XLA materializes predicates word-wide too).
 RESULT_BYTES = 4
 
-# Op names accepted by the per-backend models.
-OPS = ("query", "insert", "bulk_insert", "delete", "apply_ops")
+# Op names accepted by the per-backend models. ``orient_bulk_insert`` is
+# cuckoo-only (the graph-orientation bulk engine, DESIGN.md §14); the other
+# backends reject it like any unknown op.
+OPS = ("query", "insert", "bulk_insert", "orient_bulk_insert", "delete",
+       "apply_ops")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +127,15 @@ def cuckoo_op_traffic(config, op: str, *,
         table_read = bucket_bytes / seg + bucket_bytes
         table_write = bucket_bytes / seg + 4.0
         return OpTraffic(KEY_BYTES, RESULT_BYTES, table_read, table_write)
+    if op == "orient_bulk_insert":
+        # Graph-orientation bulk build (DESIGN.md §14): the batch is edges
+        # of the bucket graph; orientation sweeps touch O(batch) per-edge
+        # state, and the commit streams the *whole* table exactly once —
+        # one load + one store amortized over the batch. Per-sweep edge
+        # traffic and the residue pass are excluded (lower bound).
+        n = max(1, batch or 1)
+        whole_table = float(config.table_bytes) / n
+        return OpTraffic(KEY_BYTES, RESULT_BYTES, whole_table, whole_table)
     if op == "apply_ops":
         q, i, d = _mix(*(op_mix or (0.80, 0.15, 0.05)))
         return OpTraffic(KEY_BYTES, RESULT_BYTES, 2 * bucket_bytes,

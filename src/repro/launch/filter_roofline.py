@@ -21,6 +21,7 @@ numbers a benchmark can report honestly:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Dict
@@ -99,6 +100,12 @@ def cross_check(config, op: str, n: int = 1024, *,
         cost = lowered_cost(fn, state, keys)
     elif op == "bulk_insert":
         fn = functools.partial(CF.insert_bulk, config)
+        cost = lowered_cost(fn, state, keys)
+    elif op == "orient_bulk_insert":
+        # Lower the graph-orientation bulk engine explicitly (the auto
+        # route's bulk path, forced so the check is regime-stable).
+        ocfg = dataclasses.replace(config, insert_engine="orientation")
+        fn = functools.partial(CF.insert_bulk, ocfg)
         cost = lowered_cost(fn, state, keys)
     elif op == "delete":
         fn = functools.partial(CF.delete, config)

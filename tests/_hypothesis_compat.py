@@ -8,7 +8,7 @@ pyproject.toml) to get actual shrinking/coverage-guided search.
 
 Only the surface the test suite uses is implemented: ``given`` (kwargs
 form), ``settings(max_examples, deadline)``, and the ``integers`` /
-``sampled_from`` / ``lists`` / ``data`` strategies.
+``booleans`` / ``sampled_from`` / ``lists`` / ``data`` strategies.
 """
 
 from __future__ import annotations
@@ -57,6 +57,10 @@ class strategies:
     def integers(min_value=0, max_value=2**63 - 1):
         return Strategy(lambda rng: rng.randint(min_value, max_value),
                         f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
 
     @staticmethod
     def sampled_from(elements):

@@ -1,0 +1,246 @@
+"""High-load insertion engines vs the sequential oracle (DESIGN.md §14).
+
+The graph-orientation bulk build and the batched BFS frontier search are
+*routing* alternatives to the legacy eviction round loop — they may place
+keys differently, but they must be semantics-free: every accepted key
+queryable (zero false negatives), multiset duplicate semantics preserved,
+delete round-trips exact, and zero failed inserts everywhere the legacy
+oracle places everything, including the paper's ≥95%-load regime.
+
+Differentials run on hypothesis-drawn key streams over the layout
+dimensions that change the packed words under the engines — bucket size ×
+``fp_bits`` × occupancy — with the legacy round loop (the pre-engine
+committed path, kept reachable via ``insert_engine="legacy"`` exactly for
+this) and ``kernels/ref.py``'s sequential direct-insert as oracles.
+Example counts route through ``tests/_tuning.examples`` (CI caps them via
+``REPRO_MAX_EXAMPLES``).
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised in the bare container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from _tuning import examples
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CuckooConfig, CuckooFilter, keys_from_numpy
+from repro.core import cuckoo_filter as CF
+from repro.kernels import ref as R
+
+NUM_BUCKETS = 64
+
+# bucket_size x fp_bits x target occupancy. The 0.95+ cells are the
+# tentpole's contract: zero failed inserts and zero false negatives at
+# the paper's high-load regime, for every engine.
+CELLS = [
+    (4, 8, 0.50),
+    (4, 16, 0.95),
+    (8, 16, 0.75),
+    (8, 8, 0.95),
+    (16, 16, 0.95),
+    (16, 8, 0.97),
+]
+
+ENGINES = ("legacy", "frontier", "orientation")
+
+
+def _cfg(bucket_size, fp_bits, engine="auto", policy="xor", eviction="bfs"):
+    return CuckooConfig(
+        num_buckets=NUM_BUCKETS, fp_bits=fp_bits, bucket_size=bucket_size,
+        policy=policy, eviction=eviction, hash_kind="fmix32",
+        max_evictions=256, insert_engine=engine)
+
+
+def _keys(seed: int, n: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 2**64, size=4 * n, dtype=np.uint64)
+    return jnp.asarray(keys_from_numpy(np.unique(raw)[:n]))
+
+
+# Module-level jitted entry points: static config means jax caches one
+# compilation per (config, shape) across all hypothesis examples — a
+# fresh jax.jit per call would recompile the while-loop-heavy engines
+# on every example and blow the tier-1 time budget.
+_JIT_INSERT = jax.jit(CF.insert, static_argnums=0,
+                      static_argnames=("dedup_within_batch",))
+_JIT_BULK = jax.jit(CF.insert_bulk, static_argnums=0,
+                    static_argnames=("dedup_within_batch",))
+
+
+def _run(cfg, keys, bulk):
+    entry = _JIT_BULK if bulk else _JIT_INSERT
+    state, ok, stats = entry(cfg, cfg.init(), keys)
+    return state, np.asarray(ok), stats
+
+
+# ---------------------------------------------------------------------------
+# Differential: orientation + frontier vs the sequential oracles.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", CELLS,
+                         ids=lambda c: f"b{c[0]}f{c[1]}o{int(c[2] * 100)}")
+@settings(max_examples=examples(10), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_engines_match_oracle_across_cells(cell, seed):
+    """Orientation (bulk) and frontier (incremental) vs the legacy loop.
+
+    Wherever the oracle places the whole batch, the new engines must too
+    (zero failed inserts, ``stats.failed == 0``), every accepted key must
+    be queryable (zero false negatives), and the committed count must
+    equal the accepted count.
+    """
+    b, fb, occ = cell
+    n = int(NUM_BUCKETS * b * occ)
+    keys = _keys(seed, n)
+
+    _, ok_oracle, _ = _run(_cfg(b, fb, "legacy"), keys, bulk=False)
+
+    for engine, bulk in (("frontier", False), ("orientation", True)):
+        cfg = _cfg(b, fb, engine)
+        state, ok, stats = _run(cfg, keys, bulk)
+        assert int(state.count) == int(ok.sum())
+        assert int(np.asarray(stats.failed)) == int((~ok).sum())
+        # zero false negatives over everything the engine accepted
+        hit = np.asarray(CF.query(cfg, state, keys))
+        assert hit[ok].all(), f"{engine}: accepted key not queryable"
+        if ok_oracle.all():
+            assert ok.all(), (
+                f"{engine} failed {int((~ok).sum())}/{n} keys the legacy "
+                f"oracle placed (cell {cell})")
+
+
+@settings(max_examples=examples(10), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_direct_placements_agree_with_ref_oracle(seed):
+    """At direct-insert loads the engines and kernels/ref.py agree exactly:
+    everything the sequential no-eviction oracle places, every engine
+    places too, and the resulting filters answer queries identically."""
+    cfg = _cfg(8, 16)
+    n = NUM_BUCKETS * 8 // 4                     # 25% load: no evictions
+    keys = _keys(seed, n)
+    _, ok_ref = R.cuckoo_insert_ref(
+        cfg, cfg.init().table, keys[:, 0], keys[:, 1])
+    assert np.asarray(ok_ref).all()
+    probes = _keys(seed + 1, n)
+    answers = []
+    for engine, bulk in (("legacy", False), ("frontier", False),
+                         ("orientation", True)):
+        state, ok, _ = _run(_cfg(8, 16, engine), keys, bulk)
+        assert ok.all()
+        answers.append(np.asarray(CF.query(cfg, state, probes)))
+    for got in answers[1:]:
+        np.testing.assert_array_equal(got, answers[0])
+
+
+# ---------------------------------------------------------------------------
+# Routing is semantics-free.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=examples(10), deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dedup=st.booleans())
+def test_routing_is_semantics_free(seed, dedup):
+    """Same batch (duplicates + a valid mask) through every engine: the
+    per-key ok vector, the committed count, and the delete round-trip are
+    identical — the engine is an implementation detail, not a semantic."""
+    base = _keys(seed, 96)
+    dup = jnp.concatenate([base, base[:32]])     # 128 keys, 96 unique
+    rng = np.random.default_rng(seed)
+    valid = jnp.asarray(rng.random(128) < 0.8)
+
+    results = {}
+    for engine in ENGINES:
+        for bulk in (False, True):
+            cfg = _cfg(16, 16, engine)
+            entry = _JIT_BULK if bulk else _JIT_INSERT
+            state, ok, stats = entry(cfg, cfg.init(), dup, valid=valid,
+                                     dedup_within_batch=dedup)
+            ok = np.asarray(ok)
+            results[(engine, bulk)] = ok
+            if dedup:
+                # one stored copy per value: delete via the unique keys,
+                # marking each value that had any accepted copy
+                stored = ok[:96].copy()
+                stored[:32] |= ok[96:]
+                del_keys, del_valid = base, jnp.asarray(stored)
+                assert int(state.count) == int(stored.sum())
+            else:
+                # multiset: every accepted copy is its own deletion
+                del_keys, del_valid = dup, jnp.asarray(ok)
+                assert int(state.count) == int(ok.sum())
+            del_state, del_ok = CF.delete(cfg, state, del_keys,
+                                          valid=del_valid)
+            # invalid lanes report False by convention; every *requested*
+            # deletion must land
+            assert np.asarray(del_ok)[np.asarray(del_valid)].all()
+            assert int(del_state.count) == 0
+            assert not np.asarray(del_state.table).any()
+    ref = results[("legacy", False)]
+    for key, got in results.items():
+        np.testing.assert_array_equal(got, ref, err_msg=str(key))
+
+
+def test_resolve_engine_routing():
+    """auto → orientation for bulk; frontier iff eviction="bfs" else
+    legacy; explicit names force; unknown names raise."""
+    assert CF.resolve_engine(_cfg(8, 16, "auto"), bulk=True) == "orientation"
+    assert CF.resolve_engine(_cfg(8, 16, "auto"), bulk=False) == "frontier"
+    dfs = _cfg(8, 16, "auto", eviction="dfs")
+    assert CF.resolve_engine(dfs, bulk=False) == "legacy"
+    for engine in ENGINES:
+        assert CF.resolve_engine(_cfg(8, 16, engine), bulk=True) == engine
+        assert CF.resolve_engine(_cfg(8, 16, engine), bulk=False) == engine
+    with pytest.raises(ValueError, match="unknown insert_engine"):
+        CF.resolve_engine(_cfg(8, 16, "dfs"), bulk=False)
+
+
+# ---------------------------------------------------------------------------
+# The loud failure report (the silent max_rounds fix).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,bulk", [("legacy", False),
+                                         ("frontier", False),
+                                         ("orientation", True)],
+                         ids=["legacy", "frontier", "orientation"])
+def test_overload_reports_failed_count_and_load(engine, bulk):
+    """Driving any engine past capacity must surface a nonzero
+    ``stats.failed`` and the end-of-batch load factor — not silently
+    report unplaced keys as per-key False and nothing else."""
+    cfg = _cfg(4, 16, engine)
+    n = 2 * cfg.num_slots                        # 2x capacity: must fail
+    keys = _keys(5, n)
+    state, ok, stats = _run(cfg, keys, bulk)
+    assert not ok.all()
+    assert int(np.asarray(stats.failed)) == int((~ok).sum()) > 0
+    load = float(np.asarray(stats.load))
+    assert load == pytest.approx(int(state.count) / cfg.num_slots)
+    assert load > 0.9
+
+
+def test_wrapper_warns_on_unplaced_keys():
+    """The OO wrapper turns a nonzero failure report into a RuntimeWarning
+    naming the count and load factor (it cannot raise under jit)."""
+    cfg = _cfg(4, 16)
+    filt = CuckooFilter(cfg)
+    keys = _keys(7, 2 * cfg.num_slots)
+    with pytest.warns(RuntimeWarning, match=r"unplaced at load factor"):
+        filt.insert(keys)
+
+
+def test_no_warning_when_everything_lands():
+    cfg = _cfg(16, 16)
+    filt = CuckooFilter(cfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        ok, stats = filt.insert(_keys(9, cfg.num_slots // 2))
+    assert np.asarray(ok).all()
+    assert int(np.asarray(stats.failed)) == 0

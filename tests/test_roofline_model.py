@@ -61,6 +61,31 @@ def test_bulk_insert_amortizes_primary_bucket():
     assert small.per_key >= ins.per_key
 
 
+def test_orient_bulk_amortizes_whole_table():
+    # Graph-orientation bulk build: commit streams the whole table once,
+    # amortized over the batch — a big batch beats both the round-loop
+    # insert model and the bucket-major bulk model, a tiny one cannot.
+    big = RM.cuckoo_op_traffic(CFG, "orient_bulk_insert",
+                               batch=64 * CFG.num_slots)
+    bulk = RM.cuckoo_op_traffic(CFG, "bulk_insert",
+                                batch=64 * CFG.num_slots)
+    ins = RM.cuckoo_op_traffic(CFG, "insert")
+    assert big.per_key < bulk.per_key < ins.per_key
+    small = RM.cuckoo_op_traffic(CFG, "orient_bulk_insert", batch=1)
+    assert small.per_key >= ins.per_key
+    # The table is both read and written (unpack + repack commit).
+    assert big.table_read == big.table_write > 0.0
+
+
+def test_orient_bulk_is_cuckoo_only():
+    bloom = BloomConfig(num_blocks=1 << 8, words_per_block=16, k=8)
+    with pytest.raises(ValueError, match="unknown bloom op"):
+        RM.bloom_op_traffic(bloom, "orient_bulk_insert")
+    bcht = BCHTConfig(num_buckets=1 << 8, bucket_size=16)
+    with pytest.raises(ValueError, match="unknown bcht op"):
+        RM.bcht_op_traffic(bcht, "orient_bulk_insert")
+
+
 def test_apply_ops_blends_mix():
     q_only = RM.cuckoo_op_traffic(CFG, "apply_ops", op_mix=(1.0, 0.0, 0.0))
     assert q_only.table_write == 0.0
@@ -146,7 +171,8 @@ def test_model_floor_is_the_stream():
 XCFG = CuckooConfig(num_buckets=1 << 8, fp_bits=16)
 
 
-@pytest.mark.parametrize("op", ["query", "insert", "apply_ops"])
+@pytest.mark.parametrize("op", ["query", "insert", "apply_ops",
+                                "orient_bulk_insert"])
 def test_model_is_lower_bound_of_lowered_hlo(op):
     r = FR.cross_check(XCFG, op, n=512)
     assert r["model_bytes"] > 0
